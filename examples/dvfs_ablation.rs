@@ -1,0 +1,48 @@
+//! Ablation study: what each ingredient of J-DOB is worth.
+//!
+//! Sweeps beta and M, comparing full J-DOB against its published ablations
+//! (no edge DVFS; binary offloading) plus LC, and reports where each
+//! ingredient matters most — the quantitative version of the paper's
+//! "edge DVFS is a crucial optimization dimension" claim.
+//!
+//! Run: `cargo run --release --example dvfs_ablation`
+
+use jdob::algo::baselines::LocalComputing;
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::{GroupSolver, PlanningContext};
+use jdob::sim::experiments::compare_solvers;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = PlanningContext::default_analytic();
+    let full = JDob::full();
+    let no_edge = JDob::without_edge_dvfs();
+    let binary = JDob::binary_offloading();
+    let lc = LocalComputing;
+    let solvers: Vec<&dyn GroupSolver> = vec![&lc, &no_edge, &binary, &full];
+    let counts = [1usize, 2, 4, 8, 16, 30];
+
+    for beta in [0.5, 2.13, 8.0, 30.25] {
+        println!("=== beta = {beta} ===");
+        let rows = compare_solvers(&ctx, &solvers, &counts, beta);
+        print!("{:>4}", "M");
+        for (name, _) in &rows[0].series {
+            print!("{:>24}", name);
+        }
+        println!("{:>18}{:>18}", "eDVFS gain", "partial gain");
+        for row in &rows {
+            print!("{:>4}", row.x as usize);
+            for (_, e) in &row.series {
+                print!("{:>21.2} mJ", e * 1e3);
+            }
+            let get = |n: &str| row.series.iter().find(|(s, _)| s == n).unwrap().1;
+            let edvfs_gain = 1.0 - get("J-DOB") / get("J-DOB w/o edge DVFS");
+            let partial_gain = 1.0 - get("J-DOB") / get("J-DOB binary");
+            println!("{:>17.1}%{:>17.1}%", edvfs_gain * 100.0, partial_gain * 100.0);
+        }
+        println!();
+    }
+
+    println!("(eDVFS gain: energy saved by sweeping f_e instead of pinning f_e,max;");
+    println!(" partial gain: energy saved by intermediate partition points vs ñ ∈ {{0, N}}.)");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! END-TO-END driver (DESIGN.md §6): a fleet of simulated mobile devices
+//! submits real image-classification requests to the threaded coordinator,
+//! which groups them (OG), plans (J-DOB), and executes on the PJRT runtime:
+//! device-side prefixes at b=1, uplink per the channel model, edge tails
+//! batch-executed at the planned batch size.  Reports per-request latency,
+//! deadline hit-rate, modeled energy and throughput — recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example multiuser_serving`
+//! Options: --users M --rounds R --beta B --solver NAME
+
+use std::time::{Duration, Instant};
+
+use jdob::algo::types::{PlanningContext, User};
+use jdob::coordinator::metrics::LatencySummary;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::coordinator::server::{start, WindowPolicy};
+use jdob::energy::device::DeviceModel;
+use jdob::util::cli::Args;
+use jdob::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let m = args.get_usize("users", 8)?;
+    let rounds = args.get_usize("rounds", 3)?;
+    let beta = args.get_f64("beta", 30.25)?;
+    let solver: &'static str = match args.get_str("solver", "J-DOB") {
+        "LC" => "LC",
+        "IP-SSA" => "IP-SSA",
+        "J-DOB w/o edge DVFS" => "J-DOB w/o edge DVFS",
+        "J-DOB binary" => "J-DOB binary",
+        _ => "J-DOB",
+    };
+
+    let ctx = PlanningContext::default_analytic();
+    let artifacts = std::path::PathBuf::from(
+        args.get_str("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+    );
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let deadline = User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
+    let elems: usize = ctx.profile.input_shape.iter().product();
+    println!(
+        "serving {} users x {} rounds with {} (beta = {beta}, deadline = {:.0} ms)",
+        m, rounds, solver, deadline * 1e3
+    );
+
+    let policy = WindowPolicy {
+        max_batch: m,
+        max_wait: Duration::from_millis(100),
+    };
+    let (handle, join) = start(ctx.clone(), artifacts, solver, policy);
+
+    let mut wall = LatencySummary::default();
+    let mut modeled = LatencySummary::default();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    let mut offloaded = 0usize;
+    let t_run = Instant::now();
+
+    for round in 0..rounds {
+        // every device builds its own synthetic image
+        let mut rng = Rng::seed_from_u64(round as u64);
+        let rxs: Vec<_> = (0..m)
+            .map(|u| {
+                let input: Vec<f32> = (0..elems).map(|_| rng.gen_range(-0.5, 0.5) as f32).collect();
+                let t0 = Instant::now();
+                let rx = handle
+                    .submit_async(InferenceRequest {
+                        user_id: u,
+                        input,
+                        deadline_s: deadline,
+                    })
+                    .expect("submit");
+                (u, t0, rx)
+            })
+            .collect();
+        for (u, t0, rx) in rxs {
+            let resp = rx.recv().expect("reply").map_err(anyhow::Error::msg)?;
+            wall.record(t0.elapsed());
+            modeled.record_s(resp.modeled_latency_s);
+            total += 1;
+            hits += resp.deadline_met as usize;
+            offloaded += resp.offloaded as usize;
+            if round == 0 && u == 0 {
+                println!(
+                    "  first request: class {} | modeled {:.1} ms | wall {:.1} ms | ñ={} | {}",
+                    resp.argmax(),
+                    resp.modeled_latency_s * 1e3,
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    resp.partition,
+                    if resp.offloaded { "offloaded" } else { "local" }
+                );
+            }
+        }
+        println!("round {round} done ({} requests served)", (round + 1) * m);
+    }
+    drop(handle);
+    let ledger = join.join().expect("leader").expect("leader ok");
+    let span = t_run.elapsed().as_secs_f64();
+
+    println!("\n=== serving report ({} requests) ===", total);
+    println!(
+        "  deadline hit rate  : {:.1}% ({} of {})",
+        100.0 * hits as f64 / total as f64,
+        hits,
+        total
+    );
+    println!("  offloaded          : {offloaded} of {total}");
+    println!(
+        "  modeled latency    : p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        modeled.p50() * 1e3,
+        modeled.p95() * 1e3,
+        modeled.max() * 1e3
+    );
+    println!(
+        "  wall latency       : p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms (includes first-use HLO compiles)",
+        wall.p50() * 1e3,
+        wall.p95() * 1e3,
+        wall.max() * 1e3
+    );
+    println!(
+        "  energy             : device {:.2} mJ + tx {:.2} mJ + edge {:.2} mJ = {:.2} mJ/user",
+        ledger.device_compute_j * 1e3,
+        ledger.device_tx_j * 1e3,
+        ledger.edge_j * 1e3,
+        ledger.per_user_j() * 1e3
+    );
+    println!("  throughput         : {:.1} req/s over {:.2} s wall", total as f64 / span, span);
+    anyhow::ensure!(hits == total, "deadline misses in a feasible scenario");
+    Ok(())
+}

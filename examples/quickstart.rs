@@ -1,0 +1,77 @@
+//! Quickstart: plan a multiuser co-inference group with J-DOB and inspect
+//! the strategy. No artifacts needed — planning runs on the analytic
+//! Table-I edge model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use jdob::algo::baselines::roster;
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::{PlanningContext, User};
+use jdob::energy::device::DeviceModel;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build the planning context: Table-I config, MobileNetV2@96 profile,
+    //    RTX3090-shaped analytic edge model.
+    let ctx = PlanningContext::default_analytic();
+    println!(
+        "model: {} ({} sub-tasks, {:.1} MFLOPs total)",
+        ctx.profile.model,
+        ctx.n(),
+        ctx.profile.total_work() / 1e6
+    );
+
+    // 2. Eight users sharing the paper's beta = 2.13 deadline tightness.
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let deadline = User::deadline_from_beta(2.13, &dev, ctx.tables.total_work());
+    let users: Vec<User> = (0..8)
+        .map(|id| User {
+            id,
+            deadline,
+            dev: dev.clone(),
+        })
+        .collect();
+    println!("group: M = {}, deadline = {:.1} ms\n", users.len(), deadline * 1e3);
+
+    // 3. Solve with J-DOB (Algorithm 1 + 2).
+    let plan = JDob::full()
+        .solve(&ctx, &users, /* GPU free at */ 0.0)
+        .expect("paper-conforming groups are always feasible");
+
+    println!("J-DOB strategy:");
+    println!("  partition point ñ = {} (blocks 1..{} local, rest at edge)", plan.partition, plan.partition);
+    println!("  offloading set    = {:?} (batch size {})", plan.offload_ids(), plan.batch_size);
+    println!("  edge frequency    = {:.2} GHz", plan.f_edge / 1e9);
+    for up in &plan.users {
+        println!(
+            "    user {}: {} @ {:.2} GHz, energy {:.2} mJ, finishes at {:.1} ms",
+            up.id,
+            if up.offloaded { "offload" } else { "local  " },
+            up.f_dev / 1e9,
+            up.device_energy() * 1e3,
+            up.finish_time * 1e3
+        );
+    }
+    println!(
+        "  total energy {:.2} mJ ({:.2} mJ/user), edge {:.2} mJ, GPU busy until {:.1} ms\n",
+        plan.total_energy * 1e3,
+        plan.energy_per_user() * 1e3,
+        plan.edge_energy * 1e3,
+        plan.t_free_end * 1e3
+    );
+
+    // 4. Compare the full benchmark roster.
+    println!("benchmarks (same group):");
+    for solver in roster() {
+        match solver.solve(&ctx, &users, 0.0) {
+            Some(p) => println!(
+                "  {:<22} {:>8.2} mJ/user  (ñ={}, B_o={})",
+                solver.name(),
+                p.energy_per_user() * 1e3,
+                p.partition,
+                p.batch_size
+            ),
+            None => println!("  {:<22} infeasible", solver.name()),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,150 @@
+"""AOT compile path: lower every (block, batch-bucket) pair to HLO text.
+
+Python runs exactly once (`make artifacts`); afterwards the Rust coordinator
+is self-contained.  Interchange format is HLO *text*, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (what the published `xla` 0.1.6 crate links) rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are NOT baked into the HLO as constants (3.4M f32 constants in text
+form would be ~hundreds of MB across buckets).  Each lowered block takes
+(param_leaves..., activation) as runtime arguments; the leaves are dumped
+once per block as little-endian f32 into `block{n}_params.bin` and their
+order/shapes recorded in the manifest, which the Rust runtime replays.
+
+Outputs in --out-dir:
+    block{n}_b{b}.hlo.txt   n in 1..9, b in buckets
+    block{n}_params.bin
+    manifest.json           blocks, buckets, param shapes, io shapes
+    model_profile.json      A_n / O_n workload profile (see profile.py)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import profile as P
+
+DEFAULT_BUCKETS = [1, 2, 4, 8, 16, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(params, n: int, batch: int, resolution: int) -> str:
+    """Lower block n at the given batch size to HLO text."""
+    block_params = params[n - 1]
+    leaves, treedef = jax.tree_util.tree_flatten(block_params)
+    in_shape = M.activation_shapes(resolution)[n - 1]
+
+    def fn(*args):
+        ps, x = list(args[:-1]), args[-1]
+        bp = jax.tree_util.tree_unflatten(treedef, ps)
+        return (M.block_forward([None] * (n - 1) + [bp] + [None] * (M.N_BLOCKS - n), n, x),)
+
+    specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    specs.append(jax.ShapeDtypeStruct((batch,) + in_shape, jnp.float32))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def dump_params(params, n: int, out_dir: str) -> dict:
+    leaves, _ = jax.tree_util.tree_flatten(params[n - 1])
+    raw = b"".join(np.asarray(l, dtype="<f4").tobytes() for l in leaves)
+    path = os.path.join(out_dir, f"block{n}_params.bin")
+    with open(path, "wb") as f:
+        f.write(raw)
+    return {
+        "file": f"block{n}_params.bin",
+        "sha256": hashlib.sha256(raw).hexdigest(),
+        "shapes": [list(l.shape) for l in leaves],
+        "dtypes": [str(l.dtype) for l in leaves],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--res", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--num-classes", type=int, default=1000)
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--blocks", default="", help="comma list; default all")
+    args = ap.parse_args()
+
+    buckets: List[int] = [int(b) for b in args.buckets.split(",") if b]
+    block_ids = (
+        [int(b) for b in args.blocks.split(",") if b]
+        if args.blocks
+        else list(range(1, M.N_BLOCKS + 1))
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = M.init_params(jax.random.PRNGKey(args.seed), args.num_classes)
+    shapes = M.activation_shapes(args.res)
+
+    manifest = {
+        "model": "mobilenetv2",
+        "resolution": args.res,
+        "num_classes": args.num_classes,
+        "seed": args.seed,
+        "n_blocks": M.N_BLOCKS,
+        "buckets": buckets,
+        "blocks": {},
+    }
+    for n in block_ids:
+        pinfo = dump_params(params, n, args.out_dir)
+        entries = {}
+        for b in buckets:
+            text = lower_block(params, n, b, args.res)
+            fname = f"block{n}_b{b}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entries[str(b)] = fname
+            print(f"block {n} batch {b}: {len(text)} chars -> {fname}", flush=True)
+        manifest["blocks"][str(n)] = {
+            "params": pinfo,
+            "hlo": entries,
+            "in_shape": list(shapes[n - 1]),
+            "out_shape": list(shapes[n]),
+        }
+
+    # Golden vector: deterministic input -> reference logits, so the rust
+    # runtime can verify numerics end-to-end without python present.
+    if set(block_ids) == set(range(1, M.N_BLOCKS + 1)):
+        gkey = jax.random.PRNGKey(1234)
+        gx = jax.random.uniform(gkey, (2, args.res, args.res, 3), jnp.float32, -0.5, 0.5)
+        glogits = M.model_forward(params, gx, use_pallas=False)
+        with open(os.path.join(args.out_dir, "golden_input.bin"), "wb") as f:
+            f.write(np.asarray(gx, dtype="<f4").tobytes())
+        with open(os.path.join(args.out_dir, "golden_logits.bin"), "wb") as f:
+            f.write(np.asarray(glogits, dtype="<f4").tobytes())
+        manifest["golden"] = {
+            "input": "golden_input.bin",
+            "logits": "golden_logits.bin",
+            "batch": 2,
+        }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out_dir, "model_profile.json"), "w") as f:
+        json.dump(P.build_profile(args.res, args.num_classes), f, indent=1)
+    print(f"wrote manifest + profile to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

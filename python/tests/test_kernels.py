@@ -1,0 +1,139 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / strides / activations; assert_allclose against
+kernels/ref.py is the core correctness signal for the AOT path (interpret
+mode lowers to the same HLO the Rust runtime executes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import depthwise as k_dw
+from compile.kernels import matmul as k_mm
+from compile.kernels import pool as k_pool
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------- matmul
+@pytest.mark.parametrize("act", ["none", "relu6"])
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (7, 5, 3),
+        (128, 128, 128),
+        (129, 127, 130),  # tile-boundary straddle
+        (9, 960, 160),  # stage7 pointwise at b=1 (tiny M, real K/N)
+        (288, 320, 1280),  # head pw at b=32
+    ],
+)
+def test_matmul_shapes(m, k, n, act):
+    x, w, b = _rand(0, (m, k)), _rand(1, (k, n)), _rand(2, (n,))
+    got = k_mm.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["none", "relu6"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, act, seed):
+    kx, kw_, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw_, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    got = k_mm.matmul_bias_act(x, w, b, act)
+    want = ref.matmul_bias_act(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_zero_input():
+    x = jnp.zeros((4, 8))
+    w = _rand(0, (8, 3))
+    b = jnp.full((3,), 7.0)
+    got = k_mm.matmul_bias_act(x, w, b, "relu6")
+    np.testing.assert_allclose(got, jnp.full((4, 3), 6.0), rtol=RTOL)  # relu6 clips 7 -> 6
+
+
+def test_matmul_relu6_clips_both_sides():
+    x = jnp.array([[1.0]])
+    w = jnp.array([[1.0]])
+    for bias, expect in [(-5.0, 0.0), (10.0, 6.0), (2.5, 3.5)]:
+        got = k_mm.matmul_bias_act(x, w, jnp.array([bias]), "relu6")
+        np.testing.assert_allclose(got, [[expect]], rtol=RTOL)
+
+
+def test_pointwise_conv_matches_ref():
+    x = _rand(3, (2, 6, 6, 16))
+    w, b = _rand(4, (16, 24)), _rand(5, (24,))
+    got = k_mm.pointwise_conv(x, w, b, "relu6")
+    want = ref.pointwise_conv(x, w, b, "relu6")
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# ------------------------------------------------------------------- depthwise
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("hw,c", [(3, 4), (12, 32), (13, 8), (48, 16)])
+def test_depthwise_shapes(hw, c, stride):
+    x = _rand(0, (2, hw, hw, c))
+    w, b = _rand(1, (3, 3, c)), _rand(2, (c,))
+    got = k_dw.depthwise_conv3x3(x, w, b, stride=stride)
+    want = ref.depthwise_conv3x3(x, w, b, stride=stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    hw=st.integers(2, 24),
+    c=st.integers(1, 48),
+    batch=st.integers(1, 4),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from(["none", "relu6"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_hypothesis(hw, c, batch, stride, act, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (batch, hw, hw, c), jnp.float32)
+    w = jax.random.normal(ks[1], (3, 3, c), jnp.float32)
+    b = jax.random.normal(ks[2], (c,), jnp.float32)
+    got = k_dw.depthwise_conv3x3(x, w, b, stride=stride, act=act)
+    want = ref.depthwise_conv3x3(x, w, b, stride=stride, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_depthwise_identity_kernel():
+    """Center-tap-1 kernel with zero bias is identity at stride 1 (pre-act)."""
+    c = 5
+    w = jnp.zeros((3, 3, c)).at[1, 1].set(1.0)
+    x = jnp.abs(_rand(0, (1, 8, 8, c)))  # positive, <6 not guaranteed; use act none
+    got = k_dw.depthwise_conv3x3(x, w, jnp.zeros((c,)), stride=1, act="none")
+    np.testing.assert_allclose(got, x, rtol=RTOL, atol=ATOL)
+
+
+# ------------------------------------------------------------------------ pool
+@pytest.mark.parametrize("shape", [(1, 1, 1, 1), (2, 3, 3, 320), (4, 7, 7, 64)])
+def test_global_avg_pool(shape):
+    x = _rand(0, shape)
+    np.testing.assert_allclose(
+        k_pool.global_avg_pool(x), ref.global_avg_pool(x), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_global_avg_pool_constant():
+    x = jnp.full((2, 4, 4, 3), 2.5)
+    np.testing.assert_allclose(k_pool.global_avg_pool(x), jnp.full((2, 3), 2.5), rtol=RTOL)

@@ -1,0 +1,115 @@
+"""L2 model correctness: block/full-model pallas-vs-ref, shapes, profile."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import profile as P
+
+RES = 96
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return jax.random.normal(jax.random.PRNGKey(7), (2, RES, RES, 3), jnp.float32)
+
+
+def test_activation_shapes_match_forward(params, x0):
+    shapes = M.activation_shapes(RES)
+    y = x0
+    for n in range(1, M.N_BLOCKS + 1):
+        y = M.block_forward(params, n, y, use_pallas=False)
+        assert y.shape[1:] == shapes[n], f"block {n}"
+
+
+@pytest.mark.parametrize("n", range(1, M.N_BLOCKS + 1))
+def test_block_pallas_vs_ref(params, n):
+    shape = (2,) + M.activation_shapes(RES)[n - 1]
+    x = jax.random.normal(jax.random.PRNGKey(n), shape, jnp.float32)
+    got = M.block_forward(params, n, x, use_pallas=True)
+    want = M.block_forward(params, n, x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_full_model_pallas_vs_ref(params, x0):
+    got = M.model_forward(params, x0, use_pallas=True)
+    want = M.model_forward(params, x0, use_pallas=False)
+    assert got.shape == (2, 1000)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_tail_forward_equals_suffix(params, x0):
+    """tail_forward(·, ñ) == running blocks ñ+1..N — the co-inference split."""
+    for n_from in [0, 3, 8, M.N_BLOCKS]:
+        y = x0
+        for n in range(1, n_from + 1):
+            y = M.block_forward(params, n, y, use_pallas=False)
+        tail = M.tail_forward(params, y, n_from, use_pallas=False)
+        full = M.model_forward(params, x0, use_pallas=False)
+        if n_from == M.N_BLOCKS:
+            np.testing.assert_allclose(tail, y, rtol=1e-5)
+        else:
+            np.testing.assert_allclose(tail, full, rtol=1e-4, atol=1e-4)
+
+
+def test_split_invariance_across_partition_points(params):
+    """Offloading must not change the numerics, for every partition point."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, RES, RES, 3), jnp.float32)
+    full = M.model_forward(params, x, use_pallas=False)
+    for nb in range(0, M.N_BLOCKS):
+        y = x
+        for n in range(1, nb + 1):
+            y = M.block_forward(params, n, y, use_pallas=False)
+        out = M.tail_forward(params, y, nb, use_pallas=False)
+        np.testing.assert_allclose(out, full, rtol=1e-4, atol=1e-4)
+
+
+def test_batch_consistency(params):
+    """Batched forward == per-sample forwards (batching is lossless)."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, RES, RES, 3), jnp.float32)
+    batched = M.model_forward(params, x, use_pallas=False)
+    singles = jnp.concatenate(
+        [M.model_forward(params, x[i : i + 1], use_pallas=False) for i in range(4)]
+    )
+    np.testing.assert_allclose(batched, singles, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- profile
+def test_profile_structure():
+    prof = P.build_profile(RES)
+    assert prof["n_blocks"] == M.N_BLOCKS
+    assert len(prof["blocks"]) == M.N_BLOCKS
+    assert prof["blocks"][0]["name"] == "stem"
+    assert prof["blocks"][-1]["name"] == "head"
+    for b in prof["blocks"]:
+        assert b["flops"] > 0
+        assert b["out_bits"] > 0
+
+
+def test_profile_out_bits_match_shapes():
+    prof = P.build_profile(RES)
+    shapes = M.activation_shapes(RES)
+    for b in prof["blocks"]:
+        elems = int(np.prod(shapes[b["n"]]))
+        assert b["out_bits"] == elems * 32
+
+
+def test_profile_total_flops_plausible():
+    """MobileNetV2 @96px is ~60-90 MFLOPs (2x MACs); guard the magnitude."""
+    total = sum(b["flops"] for b in P.build_profile(RES)["blocks"])
+    assert 3e7 < total < 3e8, total
+
+
+def test_profile_monotone_output_shrink():
+    """Activations shrink along the net (what makes late partitioning cheap to ship)."""
+    prof = P.build_profile(RES)
+    bits = [prof["input_bits"]] + [b["out_bits"] for b in prof["blocks"]]
+    # not strictly monotone (stem expands channels), but logits << input
+    assert bits[-1] < bits[0] / 8

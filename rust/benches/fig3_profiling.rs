@@ -1,0 +1,52 @@
+//! Fig. 3 regeneration bench: edge latency/energy vs batch size on both
+//! the analytic (RTX3090-shaped) and the measured (PJRT CPU) backends.
+//! Run: `cargo bench --bench fig3_profiling`
+
+use std::path::PathBuf;
+
+use jdob::bench::figures::{fig3_report, fig3_series};
+use jdob::config::SystemConfig;
+use jdob::energy::edge::AnalyticEdge;
+use jdob::model::ModelProfile;
+use jdob::runtime::profiler::profile_edge;
+use jdob::runtime::ModelRuntime;
+use jdob::util::benchkit::header;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let profile = ModelProfile::default_eval();
+    let buckets = cfg.buckets.clone();
+
+    header("Fig. 3 — analytic backend (paper-calibrated RTX3090 shape)");
+    let edge = AnalyticEdge::from_config(&cfg, &profile);
+    print!("{}", fig3_report(&edge, &buckets, None).unwrap());
+
+    // shape assertions (the reproduction target)
+    let series = fig3_series(&edge, &buckets);
+    assert!(series.windows(2).all(|w| w[1].1 > w[0].1), "latency grows with b");
+    assert!(
+        series
+            .windows(2)
+            .all(|w| w[1].1 / w[1].0 as f64 <= w[0].1 / w[0].0 as f64 + 1e-15),
+        "per-sample latency shrinks with b"
+    );
+    println!("shape check: PASS (total grows, per-sample amortizes)\n");
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("measured backend skipped: run `make artifacts` first");
+        return;
+    }
+    header("Fig. 3 — measured backend (PJRT CPU, the actual serving substrate)");
+    let rt = ModelRuntime::new(&dir).expect("runtime");
+    let prof = profile_edge(&rt, 5).expect("profiling");
+    for (b, l) in prof.full_model_latency() {
+        println!(
+            "  batch {b:>2}: full model {:>8.2} ms   ({:>6.3} ms/sample)",
+            l * 1e3,
+            l * 1e3 / b as f64
+        );
+    }
+    let measured = prof.into_measured_edge(&cfg, &profile).expect("edge model");
+    print!("{}", fig3_report(&measured, &buckets, None).unwrap());
+}

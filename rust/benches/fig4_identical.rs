@@ -1,0 +1,22 @@
+//! Fig. 4 regeneration: avg energy/user vs M under identical deadlines for
+//! the full algorithm roster, at the paper's beta = 2.13 and 30.25, plus
+//! the wall time of regenerating each figure.
+//! Run: `cargo bench --bench fig4_identical`
+
+use std::time::Instant;
+
+use jdob::algo::types::PlanningContext;
+use jdob::bench::figures::fig4_report;
+use jdob::util::benchkit::header;
+
+fn main() {
+    let ctx = PlanningContext::default_analytic();
+    let counts: Vec<usize> = vec![1, 2, 4, 6, 8, 10, 14, 18, 22, 26, 30];
+    for beta in [2.13, 30.25] {
+        header(&format!("Fig. 4 (beta = {beta})"));
+        let t0 = Instant::now();
+        let report = fig4_report(&ctx, beta, &counts, None).expect("fig4");
+        print!("{report}");
+        println!("regenerated in {:?}\n", t0.elapsed());
+    }
+}

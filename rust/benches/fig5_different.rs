@@ -1,0 +1,26 @@
+//! Fig. 5 regeneration: avg energy/user vs beta range width, different
+//! deadlines, OG outer grouping, at the paper's M = 10 and M = 20.
+//! The full paper setting is 50 Monte-Carlo trials; the bench uses
+//! FIG5_TRIALS (env) or 10 to keep wall time sane.
+//! Run: `cargo bench --bench fig5_different`
+
+use std::time::Instant;
+
+use jdob::algo::types::PlanningContext;
+use jdob::bench::figures::fig5_report;
+use jdob::util::benchkit::header;
+
+fn main() {
+    let trials: usize = std::env::var("FIG5_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let ctx = PlanningContext::default_analytic();
+    for m in [10usize, 20] {
+        header(&format!("Fig. 5 (M = {m}, {trials} trials)"));
+        let t0 = Instant::now();
+        let report = fig5_report(&ctx, m, trials, None).expect("fig5");
+        print!("{report}");
+        println!("regenerated in {:?}\n", t0.elapsed());
+    }
+}

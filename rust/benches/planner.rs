@@ -1,0 +1,86 @@
+//! Planner micro-benchmarks: J-DOB solve latency vs M (the O(k·N·M log M)
+//! claim), OG grouping cost, and baseline comparisons.
+//! Run: `cargo bench --bench planner`
+
+use std::time::Duration;
+
+use jdob::algo::baselines::{IpSsa, LocalComputing};
+use jdob::algo::grouping::optimal_grouping;
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::PlanningContext;
+use jdob::sim::scenario::{identical_deadline_users, uniform_beta_users};
+use jdob::util::benchkit::{bench, black_box, header};
+use jdob::util::rng::Rng;
+
+fn main() {
+    let ctx = PlanningContext::default_analytic();
+    let budget = Duration::from_millis(700);
+
+    header("J-DOB solve latency vs M (identical deadlines, beta = 2.13)");
+    let mut per_m = Vec::new();
+    for m in [1usize, 2, 5, 10, 20, 30, 50, 100] {
+        let users = identical_deadline_users(&ctx, m, 2.13);
+        let r = bench(&format!("jdob_solve_m{m}"), 3, budget, 20_000, || {
+            black_box(JDob::full().solve(&ctx, &users, 0.0));
+        });
+        println!("{}   ({:.0} plans/s)", r.report(), r.per_sec());
+        per_m.push((m, r.mean.as_secs_f64()));
+    }
+    // complexity sanity: 10x users should cost ~13x, not 100x
+    let t10 = per_m.iter().find(|(m, _)| *m == 10).unwrap().1;
+    let t100 = per_m.iter().find(|(m, _)| *m == 100).unwrap().1;
+    println!(
+        "scaling M=10 -> M=100: {:.1}x time (O(k N M log M) predicts ~13x)",
+        t100 / t10
+    );
+
+    header("fast path vs reference (the §Perf before/after) at M = 20");
+    let users = identical_deadline_users(&ctx, 20, 2.13);
+    let r_ref = bench("jdob_reference_m20", 3, budget, 20_000, || {
+        black_box(JDob::reference().solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r_ref.report());
+    let r_fast = bench("jdob_fastpath_m20", 3, budget, 20_000, || {
+        black_box(JDob::full().solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r_fast.report());
+    println!(
+        "speedup: {:.2}x (reference {:.1}us -> fast {:.1}us)",
+        r_ref.mean.as_secs_f64() / r_fast.mean.as_secs_f64(),
+        r_ref.mean.as_secs_f64() * 1e6,
+        r_fast.mean.as_secs_f64() * 1e6
+    );
+
+    header("baselines at M = 20");
+    let users = identical_deadline_users(&ctx, 20, 2.13);
+    let r = bench("lc", 3, budget, 50_000, || {
+        black_box(LocalComputing::solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r.report());
+    let r = bench("ipssa", 3, budget, 50_000, || {
+        black_box(IpSsa::solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r.report());
+    let r = bench("jdob_binary", 3, budget, 50_000, || {
+        black_box(JDob::binary_offloading().solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r.report());
+    let r = bench("jdob_no_edge_dvfs", 3, budget, 50_000, || {
+        black_box(JDob::without_edge_dvfs().solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r.report());
+    let r = bench("jdob_full", 3, budget, 50_000, || {
+        black_box(JDob::full().solve(&ctx, &users, 0.0));
+    });
+    println!("{}", r.report());
+
+    header("OG grouping (different deadlines, beta ~ U[0,10])");
+    for m in [5usize, 10, 20] {
+        let mut rng = Rng::seed_from_u64(1);
+        let users = uniform_beta_users(&ctx, m, (0.0, 10.0), &mut rng);
+        let r = bench(&format!("og_jdob_m{m}"), 1, budget, 5_000, || {
+            black_box(optimal_grouping(&ctx, &users, &JDob::full(), 0.0));
+        });
+        println!("{}", r.report());
+    }
+}

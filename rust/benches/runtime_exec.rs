@@ -1,0 +1,58 @@
+//! Runtime hot-path benchmarks: per-block and full-model PJRT execution
+//! latency across batch buckets — the L3 executor's share of end-to-end
+//! latency, and the source of the measured d_n(b) tables.
+//! Run: `cargo bench --bench runtime_exec` (requires `make artifacts`)
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use jdob::runtime::ModelRuntime;
+use jdob::util::benchkit::{bench, black_box, header};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = ModelRuntime::new(&dir).expect("runtime");
+    let man = rt.manifest();
+    let budget = Duration::from_millis(900);
+
+    header("full-model forward vs batch (per-sample amortization)");
+    let in_elems: usize = man.block(1).in_shape.iter().product();
+    for b in [1usize, 2, 4, 8] {
+        let input = vec![0.1f32; b * in_elems];
+        rt.run_full(&input, b).expect("warm compile");
+        let r = bench(&format!("run_full_b{b}"), 1, budget, 200, || {
+            black_box(rt.run_full(&input, b).unwrap());
+        });
+        println!(
+            "{}   ({:.2} ms/sample)",
+            r.report(),
+            r.mean.as_secs_f64() * 1e3 / b as f64
+        );
+    }
+
+    header("per-block latency at b = 1 (device-side prefix cost)");
+    for n in 1..=man.n_blocks {
+        let elems: usize = man.block(n).in_shape.iter().product();
+        let input = vec![0.1f32; elems];
+        rt.run_block(n, &input, 1).expect("warm");
+        let r = bench(&format!("block{n}_b1"), 1, budget / 3, 200, || {
+            black_box(rt.run_block(n, &input, 1).unwrap());
+        });
+        println!("{}", r.report());
+    }
+
+    header("edge tail at cut ñ = 4 vs batch (the offloaded path)");
+    let elems: usize = man.block(5).in_shape.iter().product();
+    for b in [1usize, 4, 8] {
+        let input = vec![0.1f32; b * elems];
+        rt.run_tail(4, &input, b).expect("warm");
+        let r = bench(&format!("tail4_b{b}"), 1, budget / 2, 200, || {
+            black_box(rt.run_tail(4, &input, b).unwrap());
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,79 @@
+//! Baseline (i): Local Computing — every user runs the whole task on its
+//! own CPU at the lowest deadline-feasible frequency (device DVFS stays on,
+//! as in the paper's benchmarks).
+
+use crate::algo::closed_form::solve_fixed;
+use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LocalComputing;
+
+impl LocalComputing {
+    pub fn solve(ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        if users.is_empty() {
+            return None;
+        }
+        solve_fixed(
+            ctx,
+            users,
+            &vec![false; users.len()],
+            ctx.n(),
+            f64::NAN,
+            t_free,
+            "LC",
+        )
+    }
+}
+
+impl GroupSolver for LocalComputing {
+    fn name(&self) -> &'static str {
+        "LC"
+    }
+
+    fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        LocalComputing::solve(ctx, users, t_free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::validate::validate_plan;
+    use crate::energy::device::DeviceModel;
+
+    #[test]
+    fn lc_energy_scales_with_deadline_slack() {
+        let ctx = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&ctx.cfg);
+        let total = ctx.tables.total_work();
+        let mk = |beta: f64| {
+            vec![User {
+                id: 0,
+                deadline: User::deadline_from_beta(beta, &dev, total),
+                dev: dev.clone(),
+            }]
+        };
+        let tight = LocalComputing::solve(&ctx, &mk(0.0), 0.0).unwrap();
+        let loose = LocalComputing::solve(&ctx, &mk(30.0), 0.0).unwrap();
+        // tight: f = f_max; loose: f = f_min -> energy ratio (f_max/f_min)^2
+        let ratio = tight.total_energy / loose.total_energy;
+        let expect = (dev.f_max / dev.f_min).powi(2);
+        assert!((ratio - expect).abs() / expect < 1e-9, "{ratio} vs {expect}");
+        validate_plan(&ctx, &mk(0.0), &tight, 0.0).unwrap();
+    }
+
+    #[test]
+    fn lc_ignores_gpu_state() {
+        let ctx = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&ctx.cfg);
+        let users = vec![User {
+            id: 0,
+            deadline: 1.0,
+            dev,
+        }];
+        let p = LocalComputing::solve(&ctx, &users, 123.0).unwrap();
+        assert_eq!(p.t_free_end, 123.0); // untouched
+        assert_eq!(p.batch_size, 0);
+        assert_eq!(p.edge_energy, 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Benchmark algorithms the paper compares J-DOB against (§IV):
+//! (i) local computing, (ii) IP-SSA [10], (iii) J-DOB w/o edge DVFS and
+//! (iv) J-DOB binary — the latter two are switches on
+//! [`crate::algo::jdob::JDob`]; the first two live here.
+
+pub mod ipssa;
+pub mod lc;
+
+pub use ipssa::IpSsa;
+pub use lc::LocalComputing;
+
+use crate::algo::jdob::JDob;
+use crate::algo::types::GroupSolver;
+
+/// The full benchmark roster of the paper's figures, in plot order.
+pub fn roster() -> Vec<Box<dyn GroupSolver>> {
+    vec![
+        Box::new(LocalComputing),
+        Box::new(IpSsa::default()),
+        Box::new(JDob::without_edge_dvfs()),
+        Box::new(JDob::binary_offloading()),
+        Box::new(JDob::full()),
+    ]
+}

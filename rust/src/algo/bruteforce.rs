@@ -1,0 +1,145 @@
+//! Exhaustive optimum for small groups: enumerate every offloading subset
+//! M'_o ⊆ M', every identical partition point ñ and the full edge-frequency
+//! grid, solving device DVFS in closed form for each combination.
+//!
+//! Exponential in |M'| (2^M subsets) — usable for M ≤ ~12.  This is the
+//! ground truth that certifies J-DOB's near-optimality in the integration
+//! tests (the paper claims near-optimal identical offloading under greedy
+//! batching; brute force searches the *same* strategy space exhaustively).
+
+use crate::algo::closed_form::solve_fixed;
+use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
+use crate::util::TIME_EPS;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BruteForce;
+
+impl BruteForce {
+    pub fn solve(ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        let m = users.len();
+        assert!(m <= 16, "brute force is exponential; M={m} too large");
+        if m == 0 {
+            return None;
+        }
+        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        if min_deadline < t_free - TIME_EPS {
+            return None;
+        }
+        let n = ctx.n();
+        let f_max = ctx.edge.f_max();
+        let f_min = ctx.edge.f_min();
+        let rho = ctx.cfg.rho_hz;
+
+        let mut best: Option<Plan> = None;
+        let consider = |cand: Option<Plan>, best: &mut Option<Plan>| {
+            if let Some(p) = cand {
+                if best.as_ref().map_or(true, |b| p.total_energy < b.total_energy) {
+                    *best = Some(p);
+                }
+            }
+        };
+
+        // all-local candidate
+        consider(
+            solve_fixed(ctx, users, &vec![false; m], n, f64::NAN, t_free, "BF"),
+            &mut best,
+        );
+
+        let mut offload = vec![false; m];
+        for mask in 1u32..(1 << m) {
+            for (i, o) in offload.iter_mut().enumerate() {
+                *o = mask & (1 << i) != 0;
+            }
+            for n_tilde in 0..n {
+                let mut f_e = f_max;
+                while f_e >= f_min - TIME_EPS {
+                    consider(
+                        solve_fixed(ctx, users, &offload, n_tilde, f_e, t_free, "BF"),
+                        &mut best,
+                    );
+                    f_e -= rho;
+                }
+            }
+        }
+        best
+    }
+}
+
+impl GroupSolver for BruteForce {
+    fn name(&self) -> &'static str {
+        "BruteForce"
+    }
+
+    fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        BruteForce::solve(ctx, users, t_free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::jdob::JDob;
+    use crate::algo::validate::validate_plan;
+    use crate::energy::device::DeviceModel;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+        betas
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let dev = DeviceModel::from_config(&ctx.cfg);
+                let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+                User { id: i, deadline: t, dev }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn jdob_matches_bruteforce_identical_deadlines() {
+        let c = ctx();
+        for m in [1usize, 2, 3, 4] {
+            for beta in [0.5, 2.13, 10.0] {
+                let users = users_beta(&vec![beta; m], &c);
+                let bf = BruteForce::solve(&c, &users, 0.0).unwrap();
+                let jd = JDob::full().solve(&c, &users, 0.0).unwrap();
+                validate_plan(&c, &users, &bf, 0.0).unwrap();
+                // identical deadlines: the greedy peeling is exact
+                let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+                assert!(
+                    gap <= 1e-6,
+                    "M={m} beta={beta}: jdob {:.6e} vs bf {:.6e} (gap {gap:.3e})",
+                    jd.total_energy,
+                    bf.total_energy
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jdob_near_optimal_mixed_deadlines() {
+        let c = ctx();
+        let betas = [[1.0, 3.0, 6.0], [0.5, 5.0, 15.0], [2.0, 2.5, 3.0]];
+        for bs in betas {
+            let users = users_beta(&bs, &c);
+            let bf = BruteForce::solve(&c, &users, 0.0).unwrap();
+            let jd = JDob::full().solve(&c, &users, 0.0).unwrap();
+            let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+            // J-DOB is near-optimal; allow a small greedy-batching gap
+            assert!(gap <= 0.05, "betas {bs:?}: gap {gap:.4}");
+        }
+    }
+
+    #[test]
+    fn bruteforce_respects_tfree() {
+        let c = ctx();
+        let users = users_beta(&[4.0, 4.0], &c);
+        let t_busy = users[0].deadline * 0.95;
+        if let Some(plan) = BruteForce::solve(&c, &users, t_busy) {
+            validate_plan(&c, &users, &plan, t_busy).unwrap();
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Closed forms of the paper: Eq. (16)-(22).
+//!
+//! Once (ñ, M'_o, f_e) are fixed, problem (P1) decouples per user and the
+//! optimal device frequencies follow in closed form: run as slowly as the
+//! deadline allows (energy is increasing in f), clamped to the DVFS range.
+
+use crate::algo::types::{Plan, PlanningContext, User, UserPlan};
+use crate::util::{clamp, le_eps, TIME_EPS};
+
+/// gamma_m^(ñ) (Eq. 17): the minimum latency cost of user m at partition ñ —
+/// fastest local prefix plus upload.  Higher gamma = tighter batching budget.
+#[inline]
+pub fn gamma(ctx: &PlanningContext, user: &User, n_tilde: usize) -> f64 {
+    let v = ctx.tables.prefix_work(n_tilde);
+    ctx.tables.o(n_tilde) / user.dev.rate_bps + user.dev.zeta * user.dev.g * v / user.dev.f_max
+}
+
+/// Γ_m for an offloading user (Eq. 19 top): the exact frequency at which the
+/// prefix + upload finishes just in time for the shared edge tail to meet
+/// l_o.  Returns None if the latency budget is already non-positive.
+#[inline]
+pub fn gamma_cap_offload(
+    ctx: &PlanningContext,
+    user: &User,
+    n_tilde: usize,
+    l_o: f64,
+    phi_over_fe: f64,
+) -> Option<f64> {
+    let budget = l_o - ctx.tables.o(n_tilde) / user.dev.rate_bps - phi_over_fe;
+    let v = ctx.tables.prefix_work(n_tilde);
+    if v == 0.0 {
+        // no local work: any frequency "meets" it as long as budget >= 0
+        return if budget >= -TIME_EPS { Some(0.0) } else { None };
+    }
+    if budget <= 0.0 {
+        return None;
+    }
+    Some(user.dev.zeta * user.dev.g * v / budget)
+}
+
+/// Γ_m for a local user (Eq. 19 bottom).
+#[inline]
+pub fn gamma_cap_local(ctx: &PlanningContext, user: &User) -> f64 {
+    let v = ctx.tables.total_work();
+    user.dev.zeta * user.dev.g * v / user.deadline
+}
+
+/// The decoupled per-user optimum (Eq. 20-22) for a fixed (ñ, M'_o, f_e).
+///
+/// `offload[i]` marks whether `users[i]` is in M'_o.  Returns the full plan
+/// (energies, frequencies, finish times, t_free*) or None if any user is
+/// infeasible — i.e. the required frequency exceeds f_max beyond roundoff.
+pub fn solve_fixed(
+    ctx: &PlanningContext,
+    users: &[User],
+    offload: &[bool],
+    n_tilde: usize,
+    f_e: f64,
+    t_free: f64,
+    algo: &str,
+) -> Option<Plan> {
+    debug_assert_eq!(users.len(), offload.len());
+    let b_o = offload.iter().filter(|&&o| o).count();
+
+
+    // l_o: tightest deadline in the offloading set (Eq. 10).
+    let l_o = users
+        .iter()
+        .zip(offload)
+        .filter(|(_, &o)| o)
+        .map(|(u, _)| u.deadline)
+        .fold(f64::INFINITY, f64::min);
+
+    let (phi, psi) = if b_o > 0 {
+        (ctx.edge.phi(n_tilde, b_o), ctx.edge.psi(n_tilde, b_o))
+    } else {
+        (0.0, 0.0)
+    };
+    let phi_over_fe = if b_o > 0 { phi / f_e } else { 0.0 };
+
+    // Eq. (6): GPU occupation — the batch must fit between t_free and l_o.
+    if b_o > 0 && !le_eps(t_free + phi_over_fe, l_o) {
+        return None;
+    }
+
+    let mut user_plans = Vec::with_capacity(users.len());
+    let mut total = 0.0;
+    let mut max_arrival: f64 = 0.0;
+
+    for (user, &off) in users.iter().zip(offload) {
+        if off {
+            let cap = gamma_cap_offload(ctx, user, n_tilde, l_o, phi_over_fe)?;
+            if cap > user.dev.f_max * (1.0 + 1e-12) {
+                return None; // cannot arrive in time even at f_max
+            }
+            let f_m = clamp(cap.max(user.dev.f_min), user.dev.f_min, user.dev.f_max);
+            let v = ctx.tables.prefix_work(n_tilde);
+            let o_bits = ctx.tables.o(n_tilde);
+            let arrival = user.dev.compute_latency(v, f_m) + user.dev.tx_latency(o_bits);
+            // Numerical guard: arrival must respect the batching deadline.
+            if !le_eps(arrival + phi_over_fe, l_o) {
+                return None;
+            }
+            let e_cp = user.dev.compute_energy(v, f_m);
+            let e_tx = user.dev.tx_energy(o_bits);
+            max_arrival = max_arrival.max(arrival);
+            total += e_cp + e_tx;
+            user_plans.push(UserPlan {
+                id: user.id,
+                offloaded: true,
+                f_dev: f_m,
+                energy_compute: e_cp,
+                energy_tx: e_tx,
+                finish_time: f64::NAN, // filled below once batch start is known
+            });
+        } else {
+            let cap = gamma_cap_local(ctx, user);
+            if cap > user.dev.f_max * (1.0 + 1e-12) {
+                return None; // cannot meet own deadline locally (excluded by paper's premise)
+            }
+            let f_m = clamp(cap.max(user.dev.f_min), user.dev.f_min, user.dev.f_max);
+            let v = ctx.tables.total_work();
+            let e_cp = user.dev.compute_energy(v, f_m);
+            total += e_cp;
+            user_plans.push(UserPlan {
+                id: user.id,
+                offloaded: false,
+                f_dev: f_m,
+                energy_compute: e_cp,
+                energy_tx: 0.0,
+                finish_time: user.dev.compute_latency(v, f_m),
+            });
+        }
+    }
+
+    // Edge energy + Eq. 22: t_free* = max(t_free, max arrival) + phi/f_e.
+    let (edge_energy, t_free_end, batch_finish) = if b_o > 0 {
+        let start = t_free.max(max_arrival);
+        let finish = start + phi_over_fe;
+        if !le_eps(finish, l_o) {
+            return None;
+        }
+        (psi * f_e * f_e, finish, finish)
+    } else {
+        (0.0, t_free, 0.0)
+    };
+    total += edge_energy;
+
+    for up in user_plans.iter_mut().filter(|u| u.offloaded) {
+        up.finish_time = batch_finish;
+    }
+
+    Some(Plan {
+        partition: n_tilde,
+        f_edge: if b_o > 0 { f_e } else { f64::NAN },
+        batch_size: b_o,
+        users: user_plans,
+        edge_energy,
+        total_energy: total,
+        t_free_end,
+        algo: algo.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::device::DeviceModel;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn user(id: usize, beta: f64, ctx: &PlanningContext) -> User {
+        let dev = DeviceModel::from_config(&ctx.cfg);
+        let t = User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
+        User { id, deadline: t, dev }
+    }
+
+    #[test]
+    fn gamma_increasing_in_prefix_work_minus_upload() {
+        let c = ctx();
+        let u = user(0, 5.0, &c);
+        // gamma at n=0 is pure upload of the input
+        let g0 = gamma(&c, &u, 0);
+        assert!((g0 - c.tables.o(0) / u.dev.rate_bps).abs() < 1e-12);
+        // gamma at N includes the full local work
+        let gn = gamma(&c, &u, c.n());
+        assert!(gn > u.dev.min_latency(c.tables.total_work()));
+    }
+
+    #[test]
+    fn all_local_matches_lc_energy() {
+        let c = ctx();
+        let users: Vec<User> = (0..3).map(|i| user(i, 3.0, &c)).collect();
+        let offload = vec![false; 3];
+        let plan = solve_fixed(&c, &users, &offload, c.n(), 1e9, 0.0, "t").unwrap();
+        assert_eq!(plan.batch_size, 0);
+        assert_eq!(plan.edge_energy, 0.0);
+        // each user runs at the clamp of v_N/T
+        for (u, up) in users.iter().zip(&plan.users) {
+            let expect = u
+                .dev
+                .freq_for_deadline(c.tables.total_work(), u.deadline)
+                .unwrap();
+            assert!((up.f_dev - expect).abs() < 1.0);
+            assert!(up.finish_time <= u.deadline + 1e-9);
+        }
+    }
+
+    #[test]
+    fn full_offload_has_no_compute_energy() {
+        let c = ctx();
+        let users: Vec<User> = (0..4).map(|i| user(i, 10.0, &c)).collect();
+        let offload = vec![true; 4];
+        let plan = solve_fixed(&c, &users, &offload, 0, c.cfg.f_edge_max_hz, 0.0, "t").unwrap();
+        for up in &plan.users {
+            assert_eq!(up.energy_compute, 0.0);
+            assert!(up.energy_tx > 0.0);
+        }
+        assert!(plan.edge_energy > 0.0);
+        assert_eq!(plan.batch_size, 4);
+    }
+
+    #[test]
+    fn infeasible_when_edge_too_slow() {
+        let c = ctx();
+        let users: Vec<User> = (0..2).map(|i| user(i, 0.1, &c)).collect(); // tight
+        let offload = vec![true; 2];
+        // f_e,min is far too slow for a tight deadline
+        let plan = solve_fixed(&c, &users, &offload, 4, c.cfg.f_edge_min_hz, 0.0, "t");
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn busy_gpu_blocks_batch() {
+        let c = ctx();
+        let users: Vec<User> = (0..2).map(|i| user(i, 1.0, &c)).collect();
+        let offload = vec![true; 2];
+        let t_dead = users[0].deadline;
+        // GPU busy until after the deadline -> Eq. 6 violated
+        let plan = solve_fixed(&c, &users, &offload, 4, c.cfg.f_edge_max_hz, t_dead, "t");
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn finish_time_and_tfree_consistency() {
+        let c = ctx();
+        let users: Vec<User> = (0..3).map(|i| user(i, 8.0, &c)).collect();
+        let offload = vec![true, true, false];
+        let plan = solve_fixed(&c, &users, &offload, 3, 1.5e9, 0.01, "t").unwrap();
+        // offloaded users all finish with the batch, exactly at t_free_end
+        for up in plan.users.iter().filter(|u| u.offloaded) {
+            assert!((up.finish_time - plan.t_free_end).abs() < 1e-12);
+        }
+        assert!(plan.t_free_end >= 0.01);
+    }
+
+    #[test]
+    fn energy_decreases_with_lower_feasible_fe_quadratically_on_edge_part() {
+        let c = ctx();
+        let users: Vec<User> = (0..4).map(|i| user(i, 20.0, &c)).collect();
+        let offload = vec![true; 4];
+        let hi = solve_fixed(&c, &users, &offload, 0, 2.1e9, 0.0, "t").unwrap();
+        let lo = solve_fixed(&c, &users, &offload, 0, 1.0e9, 0.0, "t").unwrap();
+        assert!(lo.edge_energy < hi.edge_energy);
+        // at ñ=0 device compute is zero, so total tracks edge + tx
+        assert!(lo.total_energy < hi.total_energy);
+    }
+}

@@ -1,0 +1,319 @@
+//! Alloc-free planner hot path.
+//!
+//! The reference implementation ([`crate::algo::sweep::sweep`]) builds a
+//! full [`Plan`] (two Vec allocations + a String) for every *candidate*
+//! (ñ, offload-suffix, f_e) — ~N·k ≈ 600 candidates per solve.  This module
+//! evaluates candidates energy-only against precomputed per-user tables and
+//! materializes a Plan exactly once, for the winner, through the very same
+//! closed form (`solve_fixed`), so the two paths are numerically identical
+//! (asserted by `fast_path_matches_reference` below and the planner bench).
+//!
+//! Measured effect (see EXPERIMENTS.md §Perf): ~6-9x fewer ns/solve at
+//! M = 20 with zero behavioural change.
+
+use crate::algo::closed_form::solve_fixed;
+use crate::algo::sweep::{build_setup, SweepSetup};
+use crate::algo::types::{Plan, PlanningContext, User};
+use crate::util::{clamp, TIME_EPS};
+
+/// Per-(user, partition-point) scalars needed to price a candidate.
+struct UserTables {
+    /// O_ñ / R_m for the current ñ, in `order` order.
+    o_over_r: Vec<f64>,
+    /// ζ_m · g · v_ñ (device cycles of the prefix), in `order` order.
+    cycles: Vec<f64>,
+    /// κ_m · q · v_ñ (energy coefficient: e_cp = coef · f²), in `order` order.
+    e_coef: Vec<f64>,
+    /// Uplink energy at ñ, in `order` order.
+    e_tx: Vec<f64>,
+    /// f_min / f_max per user, in `order` order.
+    f_min: Vec<f64>,
+    f_max: Vec<f64>,
+    /// Suffix sums of each user's all-local (LC) energy, in `order` order:
+    /// lc_suffix[i] = Σ_{j >= i} LC_j;  local users of candidate i pay
+    /// lc_total - lc_suffix[i].
+    lc_suffix: Vec<f64>,
+    lc_total: f64,
+}
+
+fn build_user_tables(
+    ctx: &PlanningContext,
+    users: &[User],
+    setup: &SweepSetup,
+    n_tilde: usize,
+) -> Option<UserTables> {
+    let b = users.len();
+    let v = ctx.tables.prefix_work(n_tilde);
+    let o_bits = ctx.tables.o(n_tilde);
+    let v_total = ctx.tables.total_work();
+
+    let mut t = UserTables {
+        o_over_r: Vec::with_capacity(b),
+        cycles: Vec::with_capacity(b),
+        e_coef: Vec::with_capacity(b),
+        e_tx: Vec::with_capacity(b),
+        f_min: Vec::with_capacity(b),
+        f_max: Vec::with_capacity(b),
+        lc_suffix: vec![0.0; b + 1],
+        lc_total: 0.0,
+    };
+    let mut lc = Vec::with_capacity(b);
+    for &idx in &setup.order {
+        let u = &users[idx];
+        t.o_over_r.push(o_bits / u.dev.rate_bps);
+        t.cycles.push(u.dev.zeta * u.dev.g * v);
+        t.e_coef.push(u.dev.kappa * u.dev.q * v);
+        t.e_tx.push(u.dev.tx_energy(o_bits));
+        t.f_min.push(u.dev.f_min);
+        t.f_max.push(u.dev.f_max);
+        // LC energy at the user's deadline-optimal frequency
+        let f = u.dev.freq_for_deadline(v_total, u.deadline)?;
+        lc.push(u.dev.compute_energy(v_total, f));
+    }
+    for i in (0..b).rev() {
+        t.lc_suffix[i] = t.lc_suffix[i + 1] + lc[i];
+    }
+    t.lc_total = t.lc_suffix[0];
+    Some(t)
+}
+
+/// Energy of candidate (suffix starting at î, f_e), or None if infeasible.
+/// Mirrors `solve_fixed` exactly, without constructing a Plan.
+#[inline]
+fn candidate_energy(
+    ctx: &PlanningContext,
+    setup: &SweepSetup,
+    tables: &UserTables,
+    n_tilde: usize,
+    i_hat: usize,
+    f_e: f64,
+    t_free: f64,
+) -> Option<f64> {
+    let b = setup.order.len();
+    let b_o = b - i_hat;
+    let l_o = setup.suffix_min_deadline[i_hat];
+    let phi = ctx.edge.phi(n_tilde, b_o);
+    let phi_over_fe = phi / f_e;
+
+    // Eq. 6
+    if t_free + phi_over_fe > l_o + TIME_EPS {
+        return None;
+    }
+
+    let mut energy = ctx.edge.psi(n_tilde, b_o) * f_e * f_e;
+    // local users: everyone before the suffix
+    energy += tables.lc_total - tables.lc_suffix[i_hat];
+
+    for i in i_hat..b {
+        let budget = l_o - tables.o_over_r[i] - phi_over_fe;
+        let cycles = tables.cycles[i];
+        let f_m = if cycles == 0.0 {
+            if budget < -TIME_EPS {
+                return None;
+            }
+            tables.f_min[i]
+        } else {
+            if budget <= 0.0 {
+                return None;
+            }
+            let cap = cycles / budget;
+            if cap > tables.f_max[i] * (1.0 + 1e-12) {
+                return None;
+            }
+            clamp(cap.max(tables.f_min[i]), tables.f_min[i], tables.f_max[i])
+        };
+        // arrival feasibility at the clamped frequency
+        let arrival = if cycles == 0.0 { tables.o_over_r[i] } else { cycles / f_m + tables.o_over_r[i] };
+        if arrival + phi_over_fe > l_o + TIME_EPS {
+            return None;
+        }
+        energy += tables.e_coef[i] * f_m * f_m + tables.e_tx[i];
+    }
+    Some(energy)
+}
+
+/// Winner of one partition point's sweep, energy-only.
+pub struct FastCandidate {
+    pub n_tilde: usize,
+    pub i_hat: usize,
+    pub f_e: f64,
+    pub energy: f64,
+}
+
+/// Alg. 2's sweep with energy-only pricing. Returns the best candidate for
+/// this ñ (if any).
+pub fn sweep_fast(
+    ctx: &PlanningContext,
+    users: &[User],
+    n_tilde: usize,
+    setup: &SweepSetup,
+    t_free: f64,
+    fixed_edge_freq: bool,
+) -> Option<FastCandidate> {
+    let tables = build_user_tables(ctx, users, setup, n_tilde)?;
+    let b = users.len();
+    let f_max = ctx.edge.f_max();
+    let f_min = ctx.edge.f_min();
+    let rho = ctx.cfg.rho_hz;
+
+    let mut best: Option<FastCandidate> = None;
+    let mut i_hat = 0usize;
+    let mut f_e = f_max;
+    loop {
+        while i_hat < b && f_e < setup.thresholds[i_hat] {
+            i_hat += 1;
+        }
+        if i_hat >= b {
+            break;
+        }
+        if let Some(energy) = candidate_energy(ctx, setup, &tables, n_tilde, i_hat, f_e, t_free) {
+            if best.as_ref().map_or(true, |c| energy < c.energy) {
+                best = Some(FastCandidate {
+                    n_tilde,
+                    i_hat,
+                    f_e,
+                    energy,
+                });
+            }
+        }
+        if fixed_edge_freq {
+            break;
+        }
+        f_e -= rho;
+        if f_e < f_min - TIME_EPS {
+            break;
+        }
+    }
+    best
+}
+
+/// Algorithm 1 on the fast path: pick the winning (ñ, î, f_e) energy-only,
+/// then materialize the full Plan once via the reference closed form.
+pub fn solve_fast(
+    ctx: &PlanningContext,
+    users: &[User],
+    t_free: f64,
+    edge_dvfs: bool,
+    binary: bool,
+    label: &str,
+) -> Option<Plan> {
+    if users.is_empty() {
+        return None;
+    }
+    let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    if min_deadline < t_free - TIME_EPS {
+        return None;
+    }
+    let n = ctx.n();
+
+    let mut best: Option<(FastCandidate, SweepSetup)> = None;
+    let partitions: Vec<usize> = if binary { vec![0] } else { (0..n).collect() };
+    for n_tilde in partitions {
+        let setup = build_setup(ctx, users, n_tilde);
+        if let Some(cand) = sweep_fast(ctx, users, n_tilde, &setup, t_free, !edge_dvfs) {
+            if best.as_ref().map_or(true, |(c, _)| cand.energy < c.energy) {
+                best = Some((cand, setup));
+            }
+        }
+    }
+
+    // all-local candidate (ñ = N)
+    let all_local = solve_fixed(ctx, users, &vec![false; users.len()], n, f64::NAN, t_free, label);
+
+    let offload_plan = best.and_then(|(cand, setup)| {
+        let mut offload = vec![false; users.len()];
+        for &idx in &setup.order[cand.i_hat..] {
+            offload[idx] = true;
+        }
+        solve_fixed(ctx, users, &offload, cand.n_tilde, cand.f_e, t_free, label)
+    });
+
+    match (offload_plan, all_local) {
+        (Some(a), Some(b)) => Some(if a.total_energy <= b.total_energy { a } else { b }),
+        (a, b) => a.or(b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::jdob::JDob;
+    use crate::energy::device::DeviceModel;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn random_users(c: &PlanningContext, m: usize, rng: &mut Rng) -> Vec<User> {
+        let base = DeviceModel::from_config(&c.cfg);
+        let total = c.tables.total_work();
+        (0..m)
+            .map(|id| {
+                let mut dev = base.clone();
+                dev.rate_bps *= rng.gen_range(0.5, 2.0);
+                dev.kappa *= rng.gen_range(0.7, 1.3);
+                let beta = rng.gen_range(0.2, 20.0);
+                User {
+                    id,
+                    deadline: User::deadline_from_beta(beta, &dev, total),
+                    dev,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(77);
+        for trial in 0..30 {
+            let m = 1 + rng.gen_index(12);
+            let users = random_users(&c, m, &mut rng);
+            for t_free in [0.0, 0.01] {
+                let slow = JDob::full().solve_reference(&c, &users, t_free);
+                let fast = solve_fast(&c, &users, t_free, true, false, "J-DOB");
+                match (&slow, &fast) {
+                    (Some(s), Some(f)) => {
+                        let rel = (s.total_energy - f.total_energy).abs() / s.total_energy;
+                        assert!(
+                            rel < 1e-9,
+                            "trial {trial}: slow {} vs fast {}",
+                            s.total_energy,
+                            f.total_energy
+                        );
+                        assert_eq!(s.partition, f.partition, "trial {trial}");
+                        assert_eq!(s.batch_size, f.batch_size, "trial {trial}");
+                    }
+                    (None, None) => {}
+                    _ => panic!("trial {trial}: feasibility disagreement"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_ablations() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(13);
+        for _ in 0..10 {
+            let users = random_users(&c, 6, &mut rng);
+            for (dvfs, binary) in [(false, false), (true, true), (false, true)] {
+                let slow = JDob {
+                    edge_dvfs: dvfs,
+                    binary,
+                    ..JDob::full()
+                }
+                .solve_reference(&c, &users, 0.0);
+                let fast = solve_fast(&c, &users, 0.0, dvfs, binary, "x");
+                match (&slow, &fast) {
+                    (Some(s), Some(f)) => {
+                        assert!((s.total_energy - f.total_energy).abs() / s.total_energy < 1e-9);
+                    }
+                    (None, None) => {}
+                    _ => panic!("feasibility disagreement"),
+                }
+            }
+        }
+    }
+}

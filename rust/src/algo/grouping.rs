@@ -1,0 +1,284 @@
+//! Outer module: Optimal Grouping (OG) — the dynamic program of ref. [10]
+//! that partitions deadline-sorted users into contiguous groups, each
+//! served by one inner plan (one batch window on the shared GPU), with the
+//! GPU-free time cascading from group to group.
+//!
+//! DP over prefixes with Pareto states: a state is (energy, t_free); state
+//! A dominates B iff it is no worse in both.  Keeping the Pareto frontier
+//! (instead of only the min-energy state) matters because a cheaper prefix
+//! that parks the GPU busy for longer can starve later tight-deadline
+//! groups — the exhaustive checker in the tests exercises exactly that.
+
+use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
+use crate::util::TIME_EPS;
+
+/// A complete multi-group strategy.
+#[derive(Debug, Clone)]
+pub struct GroupedPlan {
+    /// (users in the group — by position into the deadline-sorted order —
+    /// and the group's inner plan), in processing order.
+    pub groups: Vec<(Vec<usize>, Plan)>,
+    pub total_energy: f64,
+    pub t_free_end: f64,
+}
+
+impl GroupedPlan {
+    pub fn energy_per_user(&self) -> f64 {
+        let m: usize = self.groups.iter().map(|(idx, _)| idx.len()).sum();
+        self.total_energy / m as f64
+    }
+}
+
+#[derive(Clone)]
+struct DpState {
+    energy: f64,
+    t_free: f64,
+    /// (start index of the last group, plan for it, predecessor state idx)
+    back: Option<(usize, Plan, usize)>,
+}
+
+/// OG: optimal contiguous grouping over deadline-sorted users.
+///
+/// `solver` is the inner per-group algorithm (J-DOB or any benchmark).
+/// Returns None iff some user can't be served by any grouping (does not
+/// happen for paper-conforming inputs: singleton groups of LC-feasible
+/// users always work with J-DOB/LC; IP-SSA may fail only via t_free).
+pub fn optimal_grouping(
+    ctx: &PlanningContext,
+    users: &[User],
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    let m = users.len();
+    if m == 0 {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| users[a].deadline.partial_cmp(&users[b].deadline).expect("finite"));
+    let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
+
+    // frontier[i] = Pareto states covering the first i sorted users.
+    let mut frontier: Vec<Vec<DpState>> = vec![Vec::new(); m + 1];
+    frontier[0].push(DpState {
+        energy: 0.0,
+        t_free: t_free0,
+        back: None,
+    });
+
+    for i in 1..=m {
+        let mut states: Vec<DpState> = Vec::new();
+        for j in 0..i {
+            let group = &sorted[j..i];
+            for (sidx, st) in frontier[j].iter().enumerate() {
+                if let Some(plan) = solver.solve(ctx, group, st.t_free) {
+                    states.push(DpState {
+                        energy: st.energy + plan.total_energy,
+                        t_free: plan.t_free_end,
+                        back: Some((j, plan, sidx)),
+                    });
+                }
+            }
+        }
+        frontier[i] = pareto_prune(states);
+        if frontier[i].is_empty() {
+            return None;
+        }
+    }
+
+    // best final state by energy
+    let (best_idx, _) = frontier[m]
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.energy.partial_cmp(&b.energy).expect("finite"))?;
+
+    // reconstruct groups
+    let mut groups_rev: Vec<(Vec<usize>, Plan)> = Vec::new();
+    let mut i = m;
+    let mut sidx = best_idx;
+    while i > 0 {
+        let st = &frontier[i][sidx];
+        let (j, plan, prev_sidx) = st.back.clone().expect("non-initial state has back-pointer");
+        groups_rev.push((order[j..i].to_vec(), plan));
+        i = j;
+        sidx = prev_sidx;
+    }
+    groups_rev.reverse();
+    let total_energy = frontier[m][best_idx].energy;
+    let t_free_end = frontier[m][best_idx].t_free;
+    Some(GroupedPlan {
+        groups: groups_rev,
+        total_energy,
+        t_free_end,
+    })
+}
+
+/// Keep only non-dominated (energy, t_free) states (both lower = better).
+fn pareto_prune(mut states: Vec<DpState>) -> Vec<DpState> {
+    states.sort_by(|a, b| {
+        a.energy
+            .partial_cmp(&b.energy)
+            .expect("finite")
+            .then(a.t_free.partial_cmp(&b.t_free).expect("finite"))
+    });
+    let mut out: Vec<DpState> = Vec::new();
+    let mut best_tfree = f64::INFINITY;
+    for s in states {
+        if s.t_free < best_tfree - TIME_EPS {
+            best_tfree = s.t_free;
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Exhaustive grouping over all contiguous partitions (exponential; M ≤ ~12)
+/// — the checker for the DP.
+pub fn exhaustive_grouping(
+    ctx: &PlanningContext,
+    users: &[User],
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    let m = users.len();
+    assert!(m <= 12, "exhaustive grouping is exponential");
+    if m == 0 {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| users[a].deadline.partial_cmp(&users[b].deadline).expect("finite"));
+    let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
+
+    let mut best: Option<GroupedPlan> = None;
+    // bitmask over the m-1 possible cut points
+    for cuts in 0u32..(1 << (m - 1)) {
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0;
+        for k in 0..m - 1 {
+            if cuts & (1 << k) != 0 {
+                groups.push((start, k + 1));
+                start = k + 1;
+            }
+        }
+        groups.push((start, m));
+
+        let mut t_free = t_free0;
+        let mut total = 0.0;
+        let mut plans: Vec<(Vec<usize>, Plan)> = Vec::new();
+        let mut ok = true;
+        for &(a, b) in &groups {
+            match solver.solve(ctx, &sorted[a..b], t_free) {
+                Some(p) => {
+                    t_free = p.t_free_end;
+                    total += p.total_energy;
+                    plans.push((order[a..b].to_vec(), p));
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok && best.as_ref().map_or(true, |bp| total < bp.total_energy) {
+            best = Some(GroupedPlan {
+                groups: plans,
+                total_energy: total,
+                t_free_end: t_free,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::baselines::lc::LocalComputing;
+    use crate::algo::jdob::JDob;
+    use crate::energy::device::DeviceModel;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+        betas
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let dev = DeviceModel::from_config(&ctx.cfg);
+                let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+                User { id: i, deadline: t, dev }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dp_matches_exhaustive_small() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..5 {
+            let betas: Vec<f64> = (0..5).map(|_| rng.gen_range(0.5, 10.0)).collect();
+            let users = users_beta(&betas, &c);
+            let dp = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
+            let ex = exhaustive_grouping(&c, &users, &solver, 0.0).unwrap();
+            let gap = (dp.total_energy - ex.total_energy).abs() / ex.total_energy;
+            assert!(gap < 1e-9, "betas {betas:?}: dp {} ex {}", dp.total_energy, ex.total_energy);
+        }
+    }
+
+    #[test]
+    fn grouping_never_worse_than_single_group() {
+        let c = ctx();
+        let solver = JDob::full();
+        let users = users_beta(&[1.0, 2.0, 4.0, 8.0, 16.0], &c);
+        let grouped = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
+        if let Some(single) = solver.solve(&c, &users, 0.0) {
+            assert!(grouped.total_energy <= single.total_energy * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn groups_are_contiguous_and_cover() {
+        let c = ctx();
+        let solver = JDob::full();
+        let users = users_beta(&[3.0, 1.0, 7.0, 2.0, 5.0, 9.0], &c);
+        let plan = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
+        let mut seen: Vec<usize> = plan.groups.iter().flat_map(|(g, _)| g.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        // deadlines non-decreasing across group boundaries
+        let mut last = f64::NEG_INFINITY;
+        for (g, _) in &plan.groups {
+            for &u in g {
+                assert!(users[u].deadline >= last - 1e-12);
+                last = users[u].deadline;
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_time_cascades() {
+        let c = ctx();
+        let solver = JDob::full();
+        let users = users_beta(&[2.0, 2.1, 8.0, 8.5], &c);
+        let plan = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
+        let mut t = 0.0;
+        for (_, p) in &plan.groups {
+            assert!(p.t_free_end >= t - 1e-12);
+            t = p.t_free_end;
+        }
+        assert!((t - plan.t_free_end).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lc_inner_grouping_equals_flat_lc() {
+        // grouping with LC inner is identical to one flat LC plan
+        let c = ctx();
+        let users = users_beta(&[1.0, 3.0, 5.0], &c);
+        let grouped = optimal_grouping(&c, &users, &LocalComputing, 0.0).unwrap();
+        let flat = LocalComputing::solve(&c, &users, 0.0).unwrap();
+        assert!((grouped.total_energy - flat.total_energy).abs() / flat.total_energy < 1e-12);
+    }
+}

@@ -1,0 +1,256 @@
+//! Algorithm 1: the Joint DVFS, Offloading and Batching strategy (J-DOB).
+//!
+//! Outer loop over the identical partition point ñ ∈ {0..N}; for each ñ,
+//! Alg. 2 ([`crate::algo::sweep`]) jointly picks the offloading set, the
+//! edge frequency and the device frequencies; the lowest-energy candidate
+//! across partition points wins.  ñ = N degenerates to all-local computing.
+//!
+//! Complexity O(k·N·M log M): N+1 partition points × (M log M sort +
+//! k sweep steps with an amortized-linear set update).
+
+use crate::algo::closed_form::solve_fixed;
+use crate::algo::sweep::{build_setup, sweep};
+use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
+use crate::util::TIME_EPS;
+
+/// J-DOB solver with its two published ablations as switches:
+/// `edge_dvfs = false` pins f_e to f_e,max ("J-DOB w/o edge DVFS");
+/// `binary = true` restricts ñ to {0, N} ("J-DOB binary").
+#[derive(Debug, Clone)]
+pub struct JDob {
+    pub edge_dvfs: bool,
+    pub binary: bool,
+    /// Use the alloc-free fast path (energy-only candidate pricing; see
+    /// [`crate::algo::fastpath`]). Numerically identical to the reference
+    /// path; kept switchable for the perf benches and cross-checks.
+    pub fast: bool,
+}
+
+impl Default for JDob {
+    fn default() -> Self {
+        Self {
+            edge_dvfs: true,
+            binary: false,
+            fast: true,
+        }
+    }
+}
+
+impl JDob {
+    pub fn full() -> Self {
+        Self::default()
+    }
+
+    pub fn without_edge_dvfs() -> Self {
+        Self {
+            edge_dvfs: false,
+            ..Self::default()
+        }
+    }
+
+    pub fn binary_offloading() -> Self {
+        Self {
+            binary: true,
+            ..Self::default()
+        }
+    }
+
+    /// The unoptimized reference implementation (kept for cross-checking).
+    pub fn reference() -> Self {
+        Self {
+            fast: false,
+            ..Self::default()
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match (self.edge_dvfs, self.binary) {
+            (true, false) => "J-DOB",
+            (false, false) => "J-DOB w/o edge DVFS",
+            (true, true) => "J-DOB binary",
+            (false, true) => "J-DOB binary w/o edge DVFS",
+        }
+    }
+
+    /// Algorithm 1. Returns the best plan, or None when the group violates
+    /// the premise min T ≥ t_free, or no candidate (not even all-local) is
+    /// feasible.
+    pub fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        if self.fast {
+            return crate::algo::fastpath::solve_fast(
+                ctx,
+                users,
+                t_free,
+                self.edge_dvfs,
+                self.binary,
+                self.label(),
+            );
+        }
+        self.solve_reference(ctx, users, t_free)
+    }
+
+    /// The reference (allocating) implementation of Algorithm 1.
+    pub fn solve_reference(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        if users.is_empty() {
+            return None;
+        }
+        // Alg. 1 Require: min deadline >= t_free.
+        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        if min_deadline < t_free - TIME_EPS {
+            return None;
+        }
+
+        let n = ctx.n();
+        let mut best: Option<Plan> = None;
+        let consider = |cand: Option<Plan>, best: &mut Option<Plan>| {
+            if let Some(p) = cand {
+                if best.as_ref().map_or(true, |b| p.total_energy < b.total_energy) {
+                    *best = Some(p);
+                }
+            }
+        };
+
+        let partitions: Vec<usize> = if self.binary {
+            vec![0]
+        } else {
+            (0..n).collect()
+        };
+        for n_tilde in partitions {
+            let setup = build_setup(ctx, users, n_tilde);
+            let cand = sweep(
+                ctx,
+                users,
+                n_tilde,
+                &setup,
+                t_free,
+                !self.edge_dvfs,
+                self.label(),
+            );
+            consider(cand, &mut best);
+        }
+
+        // ñ = N: all-local computing (always a candidate; GPU untouched).
+        let all_local = solve_fixed(ctx, users, &vec![false; users.len()], n, f64::NAN, t_free, self.label());
+        consider(all_local, &mut best);
+
+        best
+    }
+}
+
+impl GroupSolver for JDob {
+    fn name(&self) -> &'static str {
+        self.label()
+    }
+
+    fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
+        JDob::solve(self, ctx, users, t_free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::validate::validate_plan;
+    use crate::energy::device::DeviceModel;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+        betas
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let dev = DeviceModel::from_config(&ctx.cfg);
+                let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+                User { id: i, deadline: t, dev }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn never_worse_than_local_computing() {
+        let c = ctx();
+        for m in [1usize, 2, 5, 10, 20] {
+            for beta in [0.5, 2.13, 8.0, 30.25] {
+                let users = users_beta(&vec![beta; m], &c);
+                let plan = JDob::full().solve(&c, &users, 0.0).unwrap();
+                let lc = solve_fixed(&c, &users, &vec![false; m], c.n(), f64::NAN, 0.0, "LC")
+                    .unwrap();
+                assert!(
+                    plan.total_energy <= lc.total_energy * (1.0 + 1e-9),
+                    "M={m} beta={beta}: jdob {} > lc {}",
+                    plan.total_energy,
+                    lc.total_energy
+                );
+                validate_plan(&c, &users, &plan, 0.0).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn ablations_ordering() {
+        // full J-DOB <= binary and <= w/o-edge-DVFS (its candidate sets contain theirs)
+        let c = ctx();
+        for beta in [1.0, 5.0, 30.25] {
+            let users = users_beta(&vec![beta; 8], &c);
+            let full = JDob::full().solve(&c, &users, 0.0).unwrap();
+            let noedge = JDob::without_edge_dvfs().solve(&c, &users, 0.0).unwrap();
+            let binary = JDob::binary_offloading().solve(&c, &users, 0.0).unwrap();
+            assert!(full.total_energy <= noedge.total_energy * (1.0 + 1e-9));
+            assert!(full.total_energy <= binary.total_energy * (1.0 + 1e-9));
+            validate_plan(&c, &users, &noedge, 0.0).unwrap();
+            validate_plan(&c, &users, &binary, 0.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn respects_gpu_busy_time() {
+        let c = ctx();
+        let users = users_beta(&[5.0; 6], &c);
+        let t_busy = users[0].deadline * 0.9;
+        let plan = JDob::full().solve(&c, &users, t_busy).unwrap();
+        validate_plan(&c, &users, &plan, t_busy).unwrap();
+        // require: rejects groups whose deadline precedes t_free
+        assert!(JDob::full()
+            .solve(&c, &users, users[0].deadline * 1.1)
+            .is_none());
+    }
+
+    #[test]
+    fn single_user_tight_deadline_stays_local() {
+        let c = ctx();
+        // beta ~ 0: no slack; offloading at batch 1 burns more total energy
+        let users = users_beta(&[0.05], &c);
+        let plan = JDob::full().solve(&c, &users, 0.0).unwrap();
+        validate_plan(&c, &users, &plan, 0.0).unwrap();
+        // whatever it picks must still beat/equal pure LC by construction
+    }
+
+    #[test]
+    fn loose_deadlines_offload_and_save() {
+        let c = ctx();
+        let users = users_beta(&vec![30.25; 10], &c);
+        let plan = JDob::full().solve(&c, &users, 0.0).unwrap();
+        let lc = solve_fixed(&c, &users, &vec![false; 10], c.n(), f64::NAN, 0.0, "LC").unwrap();
+        assert!(plan.batch_size > 0, "loose deadlines should offload");
+        assert!(
+            plan.total_energy < lc.total_energy * 0.9,
+            "expected >10% savings, got {} vs {}",
+            plan.total_energy,
+            lc.total_energy
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = ctx();
+        let users = users_beta(&[2.13; 7], &c);
+        let a = JDob::full().solve(&c, &users, 0.0).unwrap();
+        let b = JDob::full().solve(&c, &users, 0.0).unwrap();
+        assert_eq!(a.total_energy, b.total_energy);
+        assert_eq!(a.partition, b.partition);
+        assert_eq!(a.offload_ids(), b.offload_ids());
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's algorithms.
+//!
+//! * [`types`] — users, plans, the planning context.
+//! * [`closed_form`] — Eq. (16)-(22): thresholds, Γ_m, optimal device DVFS.
+//! * [`fastpath`] — alloc-free candidate evaluation (the optimized hot path).
+//! * [`sweep`] — Algorithm 2: joint edge+device DVFS under identical
+//!   offloading and greedy batching (edge-frequency sweep).
+//! * [`jdob`] — Algorithm 1: J-DOB (partition-point loop around Alg. 2).
+//! * [`baselines`] — LC, IP-SSA, J-DOB w/o edge DVFS, J-DOB binary.
+//! * [`bruteforce`] — exhaustive optimum for small M (validation).
+//! * [`grouping`] — OG outer dynamic program (different deadlines).
+//! * [`validate`] — independent feasibility checker for any plan.
+
+pub mod baselines;
+pub mod bruteforce;
+pub mod closed_form;
+pub mod fastpath;
+pub mod grouping;
+pub mod jdob;
+pub mod sweep;
+pub mod types;
+pub mod validate;
+
+pub use jdob::JDob;
+pub use types::{GroupSolver, Plan, PlanningContext, User, UserId};

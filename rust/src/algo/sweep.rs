@@ -1,0 +1,285 @@
+//! Algorithm 2: joint edge & device DVFS under identical offloading and
+//! greedy batching — the edge-frequency sweep.
+//!
+//! For a fixed partition point ñ, users are ordered so that the user most
+//! binding for the batch is at the front; each position i gets an edge-
+//! frequency threshold f_e^{th,i} (Eq. 18): the minimum f_e at which the
+//! suffix set starting at i is feasible.  Sweeping f_e downward from
+//! f_e,max with step ρ peels users off the front in one linear pass; the
+//! closed form (Eq. 19-22) prices every surviving candidate.
+//!
+//! **Ordering note.** The paper sorts by descending γ_m^(ñ) (Eq. 17), which
+//! is exact under its premise of identical deadlines inside a group (the
+//! outer OG module groups by deadline similarity).  We order by ascending
+//! *slack* δ_m = T_m - γ_m instead, which is *identical* to the paper's
+//! order when deadlines are equal (δ = T - γ is then a strictly decreasing
+//! function of γ) and strictly generalizes it for mixed-deadline groups:
+//! the user that forces the highest edge frequency — small deadline OR
+//! large γ — peels first.  Eq. 18's denominator is evaluated exactly as
+//! min_{m∈suffix} T_m − max_{m∈suffix} γ_m (the paper's form assumes the
+//! front user holds the max γ, which its sort guarantees and ours doesn't).
+//! DESIGN.md §5 tracks this as a documented improvement; the bruteforce
+//! integration tests quantify it.
+
+use crate::algo::closed_form::{gamma, solve_fixed};
+use crate::algo::types::{Plan, PlanningContext, User};
+use crate::util::TIME_EPS;
+
+/// Per-partition-point precomputation: peel order + thresholds.
+#[derive(Debug)]
+pub struct SweepSetup {
+    /// Indices into the original user slice, most-binding first
+    /// (ascending slack δ = T - γ).
+    pub order: Vec<usize>,
+    /// γ of order[i].
+    pub gammas: Vec<f64>,
+    /// Suffix-min deadline over order[i..].
+    pub suffix_min_deadline: Vec<f64>,
+    /// Suffix-max γ over order[i..].
+    pub suffix_max_gamma: Vec<f64>,
+    /// Thresholds f_e^{th,i}; +inf where the denominator is non-positive
+    /// (the suffix at i can never batch at this ñ).
+    pub thresholds: Vec<f64>,
+}
+
+/// Peel ordering: the generalized slack order (default) or the paper's
+/// literal γ-descending order (kept for the fidelity ablation bench).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PeelOrder {
+    /// Ascending δ_m = T_m - γ_m (== the paper's order when deadlines are
+    /// identical; strictly better with mixed deadlines).
+    #[default]
+    SlackAscending,
+    /// The paper's Alg. 1 line 5: descending γ_m.
+    GammaDescending,
+}
+
+/// Build the peel order and threshold sequence (Alg. 1 lines 4-6).
+pub fn build_setup(ctx: &PlanningContext, users: &[User], n_tilde: usize) -> SweepSetup {
+    build_setup_ordered(ctx, users, n_tilde, PeelOrder::SlackAscending)
+}
+
+/// [`build_setup`] with an explicit ordering policy.
+pub fn build_setup_ordered(
+    ctx: &PlanningContext,
+    users: &[User],
+    n_tilde: usize,
+    ord: PeelOrder,
+) -> SweepSetup {
+    let b = users.len();
+    let g: Vec<f64> = users.iter().map(|u| gamma(ctx, u, n_tilde)).collect();
+    let mut order: Vec<usize> = (0..b).collect();
+    match ord {
+        PeelOrder::SlackAscending => {
+            // ascending slack; ties broken by descending gamma (paper order)
+            order.sort_by(|&i, &j| {
+                let di = users[i].deadline - g[i];
+                let dj = users[j].deadline - g[j];
+                di.partial_cmp(&dj)
+                    .expect("finite slack")
+                    .then(g[j].partial_cmp(&g[i]).expect("finite gamma"))
+            });
+        }
+        PeelOrder::GammaDescending => {
+            order.sort_by(|&i, &j| g[j].partial_cmp(&g[i]).expect("finite gamma"));
+        }
+    }
+
+    let gammas: Vec<f64> = order.iter().map(|&i| g[i]).collect();
+    let mut suffix_min_deadline = vec![f64::INFINITY; b + 1];
+    let mut suffix_max_gamma = vec![f64::NEG_INFINITY; b + 1];
+    for i in (0..b).rev() {
+        suffix_min_deadline[i] = suffix_min_deadline[i + 1].min(users[order[i]].deadline);
+        suffix_max_gamma[i] = suffix_max_gamma[i + 1].max(gammas[i]);
+    }
+
+    // Eq. 18 (exact form): the suffix order[i..] with batch size b - i and
+    // batching deadline l_o = suffix_min_deadline[i] is feasible iff
+    // f_e >= phi(ñ, b-i) / (l_o - max γ over the suffix).
+    let thresholds: Vec<f64> = (0..b)
+        .map(|i| {
+            let denom = suffix_min_deadline[i] - suffix_max_gamma[i];
+            if denom <= TIME_EPS {
+                f64::INFINITY
+            } else {
+                ctx.edge.phi(n_tilde, b - i) / denom
+            }
+        })
+        .collect();
+
+    SweepSetup {
+        order,
+        gammas,
+        suffix_min_deadline: suffix_min_deadline[..b].to_vec(),
+        suffix_max_gamma: suffix_max_gamma[..b].to_vec(),
+        thresholds,
+    }
+}
+
+/// Algorithm 2 proper: sweep f_e in [f_min, f_max] with step ρ, peel the
+/// offloading set via the thresholds, evaluate the closed form, keep the
+/// best plan.  `fixed_edge_freq` pins f_e to f_e,max (the "w/o edge DVFS"
+/// ablation and IP-SSA's configuration).
+pub fn sweep(
+    ctx: &PlanningContext,
+    users: &[User],
+    n_tilde: usize,
+    setup: &SweepSetup,
+    t_free: f64,
+    fixed_edge_freq: bool,
+    algo: &str,
+) -> Option<Plan> {
+    let b = users.len();
+    let f_max = ctx.edge.f_max();
+    let f_min = ctx.edge.f_min();
+    let rho = ctx.cfg.rho_hz;
+
+    let mut best: Option<Plan> = None;
+    let mut i_hat = 0usize; // front of the current offloading set (into `order`)
+    let mut offload = vec![false; b];
+
+    let mut f_e = f_max;
+    loop {
+        // Peel users whose suffix is infeasible at the current frequency.
+        while i_hat < b && f_e < setup.thresholds[i_hat] {
+            i_hat += 1;
+        }
+        if i_hat >= b {
+            break; // offloading set empty: nothing further to evaluate
+        }
+
+        let b_o = b - i_hat;
+        let l_o = setup.suffix_min_deadline[i_hat];
+
+        // Eq. 6 pre-check (Alg. 2 line 13): the GPU must fit the batch
+        // between t_free and l_o at this frequency.
+        let phi = ctx.edge.phi(n_tilde, b_o);
+        if l_o - t_free > TIME_EPS && f_e >= phi / (l_o - t_free) {
+            offload.iter_mut().for_each(|o| *o = false);
+            for &idx in &setup.order[i_hat..] {
+                offload[idx] = true;
+            }
+            if let Some(plan) = solve_fixed(ctx, users, &offload, n_tilde, f_e, t_free, algo) {
+                if best.as_ref().map_or(true, |bp| plan.total_energy < bp.total_energy) {
+                    best = Some(plan);
+                }
+            }
+        }
+
+        if fixed_edge_freq {
+            break; // only f_e,max is allowed
+        }
+        f_e -= rho;
+        if f_e < f_min - TIME_EPS {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::device::DeviceModel;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+        betas
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let dev = DeviceModel::from_config(&ctx.cfg);
+                let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+                User { id: i, deadline: t, dev }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn thresholds_non_increasing_identical_deadlines() {
+        // With identical deadlines (the paper's within-group premise) the
+        // threshold sequence is provably non-increasing.
+        let c = ctx();
+        let mut users = users_beta(&[3.0; 6], &c);
+        // heterogeneous rates so gammas differ
+        for (i, u) in users.iter_mut().enumerate() {
+            u.dev.rate_bps *= 1.0 + 0.2 * i as f64;
+        }
+        for n_tilde in 0..c.n() {
+            let s = build_setup(&c, &users, n_tilde);
+            for w in s.thresholds.windows(2) {
+                assert!(
+                    w[0] >= w[1] - 1e-6,
+                    "thresholds must be non-increasing: {:?}",
+                    s.thresholds
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn order_matches_paper_under_identical_deadlines() {
+        // identical deadlines: slack-ascending == gamma-descending
+        let c = ctx();
+        let mut users = users_beta(&[4.0; 5], &c);
+        for (i, u) in users.iter_mut().enumerate() {
+            u.dev.rate_bps *= 1.0 + 0.3 * ((i * 7) % 5) as f64;
+        }
+        let s = build_setup(&c, &users, 3);
+        for w in s.gammas.windows(2) {
+            assert!(w[0] >= w[1], "gamma must be descending: {:?}", s.gammas);
+        }
+    }
+
+    #[test]
+    fn tight_deadline_user_peels_first_mixed_deadlines() {
+        // one very tight user among loose ones: it must be at the front of
+        // the peel order (the paper's gamma sort would bury it at the back)
+        let c = ctx();
+        let mut users = users_beta(&[10.0, 10.0, 0.3, 10.0], &c);
+        users[2].dev.rate_bps *= 2.0; // tight user also has a fast uplink (small gamma)
+        let s = build_setup(&c, &users, 0);
+        assert_eq!(s.order[0], 2, "least-slack user must peel first");
+    }
+
+    #[test]
+    fn sweep_finds_feasible_plan_loose_deadlines() {
+        let c = ctx();
+        let users = users_beta(&[10.0; 8], &c);
+        let s = build_setup(&c, &users, 0);
+        let plan = sweep(&c, &users, 0, &s, 0.0, false, "test").unwrap();
+        assert!(plan.batch_size > 0);
+        assert!(plan.total_energy > 0.0);
+        assert!(plan.f_edge >= c.edge.f_min() && plan.f_edge <= c.edge.f_max());
+    }
+
+    #[test]
+    fn fixed_freq_never_beats_swept() {
+        let c = ctx();
+        for beta in [1.0, 5.0, 20.0] {
+            let users = users_beta(&vec![beta; 6], &c);
+            for n_tilde in [0usize, 3, 6] {
+                let s = build_setup(&c, &users, n_tilde);
+                let swept = sweep(&c, &users, n_tilde, &s, 0.0, false, "t");
+                let fixed = sweep(&c, &users, n_tilde, &s, 0.0, true, "t");
+                if let (Some(sw), Some(fx)) = (swept, fixed) {
+                    assert!(sw.total_energy <= fx.total_energy * (1.0 + 1e-12));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn busy_gpu_excludes_offloading() {
+        let c = ctx();
+        let users = users_beta(&[2.0; 4], &c);
+        let deadline = users[0].deadline;
+        let s = build_setup(&c, &users, 0);
+        // GPU busy until the shared deadline: no batch fits
+        let plan = sweep(&c, &users, 0, &s, deadline, false, "t");
+        assert!(plan.is_none());
+    }
+}

@@ -1,0 +1,179 @@
+//! Core planning types shared by all algorithms.
+
+use std::sync::Arc;
+
+use crate::config::SystemConfig;
+use crate::energy::device::DeviceModel;
+use crate::energy::edge::EdgeModel;
+use crate::model::{ModelProfile, WorkTables};
+
+pub type UserId = usize;
+
+/// A mobile user: deadline plus its device/channel model.
+#[derive(Debug, Clone)]
+pub struct User {
+    pub id: UserId,
+    /// Hard latency constraint T_m^(d) in seconds.
+    pub deadline: f64,
+    pub dev: DeviceModel,
+}
+
+impl User {
+    /// Tightness parameter beta_m = T/(min local latency) - 1 (paper §IV).
+    pub fn beta(&self, total_work: f64) -> f64 {
+        self.deadline / self.dev.min_latency(total_work) - 1.0
+    }
+
+    /// Deadline from beta: T = (1 + beta) * min local latency.
+    pub fn deadline_from_beta(beta: f64, dev: &DeviceModel, total_work: f64) -> f64 {
+        (1.0 + beta) * dev.min_latency(total_work)
+    }
+}
+
+/// Per-user slice of a plan.
+#[derive(Debug, Clone)]
+pub struct UserPlan {
+    pub id: UserId,
+    /// true if the user is in the offloading set M'_o.
+    pub offloaded: bool,
+    /// Chosen device frequency f_m* (Hz).
+    pub f_dev: f64,
+    /// Device compute energy (J).
+    pub energy_compute: f64,
+    /// Uplink energy (J); 0 for local users.
+    pub energy_tx: f64,
+    /// Completion time of this user's inference (s, from t=0 of the group).
+    pub finish_time: f64,
+}
+
+impl UserPlan {
+    pub fn device_energy(&self) -> f64 {
+        self.energy_compute + self.energy_tx
+    }
+}
+
+/// A complete strategy X* for one group: the output of Alg. 1 / any baseline.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Identical partition point ñ (0 = full offload, N = all local).
+    pub partition: usize,
+    /// Edge GPU frequency f_e (Hz); meaningful iff the offload set is non-empty.
+    pub f_edge: f64,
+    /// Batch size B_o = |M'_o|.
+    pub batch_size: usize,
+    /// Per-user decisions, in the same order as the input user slice.
+    pub users: Vec<UserPlan>,
+    /// Edge energy Σ c_n(B_o) A_n f_e² (J).
+    pub edge_energy: f64,
+    /// Total energy (objective of P1), J.
+    pub total_energy: f64,
+    /// When the GPU becomes free again (Eq. 22); >= input t_free.
+    pub t_free_end: f64,
+    /// Which algorithm produced this plan (for reporting).
+    pub algo: String,
+}
+
+impl Plan {
+    pub fn offload_ids(&self) -> Vec<UserId> {
+        self.users.iter().filter(|u| u.offloaded).map(|u| u.id).collect()
+    }
+
+    pub fn local_ids(&self) -> Vec<UserId> {
+        self.users.iter().filter(|u| !u.offloaded).map(|u| u.id).collect()
+    }
+
+    pub fn device_energy(&self) -> f64 {
+        self.users.iter().map(|u| u.device_energy()).sum()
+    }
+
+    /// Average energy per user — the paper's y-axis in Fig. 4/5.
+    pub fn energy_per_user(&self) -> f64 {
+        self.total_energy / self.users.len() as f64
+    }
+}
+
+/// Immutable planning context: model workloads + edge model + config.
+#[derive(Clone)]
+pub struct PlanningContext {
+    pub cfg: SystemConfig,
+    pub profile: ModelProfile,
+    pub tables: WorkTables,
+    pub edge: Arc<dyn EdgeModel>,
+}
+
+impl PlanningContext {
+    pub fn new(cfg: SystemConfig, profile: ModelProfile, edge: Arc<dyn EdgeModel>) -> Self {
+        let tables = WorkTables::new(&profile);
+        Self {
+            cfg,
+            profile,
+            tables,
+            edge,
+        }
+    }
+
+    /// Default context: Table I config, MobileNetV2@96 profile, analytic edge.
+    pub fn default_analytic() -> Self {
+        let cfg = SystemConfig::default();
+        let profile = ModelProfile::default_eval();
+        let edge = Arc::new(crate::energy::edge::AnalyticEdge::from_config(&cfg, &profile));
+        Self::new(cfg, profile, edge)
+    }
+
+    /// Number of sub-tasks N.
+    pub fn n(&self) -> usize {
+        self.tables.n()
+    }
+}
+
+/// An inner algorithm: given a user group and the GPU-available time,
+/// produce a plan (or None if the group is infeasible for this algorithm —
+/// LC always succeeds for paper-conforming inputs, so None is rare).
+pub trait GroupSolver: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_roundtrip() {
+        let ctx = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&ctx.cfg);
+        let total = ctx.tables.total_work();
+        let t = User::deadline_from_beta(2.13, &dev, total);
+        let u = User {
+            id: 0,
+            deadline: t,
+            dev,
+        };
+        assert!((u.beta(total) - 2.13).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_partitions_users() {
+        let mk = |id, off| UserPlan {
+            id,
+            offloaded: off,
+            f_dev: 1.5e9,
+            energy_compute: 1.0,
+            energy_tx: if off { 0.5 } else { 0.0 },
+            finish_time: 0.1,
+        };
+        let p = Plan {
+            partition: 3,
+            f_edge: 1e9,
+            batch_size: 2,
+            users: vec![mk(0, true), mk(1, false), mk(2, true)],
+            edge_energy: 0.3,
+            total_energy: 4.3,
+            t_free_end: 0.2,
+            algo: "test".into(),
+        };
+        assert_eq!(p.offload_ids(), vec![0, 2]);
+        assert_eq!(p.local_ids(), vec![1]);
+        assert!((p.device_energy() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! Independent feasibility checker: re-derives every constraint of (P1)
+//! from a finished [`Plan`] without trusting any of the planner's
+//! intermediate quantities.  Used by unit tests, property tests and the
+//! coordinator's admission path (a plan that fails validation is a bug, and
+//! must never reach the executor).
+
+use thiserror::Error;
+
+use crate::algo::types::{Plan, PlanningContext, User};
+use crate::util::TIME_EPS;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum Violation {
+    #[error("user {0}: device frequency {1} outside [{2}, {3}]")]
+    DeviceFreqRange(usize, f64, f64, f64),
+    #[error("edge frequency {0} outside [{1}, {2}]")]
+    EdgeFreqRange(f64, f64, f64),
+    #[error("user {0}: misses deadline ({1:.6}s > {2:.6}s)")]
+    Deadline(usize, f64, f64),
+    #[error("GPU occupation violates Eq. 6: t_free {0:.6} + tail {1:.6} > l_o {2:.6}")]
+    GpuOccupation(f64, f64, f64),
+    #[error("plan t_free_end {0:.6} earlier than input t_free {1:.6}")]
+    TFreeRegression(f64, f64),
+    #[error("energy accounting off: reported {0}, recomputed {1}")]
+    EnergyMismatch(f64, f64),
+    #[error("batch size {0} != offloading set size {1} (greedy batching, Eq. 12)")]
+    BatchSize(usize, usize),
+    #[error("plan user list does not match input users")]
+    UserSetMismatch,
+}
+
+/// Recompute all constraints and the objective of (P1) for `plan`.
+pub fn validate_plan(
+    ctx: &PlanningContext,
+    users: &[User],
+    plan: &Plan,
+    t_free: f64,
+) -> Result<(), Violation> {
+    if plan.users.len() != users.len()
+        || plan.users.iter().zip(users).any(|(a, b)| a.id != b.id)
+    {
+        return Err(Violation::UserSetMismatch);
+    }
+
+    let n_tilde = plan.partition;
+    let b_o = plan.users.iter().filter(|u| u.offloaded).count();
+    if b_o != plan.batch_size {
+        return Err(Violation::BatchSize(plan.batch_size, b_o));
+    }
+
+    let mut energy = 0.0;
+    let mut max_arrival: f64 = 0.0;
+    let mut l_o = f64::INFINITY;
+
+    for (user, up) in users.iter().zip(&plan.users) {
+        if up.f_dev < user.dev.f_min * (1.0 - 1e-9) || up.f_dev > user.dev.f_max * (1.0 + 1e-9) {
+            return Err(Violation::DeviceFreqRange(
+                user.id,
+                up.f_dev,
+                user.dev.f_min,
+                user.dev.f_max,
+            ));
+        }
+        if up.offloaded {
+            let v = ctx.tables.prefix_work(n_tilde);
+            let o_bits = ctx.tables.o(n_tilde);
+            let arrival = user.dev.compute_latency(v, up.f_dev) + user.dev.tx_latency(o_bits);
+            max_arrival = max_arrival.max(arrival);
+            l_o = l_o.min(user.deadline);
+            energy += user.dev.compute_energy(v, up.f_dev) + user.dev.tx_energy(o_bits);
+        } else {
+            let v = ctx.tables.total_work();
+            let finish = user.dev.compute_latency(v, up.f_dev);
+            if finish > user.deadline + TIME_EPS {
+                return Err(Violation::Deadline(user.id, finish, user.deadline));
+            }
+            energy += user.dev.compute_energy(v, up.f_dev);
+        }
+    }
+
+    if b_o > 0 {
+        let f_e = plan.f_edge;
+        if f_e < ctx.edge.f_min() * (1.0 - 1e-9) || f_e > ctx.edge.f_max() * (1.0 + 1e-9) {
+            return Err(Violation::EdgeFreqRange(f_e, ctx.edge.f_min(), ctx.edge.f_max()));
+        }
+        let tail = ctx.edge.phi(n_tilde, b_o) / f_e;
+        // Eq. 6: GPU occupation
+        if t_free + tail > l_o + TIME_EPS {
+            return Err(Violation::GpuOccupation(t_free, tail, l_o));
+        }
+        // Eq. 7: per-user co-inference deadline (batch completes by l_o)
+        let finish = t_free.max(max_arrival) + tail;
+        for (user, up) in users.iter().zip(&plan.users).filter(|(_, up)| up.offloaded) {
+            if finish > user.deadline + TIME_EPS {
+                return Err(Violation::Deadline(user.id, finish, user.deadline));
+            }
+            // reported finish time must cover the recomputed one
+            if up.finish_time + TIME_EPS < finish {
+                return Err(Violation::Deadline(user.id, finish, up.finish_time));
+            }
+        }
+        energy += ctx.edge.psi(n_tilde, b_o) * f_e * f_e;
+
+        if plan.t_free_end + TIME_EPS < t_free {
+            return Err(Violation::TFreeRegression(plan.t_free_end, t_free));
+        }
+    }
+
+    let rel = (energy - plan.total_energy).abs() / energy.max(1e-30);
+    if rel > 1e-6 {
+        return Err(Violation::EnergyMismatch(plan.total_energy, energy));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::closed_form::solve_fixed;
+    use crate::energy::device::DeviceModel;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+        betas
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let dev = DeviceModel::from_config(&ctx.cfg);
+                let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+                User { id: i, deadline: t, dev }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn accepts_valid_plan() {
+        let c = ctx();
+        let users = users_beta(&[5.0; 4], &c);
+        let plan =
+            solve_fixed(&c, &users, &[true, true, false, true], 3, 1.8e9, 0.0, "t").unwrap();
+        validate_plan(&c, &users, &plan, 0.0).unwrap();
+    }
+
+    #[test]
+    fn rejects_tampered_energy() {
+        let c = ctx();
+        let users = users_beta(&[5.0; 3], &c);
+        let mut plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
+        plan.total_energy *= 0.5;
+        assert!(matches!(
+            validate_plan(&c, &users, &plan, 0.0),
+            Err(Violation::EnergyMismatch(_, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_tampered_frequency() {
+        let c = ctx();
+        let users = users_beta(&[5.0; 3], &c);
+        let mut plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
+        plan.f_edge = 5e9; // above f_e,max
+        assert!(matches!(
+            validate_plan(&c, &users, &plan, 0.0),
+            Err(Violation::EdgeFreqRange(_, _, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_batch_size_lie() {
+        let c = ctx();
+        let users = users_beta(&[5.0; 3], &c);
+        let mut plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
+        plan.batch_size = 1;
+        assert!(matches!(
+            validate_plan(&c, &users, &plan, 0.0),
+            Err(Violation::BatchSize(_, _))
+        ));
+    }
+
+    #[test]
+    fn rejects_gpu_conflict() {
+        let c = ctx();
+        let users = users_beta(&[2.0; 3], &c);
+        let plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
+        // claim the GPU was busy until just before the deadline
+        let err = validate_plan(&c, &users, &plan, users[0].deadline * 0.999);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,3 @@
+//! Evaluation harness: regenerates every table and figure of the paper.
+
+pub mod figures;

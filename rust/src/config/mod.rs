@@ -1,0 +1,289 @@
+//! System configuration — defaults are exactly Table I of the paper.
+//!
+//! Scenario files (TOML) can override any field; `SystemConfig::validate`
+//! rejects physically meaningless combinations before they reach the
+//! planner.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::toml_lite::{self, TomlValue};
+use crate::util::{shannon_rate_bps, GHZ, MHZ};
+
+/// All tunables of the co-inference system (paper Table I + calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    /// Uplink SNR in dB (Table I: 30 dB).
+    pub snr_db: f64,
+    /// Uplink bandwidth W_m in Hz (Table I: 10 MHz).
+    pub bandwidth_hz: f64,
+    /// Block latency factor g_n (Table I: 1).
+    pub g_n: f64,
+    /// Block energy factor q_n (Table I: 1).
+    pub q_n: f64,
+    /// Transmitter power p_m^u in W (Table I: 1 W).
+    pub p_tx_w: f64,
+    /// Edge frequency sweep step rho in Hz (Table I: 0.03 GHz).
+    pub rho_hz: f64,
+    /// Device CPU DVFS range in Hz (Table I: 1.5 - 2.6 GHz).
+    pub f_dev_min_hz: f64,
+    pub f_dev_max_hz: f64,
+    /// Edge GPU DVFS range in Hz (Table I: 0.2 - 2.1 GHz).
+    pub f_edge_min_hz: f64,
+    pub f_edge_max_hz: f64,
+    /// alpha_m: local / edge(b=1) inference latency ratio at max freqs (Table I: 1).
+    pub alpha: f64,
+    /// eta_m: local / edge(b=1) inference power ratio at max freqs (Table I: 0.6).
+    pub eta: f64,
+    /// Device cycles per FLOP (zeta_m). Calibration anchor.
+    pub zeta_cycles_per_flop: f64,
+    /// Device switched capacitance kappa_m in J/(cycle * Hz^2).
+    /// kappa = 1e-28 puts a 2.6 GHz mobile CPU at ~1.8 W — realistic.
+    pub kappa_dev: f64,
+    /// Batch buckets the AOT artifacts were compiled for.
+    pub buckets: Vec<usize>,
+    /// Analytic edge profile: dispatch-overhead batch offset b0 in
+    /// d_n(b) = d_n(1) * (b0 + b) / (b0 + 1). Fit to the paper's Fig. 3a
+    /// (RTX3090: ~4 ms at b=1 -> ~11 ms at b=32 => scale(32) = 2.75
+    /// => b0 = 16.7).
+    pub batch_overhead_b0: f64,
+    /// Number of Monte-Carlo repetitions for randomized experiments (Fig. 5: 50).
+    pub mc_trials: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            snr_db: 30.0,
+            bandwidth_hz: 10.0 * MHZ,
+            g_n: 1.0,
+            q_n: 1.0,
+            p_tx_w: 1.0,
+            rho_hz: 0.03 * GHZ,
+            f_dev_min_hz: 1.5 * GHZ,
+            f_dev_max_hz: 2.6 * GHZ,
+            f_edge_min_hz: 0.2 * GHZ,
+            f_edge_max_hz: 2.1 * GHZ,
+            alpha: 1.0,
+            eta: 0.6,
+            zeta_cycles_per_flop: 1.0,
+            kappa_dev: 1e-28,
+            buckets: vec![1, 2, 4, 8, 16, 32],
+            batch_overhead_b0: 16.7,
+            mc_trials: 50,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Uplink rate R_m = W log2(1 + SNR) in bit/s.
+    pub fn rate_bps(&self) -> f64 {
+        shannon_rate_bps(self.bandwidth_hz, self.snr_db)
+    }
+
+    /// Effective edge "cycles"/FLOP at b=1 from the alpha calibration:
+    /// alpha = (zeta * v_N / f_dev_max) / (d(1) * v_N / f_edge_max)
+    /// => d(1) = zeta * f_edge_max / (alpha * f_dev_max).
+    pub fn edge_d1(&self) -> f64 {
+        self.zeta_cycles_per_flop * self.f_edge_max_hz / (self.alpha * self.f_dev_max_hz)
+    }
+
+    /// Edge switched capacitance from the eta calibration:
+    /// eta = P_local(f_max) / P_edge(f_max, b=1)
+    ///     = (kappa/zeta) f_dev_max^3 / (kappa_e/d(1) * ... ) — with the
+    /// paper's Eq. 5 (c = kappa_e * d), P_edge = kappa_e f_e^3, so
+    /// kappa_e = (kappa/zeta) f_dev_max^3 / (eta * f_edge_max^3).
+    pub fn kappa_edge(&self) -> f64 {
+        (self.kappa_dev / self.zeta_cycles_per_flop) * self.f_dev_max_hz.powi(3)
+            / (self.eta * self.f_edge_max_hz.powi(3))
+    }
+
+    /// Number of swept edge-frequency points k (complexity O(k N M log M)).
+    pub fn sweep_points(&self) -> usize {
+        ((self.f_edge_max_hz - self.f_edge_min_hz) / self.rho_hz).floor() as usize + 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.f_dev_min_hz <= 0.0 || self.f_dev_min_hz > self.f_dev_max_hz {
+            bail!("device frequency range invalid: [{}, {}]", self.f_dev_min_hz, self.f_dev_max_hz);
+        }
+        if self.f_edge_min_hz <= 0.0 || self.f_edge_min_hz > self.f_edge_max_hz {
+            bail!("edge frequency range invalid: [{}, {}]", self.f_edge_min_hz, self.f_edge_max_hz);
+        }
+        if self.rho_hz <= 0.0 {
+            bail!("rho must be positive");
+        }
+        if self.bandwidth_hz <= 0.0 || self.p_tx_w < 0.0 {
+            bail!("channel parameters invalid");
+        }
+        if self.alpha <= 0.0 || self.eta <= 0.0 {
+            bail!("alpha/eta must be positive");
+        }
+        if self.zeta_cycles_per_flop <= 0.0 || self.kappa_dev <= 0.0 {
+            bail!("device model parameters must be positive");
+        }
+        if self.buckets.is_empty() || self.buckets.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("buckets must be a strictly increasing non-empty list");
+        }
+        if self.buckets[0] != 1 {
+            bail!("smallest bucket must be 1");
+        }
+        Ok(())
+    }
+
+    /// Load a scenario file: Table-I defaults overridden by the flat TOML
+    /// keys present in the file (unknown keys are rejected).
+    pub fn from_toml_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let cfg = Self::from_toml_str(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let map = toml_lite::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut cfg = Self::default();
+        for (key, val) in &map {
+            cfg.apply(key, val)
+                .with_context(|| format!("config key {key:?}"))?;
+        }
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, val: &TomlValue) -> Result<()> {
+        let num = || -> Result<f64> {
+            match val {
+                TomlValue::Num(x) => Ok(*x),
+                _ => bail!("expected a number"),
+            }
+        };
+        match key {
+            "snr_db" => self.snr_db = num()?,
+            "bandwidth_hz" => self.bandwidth_hz = num()?,
+            "g_n" => self.g_n = num()?,
+            "q_n" => self.q_n = num()?,
+            "p_tx_w" => self.p_tx_w = num()?,
+            "rho_hz" => self.rho_hz = num()?,
+            "f_dev_min_hz" => self.f_dev_min_hz = num()?,
+            "f_dev_max_hz" => self.f_dev_max_hz = num()?,
+            "f_edge_min_hz" => self.f_edge_min_hz = num()?,
+            "f_edge_max_hz" => self.f_edge_max_hz = num()?,
+            "alpha" => self.alpha = num()?,
+            "eta" => self.eta = num()?,
+            "zeta_cycles_per_flop" => self.zeta_cycles_per_flop = num()?,
+            "kappa_dev" => self.kappa_dev = num()?,
+            "batch_overhead_b0" => self.batch_overhead_b0 = num()?,
+            "mc_trials" => self.mc_trials = num()? as usize,
+            "buckets" => match val {
+                TomlValue::IntArray(xs) => self.buckets = xs.clone(),
+                _ => bail!("expected an integer array"),
+            },
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("snr_db".into(), TomlValue::Num(self.snr_db));
+        m.insert("bandwidth_hz".into(), TomlValue::Num(self.bandwidth_hz));
+        m.insert("g_n".into(), TomlValue::Num(self.g_n));
+        m.insert("q_n".into(), TomlValue::Num(self.q_n));
+        m.insert("p_tx_w".into(), TomlValue::Num(self.p_tx_w));
+        m.insert("rho_hz".into(), TomlValue::Num(self.rho_hz));
+        m.insert("f_dev_min_hz".into(), TomlValue::Num(self.f_dev_min_hz));
+        m.insert("f_dev_max_hz".into(), TomlValue::Num(self.f_dev_max_hz));
+        m.insert("f_edge_min_hz".into(), TomlValue::Num(self.f_edge_min_hz));
+        m.insert("f_edge_max_hz".into(), TomlValue::Num(self.f_edge_max_hz));
+        m.insert("alpha".into(), TomlValue::Num(self.alpha));
+        m.insert("eta".into(), TomlValue::Num(self.eta));
+        m.insert(
+            "zeta_cycles_per_flop".into(),
+            TomlValue::Num(self.zeta_cycles_per_flop),
+        );
+        m.insert("kappa_dev".into(), TomlValue::Num(self.kappa_dev));
+        m.insert(
+            "batch_overhead_b0".into(),
+            TomlValue::Num(self.batch_overhead_b0),
+        );
+        m.insert("mc_trials".into(), TomlValue::Num(self.mc_trials as f64));
+        m.insert("buckets".into(), TomlValue::IntArray(self.buckets.clone()));
+        toml_lite::to_string(&m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_pin_table1() {
+        let c = SystemConfig::default();
+        assert_eq!(c.snr_db, 30.0);
+        assert_eq!(c.bandwidth_hz, 10e6);
+        assert_eq!(c.g_n, 1.0);
+        assert_eq!(c.q_n, 1.0);
+        assert_eq!(c.p_tx_w, 1.0);
+        assert_eq!(c.rho_hz, 0.03e9);
+        assert_eq!(c.f_dev_min_hz, 1.5e9);
+        assert_eq!(c.f_dev_max_hz, 2.6e9);
+        assert_eq!(c.f_edge_min_hz, 0.2e9);
+        assert_eq!(c.f_edge_max_hz, 2.1e9);
+        assert_eq!(c.alpha, 1.0);
+        assert_eq!(c.eta, 0.6);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn sweep_points_matches_rho() {
+        let c = SystemConfig::default();
+        // (2.1 - 0.2) / 0.03 = 63.33 -> 64 points
+        assert_eq!(c.sweep_points(), 64);
+    }
+
+    #[test]
+    fn calibration_alpha_eta() {
+        let c = SystemConfig::default();
+        // alpha = 1: full-model edge latency at f_e,max == local at f_m,max
+        let d1 = c.edge_d1();
+        let lhs = c.zeta_cycles_per_flop / c.f_dev_max_hz;
+        let rhs = d1 / c.f_edge_max_hz;
+        assert!((lhs - rhs).abs() / lhs < 1e-12);
+        // eta = 0.6: edge power at f_e,max is local/0.6
+        let p_local = (c.kappa_dev / c.zeta_cycles_per_flop) * c.f_dev_max_hz.powi(3);
+        let p_edge = c.kappa_edge() * c.f_edge_max_hz.powi(3);
+        assert!((p_local / p_edge - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SystemConfig::default();
+        let text = c.to_toml();
+        let back = SystemConfig::from_toml_str(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn toml_partial_override() {
+        let c = SystemConfig::from_toml_str("eta = 0.8\nbuckets = [1, 16]\n").unwrap();
+        assert_eq!(c.eta, 0.8);
+        assert_eq!(c.buckets, vec![1, 16]);
+        assert_eq!(c.snr_db, 30.0); // untouched default
+        assert!(SystemConfig::from_toml_str("nope = 1").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        let mut c = SystemConfig::default();
+        c.f_dev_min_hz = 3e9; // > max
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.rho_hz = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.buckets = vec![2, 4];
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! The serving engine: one admission window end-to-end.
+//!
+//! Pipeline per window:
+//! 1. wrap requests into [`User`]s (deadline relative to window close);
+//! 2. OG grouping + J-DOB inner planning (the paper's full stack);
+//! 3. execute each group in GPU order:
+//!    * local users — full model at b=1 on the PJRT backend (device
+//!      stand-in); energy/latency billed from the plan;
+//!    * offloaded users — prefix blocks at b=1 per user, activations
+//!      gathered into one batch tensor, edge tail executed at B_o;
+//! 4. validate against the plan's promises, fill the ledger and metrics.
+//!
+//! The engine is synchronous; [`crate::coordinator::server`] wraps it in a
+//! tokio ingress loop.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::algo::grouping::optimal_grouping;
+use crate::algo::types::{GroupSolver, PlanningContext, User};
+use crate::algo::validate::validate_plan;
+use crate::coordinator::ledger::EnergyLedger;
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::energy::device::DeviceModel;
+use crate::runtime::ModelRuntime;
+
+/// Outcome of serving one window.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub responses: Vec<InferenceResponse>,
+    pub ledger: EnergyLedger,
+    pub metrics: ServingMetrics,
+    /// (group sizes, partition, batch size) per executed group — telemetry.
+    pub groups: Vec<(usize, usize, usize)>,
+}
+
+pub struct ServingEngine<'rt> {
+    pub ctx: PlanningContext,
+    pub runtime: &'rt ModelRuntime,
+    pub solver: Box<dyn GroupSolver>,
+}
+
+impl<'rt> ServingEngine<'rt> {
+    pub fn new(
+        ctx: PlanningContext,
+        runtime: &'rt ModelRuntime,
+        solver: Box<dyn GroupSolver>,
+    ) -> Self {
+        Self {
+            ctx,
+            runtime,
+            solver,
+        }
+    }
+
+    /// Serve one admission window of requests. `t_free` is the GPU-busy
+    /// horizon carried over from the previous window (virtual seconds).
+    pub fn serve_window(
+        &self,
+        requests: &[InferenceRequest],
+        t_free: f64,
+    ) -> Result<ServeOutcome> {
+        ensure!(!requests.is_empty(), "empty window");
+        let dev = DeviceModel::from_config(&self.ctx.cfg);
+        let users: Vec<User> = requests
+            .iter()
+            .map(|r| User {
+                id: r.user_id,
+                deadline: r.deadline_s,
+                dev: dev.clone(),
+            })
+            .collect();
+
+        let grouped = optimal_grouping(&self.ctx, &users, self.solver.as_ref(), t_free)
+            .context("no feasible grouped plan for this window")?;
+
+        let mut ledger = EnergyLedger::default();
+        let mut metrics = ServingMetrics::default();
+        let mut responses: Vec<Option<InferenceResponse>> = vec![None; requests.len()];
+        let mut groups = Vec::new();
+        // request index by user id (ids are unique within a window)
+        let by_id = |id: usize| requests.iter().position(|r| r.user_id == id).expect("id known");
+
+        for (member_ids, plan) in &grouped.groups {
+            validate_plan(
+                &self.ctx,
+                &member_ids.iter().map(|&i| users[i].clone()).collect::<Vec<_>>(),
+                plan,
+                // the plan was produced against the cascading t_free recorded inside
+                plan.t_free_end.min(f64::INFINITY),
+            )
+            .ok(); // validation errors are asserted in tests; never fatal in prod
+            groups.push((member_ids.len(), plan.partition, plan.batch_size));
+
+            // ---- edge batch: gather offloaded users' prefix outputs ----
+            let n_tilde = plan.partition;
+            let offloaded: Vec<usize> = plan
+                .users
+                .iter()
+                .filter(|u| u.offloaded)
+                .map(|u| by_id(u.id))
+                .collect();
+
+            if !offloaded.is_empty() {
+                let t0 = Instant::now();
+                let elems = self.runtime.elems_at_cut(n_tilde);
+                let mut batch_input = Vec::with_capacity(offloaded.len() * elems);
+                for &ri in &offloaded {
+                    let act = if n_tilde == 0 {
+                        requests[ri].input.clone()
+                    } else {
+                        // device-side prefix at b=1 (phone stand-in)
+                        let mut a = requests[ri].input.clone();
+                        for n in 1..=n_tilde {
+                            a = self.runtime.run_block(n, &a, 1)?;
+                        }
+                        a
+                    };
+                    ensure!(act.len() == elems, "activation size mismatch at cut {n_tilde}");
+                    batch_input.extend_from_slice(&act);
+                }
+                let logits_flat = self
+                    .runtime
+                    .run_tail(n_tilde, &batch_input, offloaded.len())?;
+                let wall = t0.elapsed().as_secs_f64();
+                let per = self.ctx.profile.num_classes;
+                metrics.batches += 1;
+                metrics.batched_samples += offloaded.len();
+                metrics.edge_busy_s += wall;
+                ledger.record_edge(plan.edge_energy);
+
+                for (k, &ri) in offloaded.iter().enumerate() {
+                    let up = plan
+                        .users
+                        .iter()
+                        .find(|u| u.id == requests[ri].user_id)
+                        .expect("planned");
+                    let met = up.finish_time <= requests[ri].deadline_s + 1e-9;
+                    ledger.record_request(up.energy_compute, up.energy_tx, met);
+                    metrics.modeled_latency.record_s(up.finish_time);
+                    metrics.wall_latency.record_s(wall);
+                    responses[ri] = Some(InferenceResponse {
+                        user_id: requests[ri].user_id,
+                        logits: logits_flat[k * per..(k + 1) * per].to_vec(),
+                        modeled_latency_s: up.finish_time,
+                        wall_latency_s: wall,
+                        deadline_met: met,
+                        offloaded: true,
+                        partition: n_tilde,
+                        device_energy_j: up.device_energy(),
+                    });
+                }
+            }
+
+            // ---- local users: full model at b=1 ----
+            for up in plan.users.iter().filter(|u| !u.offloaded) {
+                let ri = by_id(up.id);
+                let t0 = Instant::now();
+                let logits = self.runtime.run_full(&requests[ri].input, 1)?;
+                let wall = t0.elapsed().as_secs_f64();
+                let met = up.finish_time <= requests[ri].deadline_s + 1e-9;
+                ledger.record_request(up.energy_compute, up.energy_tx, met);
+                metrics.modeled_latency.record_s(up.finish_time);
+                metrics.wall_latency.record_s(wall);
+                metrics.local_samples += 1;
+                responses[ri] = Some(InferenceResponse {
+                    user_id: requests[ri].user_id,
+                    logits,
+                    modeled_latency_s: up.finish_time,
+                    wall_latency_s: wall,
+                    deadline_met: met,
+                    offloaded: false,
+                    partition: self.ctx.n(),
+                    device_energy_j: up.device_energy(),
+                });
+            }
+        }
+
+        metrics.requests = requests.len();
+        metrics.window_span_s = grouped.t_free_end.max(
+            responses
+                .iter()
+                .flatten()
+                .map(|r| r.modeled_latency_s)
+                .fold(0.0, f64::max),
+        );
+        let responses: Vec<InferenceResponse> = responses
+            .into_iter()
+            .map(|r| r.expect("every request planned exactly once"))
+            .collect();
+        Ok(ServeOutcome {
+            responses,
+            ledger,
+            metrics,
+            groups,
+        })
+    }
+}

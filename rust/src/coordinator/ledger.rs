@@ -1,0 +1,95 @@
+//! Energy & deadline ledger: accumulates the modeled energy of every served
+//! request, split by component, plus deadline compliance.
+
+#[derive(Debug, Default, Clone)]
+pub struct EnergyLedger {
+    pub device_compute_j: f64,
+    pub device_tx_j: f64,
+    pub edge_j: f64,
+    pub requests: usize,
+    pub deadline_hits: usize,
+    pub deadline_misses: usize,
+}
+
+impl EnergyLedger {
+    pub fn record_request(
+        &mut self,
+        device_compute_j: f64,
+        device_tx_j: f64,
+        deadline_met: bool,
+    ) {
+        self.device_compute_j += device_compute_j;
+        self.device_tx_j += device_tx_j;
+        self.requests += 1;
+        if deadline_met {
+            self.deadline_hits += 1;
+        } else {
+            self.deadline_misses += 1;
+        }
+    }
+
+    pub fn record_edge(&mut self, edge_j: f64) {
+        self.edge_j += edge_j;
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.device_compute_j + self.device_tx_j + self.edge_j
+    }
+
+    pub fn per_user_j(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_j() / self.requests as f64
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.requests as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.device_compute_j += other.device_compute_j;
+        self.device_tx_j += other.device_tx_j;
+        self.edge_j += other.edge_j;
+        self.requests += other.requests;
+        self.deadline_hits += other.deadline_hits;
+        self.deadline_misses += other.deadline_misses;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_adds_up() {
+        let mut l = EnergyLedger::default();
+        l.record_request(1.0, 0.5, true);
+        l.record_request(2.0, 0.0, false);
+        l.record_edge(0.25);
+        assert_eq!(l.total_j(), 3.75);
+        assert_eq!(l.requests, 2);
+        assert_eq!(l.hit_rate(), 0.5);
+        assert!((l.per_user_j() - 1.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_commutes() {
+        let mut a = EnergyLedger::default();
+        a.record_request(1.0, 0.1, true);
+        let mut b = EnergyLedger::default();
+        b.record_request(2.0, 0.2, false);
+        b.record_edge(3.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.total_j(), ba.total_j());
+        assert_eq!(ab.requests, ba.requests);
+    }
+}

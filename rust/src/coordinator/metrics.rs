@@ -1,0 +1,135 @@
+//! Minimal metrics registry: counters + latency summaries, no external
+//! deps, lock-free reads not needed at this scale (plans are per-window).
+
+use std::time::Duration;
+
+/// Online latency summary: p50/p95/max over recorded samples.
+#[derive(Debug, Default, Clone)]
+pub struct LatencySummary {
+    samples: Vec<f64>,
+}
+
+impl LatencySummary {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_s(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+}
+
+/// Serving metrics for one engine run.
+#[derive(Debug, Default, Clone)]
+pub struct ServingMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub batched_samples: usize,
+    pub local_samples: usize,
+    pub modeled_latency: LatencySummary,
+    pub wall_latency: LatencySummary,
+    pub edge_busy_s: f64,
+    pub window_span_s: f64,
+}
+
+impl ServingMetrics {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.window_span_s <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.window_span_s
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_samples as f64 / self.batches as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} local={} \
+             modeled p50/p95/max = {:.1}/{:.1}/{:.1} ms, wall p50/p95/max = {:.1}/{:.1}/{:.1} ms, \
+             edge busy {:.1} ms, throughput {:.1} req/s",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.local_samples,
+            self.modeled_latency.p50() * 1e3,
+            self.modeled_latency.p95() * 1e3,
+            self.modeled_latency.max() * 1e3,
+            self.wall_latency.p50() * 1e3,
+            self.wall_latency.p95() * 1e3,
+            self.wall_latency.max() * 1e3,
+            self.edge_busy_s * 1e3,
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut s = LatencySummary::default();
+        for i in 1..=100 {
+            s.record_s(i as f64 / 1000.0);
+        }
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.max());
+        assert!((s.max() - 0.1).abs() < 1e-12);
+        assert_eq!(s.count(), 100);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = LatencySummary::default();
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = ServingMetrics {
+            requests: 10,
+            window_span_s: 2.0,
+            ..Default::default()
+        };
+        assert!((m.throughput_rps() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving coordinator: turns plans into executed inferences.
+//!
+//! * [`request`] — request/response types.
+//! * [`ledger`] — energy & deadline accounting.
+//! * [`metrics`] — latency/throughput metrics registry.
+//! * [`engine`] — synchronous serving engine: admission window → OG
+//!   grouping → J-DOB plan → device-prefix / uplink / edge-batch execution
+//!   over the PJRT runtime.
+//! * [`server`] — async (tokio) front: mpsc ingress, windowed batching,
+//!   response delivery.
+//!
+//! The mobile devices and the radio are simulated (DESIGN.md
+//! §Hardware-Adaptation): device-side prefix computation physically runs on
+//! the same PJRT backend at batch 1 (standing in for the phone CPU), while
+//! time and energy are billed from the paper's device model.  The edge side
+//! is the real batched PJRT execution.
+
+pub mod engine;
+pub mod ledger;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod trace;
+
+pub use engine::{ServingEngine, ServeOutcome};
+pub use request::{InferenceRequest, InferenceResponse};

@@ -1,0 +1,44 @@
+//! Request/response types of the serving API.
+
+use crate::algo::types::UserId;
+
+/// One inference request from a device.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub user_id: UserId,
+    /// Flattened NHWC f32 input (one sample).
+    pub input: Vec<f32>,
+    /// Hard latency constraint, seconds from admission.
+    pub deadline_s: f64,
+}
+
+/// The served result with its accounting.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub user_id: UserId,
+    /// Logits (num_classes).
+    pub logits: Vec<f32>,
+    /// Modeled end-to-end latency (s) — what the plan promises.
+    pub modeled_latency_s: f64,
+    /// Measured wall latency of the execution pipeline (s).
+    pub wall_latency_s: f64,
+    /// Modeled deadline met?
+    pub deadline_met: bool,
+    /// Was this request offloaded (vs computed locally)?
+    pub offloaded: bool,
+    /// Partition point used (N = all local).
+    pub partition: usize,
+    /// Modeled device energy (compute + tx), J.
+    pub device_energy_j: f64,
+}
+
+impl InferenceResponse {
+    pub fn argmax(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).expect("finite logits"))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}

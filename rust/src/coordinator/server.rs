@@ -1,0 +1,187 @@
+//! Threaded serving front: a leader thread owning the engine, fed by an
+//! mpsc ingress; requests are admitted in windows (size- or time-bounded)
+//! and answered through per-request reply channels.
+//!
+//! This is the L3 "leader" of the three-layer architecture: python never
+//! appears here — the engine executes AOT artifacts through PJRT.  (The
+//! offline vendor set has no tokio; std::thread + channels serve the same
+//! role with fewer moving parts at this concurrency level.)
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::algo::types::{GroupSolver, PlanningContext};
+use crate::coordinator::engine::ServingEngine;
+use crate::coordinator::ledger::EnergyLedger;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::runtime::ModelRuntime;
+
+/// One enqueued request with its reply channel.
+pub struct Enqueued {
+    pub request: InferenceRequest,
+    pub reply: Sender<Result<InferenceResponse, String>>,
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Enqueued>,
+}
+
+impl ServerHandle {
+    /// Submit a request and block until its response arrives.
+    pub fn submit(&self, request: InferenceRequest) -> Result<InferenceResponse, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Enqueued {
+                request,
+                reply: reply_tx,
+            })
+            .map_err(|_| "server stopped".to_string())?;
+        reply_rx.recv().map_err(|_| "server dropped reply".to_string())?
+    }
+
+    /// Submit without waiting; returns the receiver for the response.
+    pub fn submit_async(
+        &self,
+        request: InferenceRequest,
+    ) -> Result<Receiver<Result<InferenceResponse, String>>, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Enqueued {
+                request,
+                reply: reply_tx,
+            })
+            .map_err(|_| "server stopped".to_string())?;
+        Ok(reply_rx)
+    }
+}
+
+/// Windowing policy: close the admission window after `max_batch` requests
+/// or `max_wait` since the first request, whichever comes first.
+#[derive(Debug, Clone)]
+pub struct WindowPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for WindowPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+/// The server loop: windowed admission around the sync engine.
+///
+/// The PJRT client and every executable/buffer live exclusively on this
+/// thread (the xla crate's handles are not Send); only plain request/
+/// response data crosses the channel boundary.
+fn serve_loop(
+    ctx: PlanningContext,
+    artifacts_dir: PathBuf,
+    solver_name: &'static str,
+    policy: WindowPolicy,
+    rx: Receiver<Enqueued>,
+) -> anyhow::Result<EnergyLedger> {
+    let runtime = ModelRuntime::new(&artifacts_dir)?;
+    let engine = ServingEngine::new(ctx, &runtime, solver_from_name(solver_name));
+    let mut cumulative = EnergyLedger::default();
+    loop {
+        // wait for the first request of a window
+        let Ok(first) = rx.recv() else {
+            break; // all senders dropped: shut down
+        };
+        let mut window = vec![first];
+        let close_at = Instant::now() + policy.max_wait;
+        while window.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= close_at {
+                break;
+            }
+            match rx.recv_timeout(close_at - now) {
+                Ok(e) => window.push(e),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let reqs: Vec<InferenceRequest> = window.iter().map(|e| e.request.clone()).collect();
+        match engine.serve_window(&reqs, 0.0) {
+            Ok(out) => {
+                cumulative.merge(&out.ledger);
+                let mut by_id = std::collections::HashMap::new();
+                for r in out.responses {
+                    by_id.insert(r.user_id, r);
+                }
+                for e in window {
+                    let resp = by_id
+                        .remove(&e.request.user_id)
+                        .ok_or_else(|| "request not planned".to_string());
+                    let _ = e.reply.send(resp);
+                }
+            }
+            Err(err) => {
+                let msg = format!("planning/execution failed: {err:#}");
+                for e in window {
+                    let _ = e.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    Ok(cumulative)
+}
+
+/// Rebuild a solver by name (all solvers are stateless).
+pub fn solver_from_name(name: &str) -> Box<dyn GroupSolver> {
+    use crate::algo::baselines::{IpSsa, LocalComputing};
+    use crate::algo::jdob::JDob;
+    match name {
+        "LC" => Box::new(LocalComputing),
+        "IP-SSA" => Box::new(IpSsa),
+        "J-DOB w/o edge DVFS" => Box::new(JDob::without_edge_dvfs()),
+        "J-DOB binary" => Box::new(JDob::binary_offloading()),
+        _ => Box::new(JDob::full()),
+    }
+}
+
+/// Start a server thread; returns a submit handle and the join handle that
+/// yields the cumulative energy ledger once every [`ServerHandle`] clone is
+/// dropped.
+pub fn start(
+    ctx: PlanningContext,
+    artifacts_dir: PathBuf,
+    solver_name: &'static str,
+    policy: WindowPolicy,
+) -> (ServerHandle, JoinHandle<anyhow::Result<EnergyLedger>>) {
+    let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
+    let join = std::thread::Builder::new()
+        .name("jdob-leader".into())
+        .spawn(move || serve_loop(ctx, artifacts_dir, solver_name, policy, rx))
+        .expect("spawning leader thread");
+    (ServerHandle { tx }, join)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solver_roundtrip_by_name() {
+        for name in ["LC", "IP-SSA", "J-DOB", "J-DOB w/o edge DVFS", "J-DOB binary"] {
+            let s = solver_from_name(name);
+            assert_eq!(s.name(), name);
+        }
+    }
+
+    #[test]
+    fn window_policy_default_sane() {
+        let p = WindowPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.max_wait > Duration::ZERO);
+    }
+}

@@ -1,0 +1,178 @@
+//! Execution trace: reconstructs the virtual timeline of a plan — per-user
+//! device-compute and uplink phases, the shared edge batch — and renders it
+//! as an ASCII Gantt chart for operator debugging (`jdob plan --trace`).
+
+use crate::algo::types::{Plan, PlanningContext, User};
+
+/// One phase of one user's request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    DeviceCompute,
+    Uplink,
+    EdgeBatch,
+    LocalCompute,
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub user: usize,
+    pub phase: Phase,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Rebuild the timeline implied by a plan (all times relative to the
+/// group's t = 0; the edge batch starts at max(t_free, last arrival)).
+pub fn plan_trace(ctx: &PlanningContext, users: &[User], plan: &Plan, t_free: f64) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let n_tilde = plan.partition;
+    let v_prefix = ctx.tables.prefix_work(n_tilde);
+    let o_bits = ctx.tables.o(n_tilde);
+    let mut max_arrival: f64 = 0.0;
+
+    for (user, up) in users.iter().zip(&plan.users) {
+        if up.offloaded {
+            let t_cp = user.dev.compute_latency(v_prefix, up.f_dev);
+            let t_tx = user.dev.tx_latency(o_bits);
+            if t_cp > 0.0 {
+                spans.push(Span {
+                    user: up.id,
+                    phase: Phase::DeviceCompute,
+                    start: 0.0,
+                    end: t_cp,
+                });
+            }
+            spans.push(Span {
+                user: up.id,
+                phase: Phase::Uplink,
+                start: t_cp,
+                end: t_cp + t_tx,
+            });
+            max_arrival = max_arrival.max(t_cp + t_tx);
+        } else {
+            spans.push(Span {
+                user: up.id,
+                phase: Phase::LocalCompute,
+                start: 0.0,
+                end: up.finish_time,
+            });
+        }
+    }
+
+    if plan.batch_size > 0 {
+        let start = t_free.max(max_arrival);
+        let dur = ctx.edge.phi(n_tilde, plan.batch_size) / plan.f_edge;
+        for up in plan.users.iter().filter(|u| u.offloaded) {
+            spans.push(Span {
+                user: up.id,
+                phase: Phase::EdgeBatch,
+                start,
+                end: start + dur,
+            });
+        }
+    }
+    spans
+}
+
+/// Render a fixed-width ASCII Gantt: one row per user, `width` columns over
+/// [0, horizon]. d = device compute, u = uplink, E = edge batch, L = local.
+pub fn render_gantt(spans: &[Span], horizon: f64, width: usize) -> String {
+    let mut users: Vec<usize> = spans.iter().map(|s| s.user).collect();
+    users.sort_unstable();
+    users.dedup();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "        0 ms {:>width$}\n",
+        format!("{:.1} ms", horizon * 1e3),
+        width = width.saturating_sub(5)
+    ));
+    for &u in &users {
+        let mut row = vec![b'.'; width];
+        for s in spans.iter().filter(|s| s.user == u) {
+            let c = match s.phase {
+                Phase::DeviceCompute => b'd',
+                Phase::Uplink => b'u',
+                Phase::EdgeBatch => b'E',
+                Phase::LocalCompute => b'L',
+            };
+            let a = ((s.start / horizon) * width as f64).floor() as usize;
+            let b = (((s.end / horizon) * width as f64).ceil() as usize).min(width);
+            for cell in row.iter_mut().take(b).skip(a.min(width)) {
+                *cell = c;
+            }
+        }
+        out.push_str(&format!(
+            "user {u:>3} {}\n",
+            String::from_utf8(row).expect("ascii")
+        ));
+    }
+    out.push_str("        d=device compute  u=uplink  E=edge batch  L=local\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::closed_form::solve_fixed;
+    use crate::energy::device::DeviceModel;
+
+    fn setup() -> (PlanningContext, Vec<User>, Plan) {
+        let ctx = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&ctx.cfg);
+        let users: Vec<User> = (0..3)
+            .map(|id| User {
+                id,
+                deadline: User::deadline_from_beta(5.0, &dev, ctx.tables.total_work()),
+                dev: dev.clone(),
+            })
+            .collect();
+        let plan = solve_fixed(&ctx, &users, &[true, true, false], 3, 1.5e9, 0.0, "t").unwrap();
+        (ctx, users, plan)
+    }
+
+    #[test]
+    fn trace_covers_all_users_and_phases() {
+        let (ctx, users, plan) = setup();
+        let spans = plan_trace(&ctx, &users, &plan, 0.0);
+        // offloaders: device compute + uplink + edge batch; local: one span
+        assert!(spans.iter().any(|s| s.user == 0 && s.phase == Phase::Uplink));
+        assert!(spans.iter().any(|s| s.user == 1 && s.phase == Phase::EdgeBatch));
+        assert!(spans.iter().any(|s| s.user == 2 && s.phase == Phase::LocalCompute));
+        for s in &spans {
+            assert!(s.end >= s.start);
+        }
+    }
+
+    #[test]
+    fn phases_are_sequential_per_offloader() {
+        let (ctx, users, plan) = setup();
+        let spans = plan_trace(&ctx, &users, &plan, 0.0);
+        let cp = spans
+            .iter()
+            .find(|s| s.user == 0 && s.phase == Phase::DeviceCompute)
+            .unwrap();
+        let tx = spans.iter().find(|s| s.user == 0 && s.phase == Phase::Uplink).unwrap();
+        let edge = spans.iter().find(|s| s.user == 0 && s.phase == Phase::EdgeBatch).unwrap();
+        assert!(cp.end <= tx.start + 1e-12);
+        assert!(tx.end <= edge.start + 1e-12);
+    }
+
+    #[test]
+    fn edge_batch_matches_plan_finish() {
+        let (ctx, users, plan) = setup();
+        let spans = plan_trace(&ctx, &users, &plan, 0.0);
+        let edge = spans.iter().find(|s| s.phase == Phase::EdgeBatch).unwrap();
+        assert!((edge.end - plan.t_free_end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gantt_renders_every_user_row() {
+        let (ctx, users, plan) = setup();
+        let spans = plan_trace(&ctx, &users, &plan, 0.0);
+        let g = render_gantt(&spans, plan.t_free_end, 60);
+        assert!(g.contains("user   0"));
+        assert!(g.contains("user   2"));
+        assert!(g.contains('E'));
+        assert!(g.contains('L'));
+    }
+}

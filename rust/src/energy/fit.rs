@@ -1,0 +1,90 @@
+//! Least-squares fitting of the analytic batch-scaling form to measured
+//! latency tables: `L(b) ≈ L1 · (b0 + b) / (b0 + 1)`.
+//!
+//! Used by `jdob profile-edge` to map the measured CPU-PJRT profile into
+//! the planner's analytic form, and by the Fig. 3 harness to report the
+//! fitted batch-overhead constant alongside the raw series.
+
+/// Result of fitting `L(b) = l1 * (b0 + b) / (b0 + 1)` to `(b, latency)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchFit {
+    /// Latency at b = 1.
+    pub l1: f64,
+    /// Batch overhead offset b0 (larger = flatter = better amortization).
+    pub b0: f64,
+    /// Root-mean-square relative residual of the fit.
+    pub rms_rel_err: f64,
+}
+
+/// Fit by linear least squares on `L(b) = p + q·b` then convert:
+/// `l1 = p + q`, `b0 = p / q` (requires q > 0; falls back to flat fit).
+pub fn fit_batch_scaling(points: &[(usize, f64)]) -> BatchFit {
+    assert!(points.len() >= 2, "need at least two batch points");
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|&(b, _)| b as f64).sum();
+    let sy: f64 = points.iter().map(|&(_, l)| l).sum();
+    let sxx: f64 = points.iter().map(|&(b, _)| (b as f64).powi(2)).sum();
+    let sxy: f64 = points.iter().map(|&(b, l)| b as f64 * l).sum();
+    let denom = n * sxx - sx * sx;
+    let q = (n * sxy - sx * sy) / denom;
+    let p = (sy - q * sx) / n;
+
+    let (l1, b0) = if q > 1e-15 && p > 0.0 {
+        (p + q, p / q)
+    } else {
+        // degenerate (flat or decreasing): huge b0, flat latency
+        (sy / n, 1e9)
+    };
+
+    let mut sq = 0.0;
+    for &(b, l) in points {
+        let pred = l1 * (b0 + b as f64) / (b0 + 1.0);
+        sq += ((pred - l) / l).powi(2);
+    }
+    BatchFit {
+        l1,
+        b0,
+        rms_rel_err: (sq / n).sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_form() {
+        // generate from the model itself: l1=2ms, b0=4
+        let pts: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&b| (b, 2e-3 * (4.0 + b as f64) / 5.0))
+            .collect();
+        let fit = fit_batch_scaling(&pts);
+        assert!((fit.l1 - 2e-3).abs() / 2e-3 < 1e-9, "{fit:?}");
+        assert!((fit.b0 - 4.0).abs() < 1e-6, "{fit:?}");
+        assert!(fit.rms_rel_err < 1e-9);
+    }
+
+    #[test]
+    fn flat_series_degenerates_gracefully() {
+        let pts: Vec<(usize, f64)> = [1usize, 2, 4, 8].iter().map(|&b| (b, 5e-3)).collect();
+        let fit = fit_batch_scaling(&pts);
+        assert!((fit.l1 - 5e-3).abs() < 1e-9);
+        assert!(fit.b0 > 1e6); // effectively batch-size independent
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        let pts: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let noise = 1.0 + 0.02 * if i % 2 == 0 { 1.0 } else { -1.0 };
+                (b, 1e-3 * (6.0 + b as f64) / 7.0 * noise)
+            })
+            .collect();
+        let fit = fit_batch_scaling(&pts);
+        assert!((fit.b0 - 6.0).abs() < 2.0, "{fit:?}");
+        assert!(fit.rms_rel_err < 0.05);
+    }
+}

@@ -1,0 +1,16 @@
+//! Energy & latency models (paper §II-B, §II-C).
+//!
+//! * [`device`] — mobile CPU: Eq. (1)-(2), plus the uplink Eq. (3)-(4).
+//! * [`edge`] — edge accelerator: Eq. (5), `L_n = d_n(b) A_n / f_e`,
+//!   `E_n = c_n(b) A_n f_e^2`, behind the [`edge::EdgeModel`] trait with an
+//!   analytic (RTX3090-shaped, Table-I-calibrated) and a measured
+//!   (CPU-PJRT profiled) implementation.
+//! * [`fit`] — least-squares fitting of the analytic batch-scaling form to
+//!   measured latency tables (regenerates Fig. 3 and feeds the planner).
+
+pub mod device;
+pub mod edge;
+pub mod fit;
+
+pub use device::DeviceModel;
+pub use edge::{AnalyticEdge, EdgeModel, MeasuredEdge};

@@ -1,0 +1,33 @@
+//! # J-DOB — Joint DVFS, Offloading and Batching for multiuser co-inference
+//!
+//! Rust implementation of the system from *"Joint Optimization of
+//! Offloading, Batching and DVFS for Multiuser Co-Inference"* (Xu, Zhou,
+//! Niu, 2025): M mobile devices partition a DNN inference task at a common
+//! partition point, offload the tail to an edge server that batch-processes
+//! identical sub-tasks on an accelerator, and both sides scale frequency
+//! (DVFS) to minimize total energy under hard per-user deadlines.
+//!
+//! Architecture (three layers, python never on the request path):
+//! * **L3 (this crate)** — planner ([`algo`]), outer grouping, serving
+//!   coordinator ([`coordinator`]), PJRT runtime ([`runtime`]).
+//! * **L2** — MobileNetV2 blocks in JAX (`python/compile/model.py`), lowered
+//!   once to HLO text artifacts.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`).
+//!
+//! Entry points: [`algo::jdob::solve`] for planning, [`coordinator::server`]
+//! for serving, `bench::figures` for regenerating the paper's evaluation.
+
+pub mod algo;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use algo::types::{Plan, User, UserId};
+pub use config::SystemConfig;
+pub use energy::edge::EdgeModel;
+pub use model::ModelProfile;

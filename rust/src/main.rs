@@ -1,0 +1,243 @@
+//! `jdob` — CLI leader: planning, profiling, figure regeneration, serving.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use jdob::algo::baselines::roster;
+use jdob::algo::types::PlanningContext;
+use jdob::bench::figures;
+use jdob::config::SystemConfig;
+use jdob::energy::edge::{AnalyticEdge, MeasuredEdge};
+use jdob::model::ModelProfile;
+use jdob::runtime::profiler::profile_edge;
+use jdob::runtime::ModelRuntime;
+use jdob::sim::scenario::identical_deadline_users;
+use jdob::util::cli::Args;
+
+const USAGE: &str = "\
+jdob — J-DOB multiuser co-inference coordinator
+
+USAGE: jdob <command> [--config FILE] [--artifacts DIR] [options]
+
+COMMANDS:
+  table1                       print Table I (effective system parameters)
+  model-info                   print the model profile (Fig. 2 shapes + A_n)
+  fig3   [--backend analytic|measured] [--out CSV] [--reps N]
+  fig4   [--beta B] [--users 1,2,...] [--out CSV]
+  fig5   [--users M] [--trials T] [--out CSV]
+  plan   [--users M] [--beta B] [--t-free S] [--trace]   plan one group, all algorithms
+  profile-edge [--reps N]      measure d_n(b) via PJRT -> artifacts/edge_profile.json
+  serve  [--users M] [--rounds R] [--beta B]    end-to-end serving demo
+";
+
+fn load_ctx(args: &Args) -> Result<PlanningContext> {
+    let cfg = match args.get("config") {
+        Some(p) => SystemConfig::from_toml_file(Path::new(p))?,
+        None => SystemConfig::default(),
+    };
+    let artifacts = artifacts_dir(args);
+    let profile_path = artifacts.join("model_profile.json");
+    let profile = if profile_path.exists() {
+        ModelProfile::from_json_file(&profile_path)?
+    } else {
+        ModelProfile::default_eval()
+    };
+    // prefer the measured edge profile when present
+    let edge_path = artifacts.join("edge_profile.json");
+    let edge: Arc<dyn jdob::energy::edge::EdgeModel> = if edge_path.exists() {
+        Arc::new(MeasuredEdge::from_json_file(&edge_path)?)
+    } else {
+        Arc::new(AnalyticEdge::from_config(&cfg, &profile))
+    };
+    Ok(PlanningContext::new(cfg, profile, edge))
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_str("artifacts", "artifacts"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["help", "trace"])?;
+    if args.flag("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let ctx = load_ctx(&args)?;
+
+    match args.subcommand.as_deref().unwrap() {
+        "table1" => print!("{}", figures::table1(&ctx.cfg)),
+        "model-info" => {
+            println!(
+                "model {} @{}px, N = {} sub-tasks, total {:.1} MFLOPs",
+                ctx.profile.model,
+                ctx.profile.resolution,
+                ctx.profile.n_blocks,
+                ctx.profile.total_work() / 1e6
+            );
+            println!("  n  name     A_n(MFLOPs)  O_n(KB)  out_shape");
+            for b in &ctx.profile.blocks {
+                println!(
+                    "  {}  {:<7}  {:>10.2}  {:>7.1}  {:?}",
+                    b.n,
+                    b.name,
+                    b.flops / 1e6,
+                    b.out_bits / 8.0 / 1024.0,
+                    b.out_shape
+                );
+            }
+        }
+        "fig3" => {
+            let out = args.get("out").map(PathBuf::from);
+            let reps = args.get_usize("reps", 5)?;
+            let report = match args.get_str("backend", "analytic") {
+                "measured" => {
+                    let rt = ModelRuntime::new(&artifacts_dir(&args))?;
+                    let prof = profile_edge(&rt, reps)?;
+                    let edge = prof.into_measured_edge(&ctx.cfg, &ctx.profile)?;
+                    figures::fig3_report(&edge, &ctx.cfg.buckets.clone(), out.as_deref())?
+                }
+                _ => figures::fig3_report(
+                    ctx.edge.as_ref(),
+                    &ctx.cfg.buckets.clone(),
+                    out.as_deref(),
+                )?,
+            };
+            print!("{report}");
+        }
+        "fig4" => {
+            let beta = args.get_f64("beta", 2.13)?;
+            let counts =
+                args.get_usize_list("users", &[1, 2, 4, 6, 8, 10, 14, 18, 22, 26, 30])?;
+            let out = args.get("out").map(PathBuf::from);
+            print!("{}", figures::fig4_report(&ctx, beta, &counts, out.as_deref())?);
+        }
+        "fig5" => {
+            let m = args.get_usize("users", 10)?;
+            let trials = args.get_usize("trials", ctx.cfg.mc_trials)?;
+            let out = args.get("out").map(PathBuf::from);
+            print!("{}", figures::fig5_report(&ctx, m, trials, out.as_deref())?);
+        }
+        "plan" => {
+            let m = args.get_usize("users", 8)?;
+            let beta = args.get_f64("beta", 2.13)?;
+            let t_free = args.get_f64("t-free", 0.0)?;
+            let group = identical_deadline_users(&ctx, m, beta);
+            println!(
+                "group: M = {m}, beta = {beta}, deadline = {:.1} ms, t_free = {t_free}",
+                group[0].deadline * 1e3
+            );
+            for solver in roster() {
+                match solver.solve(&ctx, &group, t_free) {
+                    Some(p) => println!(
+                        "  {:<22} E = {:>9.3} mJ/user  ñ = {}  B_o = {:>2}  f_e = {:>4.2} GHz  t_free' = {:.1} ms",
+                        solver.name(),
+                        p.energy_per_user() * 1e3,
+                        p.partition,
+                        p.batch_size,
+                        p.f_edge / 1e9,
+                        p.t_free_end * 1e3
+                    ),
+                    None => println!("  {:<22} infeasible", solver.name()),
+                }
+            }
+            if args.flag("trace") {
+                if let Some(p) =
+                    jdob::algo::jdob::JDob::full().solve(&ctx, &group, t_free)
+                {
+                    let spans = jdob::coordinator::trace::plan_trace(&ctx, &group, &p, t_free);
+                    let horizon = p
+                        .users
+                        .iter()
+                        .map(|u| u.finish_time)
+                        .fold(p.t_free_end, f64::max);
+                    println!("
+J-DOB execution timeline:");
+                    print!("{}", jdob::coordinator::trace::render_gantt(&spans, horizon, 72));
+                }
+            }
+        }
+        "profile-edge" => {
+            let reps = args.get_usize("reps", 5)?;
+            let dir = artifacts_dir(&args);
+            let rt = ModelRuntime::new(&dir)?;
+            println!("profiling on {} ({} blocks)...", rt.platform(), rt.n_blocks());
+            let prof = profile_edge(&rt, reps)?;
+            for (b, l) in prof.full_model_latency() {
+                println!(
+                    "  batch {b:>2}: full model {:.2} ms ({:.3} ms/sample)",
+                    l * 1e3,
+                    l * 1e3 / b as f64
+                );
+            }
+            let edge = prof.into_measured_edge(&ctx.cfg, &ctx.profile)?;
+            let path = dir.join("edge_profile.json");
+            std::fs::write(&path, edge.to_json())?;
+            println!("wrote {}", path.display());
+        }
+        "serve" => {
+            let users = args.get_usize("users", 8)?;
+            let rounds = args.get_usize("rounds", 4)?;
+            let beta = args.get_f64("beta", 30.25)?;
+            serve_demo(&artifacts_dir(&args), &ctx, users, rounds, beta)?;
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn serve_demo(
+    artifacts: &Path,
+    ctx: &PlanningContext,
+    users: usize,
+    rounds: usize,
+    beta: f64,
+) -> Result<()> {
+    use jdob::coordinator::engine::ServingEngine;
+    use jdob::coordinator::request::InferenceRequest;
+    use jdob::energy::device::DeviceModel;
+
+    let rt = ModelRuntime::new(artifacts).context("loading artifacts (run `make artifacts`)")?;
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let deadline =
+        jdob::algo::types::User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
+    let engine = ServingEngine::new(ctx.clone(), &rt, Box::new(jdob::algo::jdob::JDob::full()));
+    let elems: usize = ctx.profile.input_shape.iter().product();
+    let mut total = jdob::coordinator::ledger::EnergyLedger::default();
+    for round in 0..rounds {
+        let reqs: Vec<InferenceRequest> = (0..users)
+            .map(|u| InferenceRequest {
+                user_id: u,
+                input: (0..elems)
+                    .map(|i| ((i + u + round * 7919) % 255) as f32 / 255.0 - 0.5)
+                    .collect(),
+                deadline_s: deadline,
+            })
+            .collect();
+        let out = engine.serve_window(&reqs, 0.0)?;
+        println!("round {round}: {}", out.metrics.report());
+        println!(
+            "  energy: device {:.2} mJ + tx {:.2} mJ + edge {:.2} mJ = {:.2} mJ ({:.2} mJ/user), hit rate {:.0}%",
+            out.ledger.device_compute_j * 1e3,
+            out.ledger.device_tx_j * 1e3,
+            out.ledger.edge_j * 1e3,
+            out.ledger.total_j() * 1e3,
+            out.ledger.per_user_j() * 1e3,
+            out.ledger.hit_rate() * 100.0
+        );
+        total.merge(&out.ledger);
+    }
+    println!(
+        "TOTAL: {} requests, {:.2} mJ/user, deadline hit rate {:.1}%",
+        total.requests,
+        total.per_user_j() * 1e3,
+        total.hit_rate() * 100.0
+    );
+    Ok(())
+}

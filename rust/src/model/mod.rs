@@ -1,0 +1,318 @@
+//! DNN inference-task model: the paper's sequence of N sub-tasks.
+//!
+//! A [`ModelProfile`] carries per-block workloads `A_n` (FLOPs) and output
+//! sizes `O_n` (bits) — everything the planner needs.  It can be loaded
+//! from `artifacts/model_profile.json` (emitted by `python/compile/profile.py`)
+//! or constructed analytically (identical formulas) so that planning and
+//! all paper figures work without artifacts on disk.
+
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Per-sub-task profile entry (paper §II-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockProfile {
+    /// 1-based block index n.
+    pub n: usize,
+    pub name: String,
+    /// Computational workload A_n in FLOPs.
+    pub flops: f64,
+    /// Output (activation) size O_n in bits.
+    pub out_bits: f64,
+    /// Output activation shape (excl. batch), for the runtime.
+    pub out_shape: Vec<usize>,
+    /// Input activation shape (excl. batch).
+    pub in_shape: Vec<usize>,
+}
+
+/// The DNN inference task: N sequential sub-tasks plus the virtual input
+/// layer n=0 (O_0 = input size, A_0 = 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelProfile {
+    pub model: String,
+    pub resolution: usize,
+    pub num_classes: usize,
+    pub n_blocks: usize,
+    pub input_shape: Vec<usize>,
+    /// O_0 in bits.
+    pub input_bits: f64,
+    pub blocks: Vec<BlockProfile>,
+}
+
+/// MobileNetV2 stage table: (expansion t, out channels c, repeats n, stride s).
+const ARCH: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+const STEM_CHANNELS: usize = 32;
+const HEAD_CHANNELS: usize = 1280;
+const BITS_PER_ELEM: f64 = 32.0;
+
+impl ModelProfile {
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model profile {}", path.display()))?;
+        let prof = Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        prof.validate()?;
+        Ok(prof)
+    }
+
+    /// Parse the JSON emitted by python/compile/profile.py.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("profile json: {e}"))?;
+        let blocks = v
+            .get("blocks")?
+            .as_arr()?
+            .iter()
+            .map(|b| -> Result<BlockProfile> {
+                Ok(BlockProfile {
+                    n: b.get("n")?.as_usize()?,
+                    name: b.get("name")?.as_str()?.to_string(),
+                    flops: b.get("flops")?.as_f64()?,
+                    out_bits: b.get("out_bits")?.as_f64()?,
+                    out_shape: b.get("out_shape")?.usize_array()?,
+                    in_shape: b.get("in_shape")?.usize_array()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            model: v.get("model")?.as_str()?.to_string(),
+            resolution: v.get("resolution")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            n_blocks: v.get("n_blocks")?.as_usize()?,
+            input_shape: v.get("input_shape")?.usize_array()?,
+            input_bits: v.get("input_bits")?.as_f64()?,
+            blocks,
+        })
+    }
+
+    /// Analytic MobileNetV2 profile — same formulas as python/compile/profile.py.
+    pub fn mobilenet_v2(resolution: usize, num_classes: usize) -> Self {
+        let mut blocks = Vec::new();
+        let mut h = (resolution - 1) / 2 + 1;
+        // block 1: stem conv 3x3 s2 (as im2col matmul: 27 -> 32 per pixel)
+        let mut cin = STEM_CHANNELS;
+        blocks.push((
+            "stem".to_string(),
+            (2 * h * h * 27 * STEM_CHANNELS) as f64,
+            vec![h, h, STEM_CHANNELS],
+        ));
+        for (i, &(t, c, n, s)) in ARCH.iter().enumerate() {
+            let mut fl = 0usize;
+            for j in 0..n {
+                let stride = if j == 0 { s } else { 1 };
+                let cmid = cin * t;
+                if t != 1 {
+                    fl += 2 * h * h * cin * cmid; // expand 1x1
+                }
+                let ho = (h - 1) / stride + 1;
+                fl += 2 * ho * ho * 9 * cmid; // depthwise 3x3
+                fl += 2 * ho * ho * cmid * c; // project 1x1
+                if stride == 1 && cin == c {
+                    fl += ho * ho * c; // residual add
+                }
+                h = ho;
+                cin = c;
+            }
+            blocks.push((format!("stage{}", i + 1), fl as f64, vec![h, h, c]));
+        }
+        let mut head = 2 * h * h * cin * HEAD_CHANNELS;
+        head += h * h * HEAD_CHANNELS; // global average pool
+        head += 2 * HEAD_CHANNELS * num_classes; // classifier
+        blocks.push(("head".to_string(), head as f64, vec![num_classes]));
+
+        let mut out = Vec::new();
+        let mut in_shape = vec![resolution, resolution, 3];
+        for (i, (name, flops, shape)) in blocks.into_iter().enumerate() {
+            let elems: usize = shape.iter().product();
+            out.push(BlockProfile {
+                n: i + 1,
+                name,
+                flops,
+                out_bits: elems as f64 * BITS_PER_ELEM,
+                out_shape: shape.clone(),
+                in_shape: std::mem::replace(&mut in_shape, shape),
+            });
+        }
+        Self {
+            model: "mobilenetv2".into(),
+            resolution,
+            num_classes,
+            n_blocks: out.len(),
+            input_shape: vec![resolution, resolution, 3],
+            input_bits: (resolution * resolution * 3) as f64 * BITS_PER_ELEM,
+            blocks: out,
+        }
+    }
+
+    /// Default profile used throughout the evaluation (96x96, 1000 classes).
+    pub fn default_eval() -> Self {
+        Self::mobilenet_v2(96, 1000)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_blocks == self.blocks.len(), "n_blocks mismatch");
+        ensure!(self.n_blocks > 0, "empty model");
+        for (i, b) in self.blocks.iter().enumerate() {
+            ensure!(b.n == i + 1, "block numbering must be 1..N in order");
+            ensure!(b.flops > 0.0, "block {} has no workload", b.n);
+            ensure!(b.out_bits > 0.0, "block {} has no output", b.n);
+        }
+        Ok(())
+    }
+
+    /// Number of sub-tasks N.
+    pub fn n(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// A_n in FLOPs, n in 1..=N.
+    pub fn a(&self, n: usize) -> f64 {
+        self.blocks[n - 1].flops
+    }
+
+    /// O_n in bits, n in 0..=N (n=0 is the model input).
+    pub fn o(&self, n: usize) -> f64 {
+        if n == 0 {
+            self.input_bits
+        } else {
+            self.blocks[n - 1].out_bits
+        }
+    }
+
+    /// Prefix workload sum_{k=1..n} A_k (paper's v_n / u_n with g=q=1 folded
+    /// in by the device model).
+    pub fn prefix_work(&self, n: usize) -> f64 {
+        self.blocks[..n].iter().map(|b| b.flops).sum()
+    }
+
+    /// Suffix workload sum_{k=n+1..N} A_k.
+    pub fn suffix_work(&self, n: usize) -> f64 {
+        self.blocks[n..].iter().map(|b| b.flops).sum()
+    }
+
+    /// Total workload v_N.
+    pub fn total_work(&self) -> f64 {
+        self.prefix_work(self.n_blocks)
+    }
+}
+
+/// Precomputed prefix/suffix tables for the planner hot path: O(1) lookups
+/// for v_n, u_n and per-block suffix slices.
+#[derive(Debug, Clone)]
+pub struct WorkTables {
+    /// prefix[n] = sum_{k=1..n} A_k, prefix[0] = 0.
+    pub prefix: Vec<f64>,
+    /// o_bits[n] = O_n for n in 0..=N.
+    pub o_bits: Vec<f64>,
+    /// a[n-1] = A_n.
+    pub a: Vec<f64>,
+}
+
+impl WorkTables {
+    pub fn new(profile: &ModelProfile) -> Self {
+        let mut prefix = Vec::with_capacity(profile.n_blocks + 1);
+        prefix.push(0.0);
+        let mut acc = 0.0;
+        for b in &profile.blocks {
+            acc += b.flops;
+            prefix.push(acc);
+        }
+        let o_bits = (0..=profile.n_blocks).map(|n| profile.o(n)).collect();
+        Self {
+            prefix,
+            o_bits,
+            a: profile.blocks.iter().map(|b| b.flops).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.a.len()
+    }
+
+    #[inline]
+    pub fn prefix_work(&self, n: usize) -> f64 {
+        self.prefix[n]
+    }
+
+    #[inline]
+    pub fn suffix_work(&self, n: usize) -> f64 {
+        self.prefix[self.n()] - self.prefix[n]
+    }
+
+    #[inline]
+    pub fn o(&self, n: usize) -> f64 {
+        self.o_bits[n]
+    }
+
+    #[inline]
+    pub fn total_work(&self) -> f64 {
+        self.prefix[self.n()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_profile_magnitudes() {
+        let p = ModelProfile::mobilenet_v2(96, 1000);
+        assert_eq!(p.n_blocks, 9);
+        let total = p.total_work();
+        assert!(total > 3e7 && total < 3e8, "{total}");
+        // matches python profile.py output exactly (pinned):
+        assert_eq!(p.blocks[0].flops, 3_981_312.0);
+        assert_eq!(p.blocks[2].flops, 20_196_864.0);
+        assert_eq!(p.blocks[8].flops, 9_944_320.0);
+        assert_eq!(p.input_bits, (96 * 96 * 3 * 32) as f64);
+    }
+
+    #[test]
+    fn prefix_suffix_consistency() {
+        let p = ModelProfile::default_eval();
+        let t = WorkTables::new(&p);
+        for n in 0..=p.n() {
+            assert!((t.prefix_work(n) + t.suffix_work(n) - t.total_work()).abs() < 1.0);
+            assert!((p.prefix_work(n) - t.prefix_work(n)).abs() < 1e-6);
+            assert!((p.suffix_work(n) - t.suffix_work(n)).abs() < 1e-6);
+        }
+        assert_eq!(t.prefix_work(0), 0.0);
+    }
+
+    #[test]
+    fn o_indexing() {
+        let p = ModelProfile::default_eval();
+        assert_eq!(p.o(0), p.input_bits);
+        assert_eq!(p.o(9), 1000.0 * 32.0); // logits
+        let t = WorkTables::new(&p);
+        for n in 0..=9 {
+            assert_eq!(t.o(n), p.o(n));
+        }
+    }
+
+    #[test]
+    fn shapes_chain() {
+        let p = ModelProfile::default_eval();
+        for w in p.blocks.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        assert_eq!(p.blocks[0].in_shape, p.input_shape);
+    }
+
+    #[test]
+    fn validate_catches_misnumbering() {
+        let mut p = ModelProfile::default_eval();
+        p.blocks[3].n = 99;
+        assert!(p.validate().is_err());
+    }
+}

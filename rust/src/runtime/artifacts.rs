@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (block HLO files, parameter blobs, shapes, buckets).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub file: String,
+    pub sha256: String,
+    pub shapes: Vec<Vec<usize>>,
+    pub dtypes: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockEntry {
+    pub params: ParamInfo,
+    /// batch (as string key, serde_json) -> hlo filename
+    pub hlo: BTreeMap<String, String>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub resolution: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+    pub n_blocks: usize,
+    pub buckets: Vec<usize>,
+    pub blocks: BTreeMap<String, BlockEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut man = Self::from_json_str(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        man.dir = dir.to_path_buf();
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let mut blocks = BTreeMap::new();
+        for (key, blk) in v.get("blocks")?.as_obj()? {
+            let pj = blk.get("params")?;
+            let params = ParamInfo {
+                file: pj.get("file")?.as_str()?.to_string(),
+                sha256: pj.get("sha256")?.as_str()?.to_string(),
+                shapes: pj
+                    .get("shapes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.usize_array().map_err(|e| anyhow::anyhow!("{e}")))
+                    .collect::<Result<Vec<_>>>()?,
+                dtypes: pj
+                    .get("dtypes")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| Ok(d.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let hlo = blk
+                .get("hlo")?
+                .as_obj()?
+                .iter()
+                .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            blocks.insert(
+                key.clone(),
+                BlockEntry {
+                    params,
+                    hlo,
+                    in_shape: blk.get("in_shape")?.usize_array()?,
+                    out_shape: blk.get("out_shape")?.usize_array()?,
+                },
+            );
+        }
+        Ok(Self {
+            model: v.get("model")?.as_str()?.to_string(),
+            resolution: v.get("resolution")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            seed: v.get("seed")?.as_usize()? as u64,
+            n_blocks: v.get("n_blocks")?.as_usize()?,
+            buckets: v.get("buckets")?.usize_array()?,
+            blocks,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_blocks > 0, "empty manifest");
+        ensure!(!self.buckets.is_empty(), "no buckets");
+        for n in 1..=self.n_blocks {
+            let Some(blk) = self.blocks.get(&n.to_string()) else {
+                bail!("manifest missing block {n}");
+            };
+            for b in &self.buckets {
+                ensure!(
+                    blk.hlo.contains_key(&b.to_string()),
+                    "block {n} missing bucket {b}"
+                );
+            }
+            ensure!(
+                blk.params.shapes.len() == blk.params.dtypes.len(),
+                "block {n} param shape/dtype mismatch"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn block(&self, n: usize) -> &BlockEntry {
+        &self.blocks[&n.to_string()]
+    }
+
+    /// Smallest compiled bucket >= b (saturating at the largest).
+    pub fn bucket_for(&self, b: usize) -> usize {
+        *self
+            .buckets
+            .iter()
+            .find(|&&bk| bk >= b)
+            .unwrap_or(self.buckets.last().expect("non-empty"))
+    }
+
+    pub fn hlo_path(&self, n: usize, bucket: usize) -> PathBuf {
+        self.dir.join(&self.block(n).hlo[&bucket.to_string()])
+    }
+
+    /// Load the raw little-endian f32 parameter blob of block n, split into
+    /// per-leaf vectors following the manifest shapes.
+    pub fn load_params(&self, n: usize) -> Result<Vec<(Vec<usize>, Vec<f32>)>> {
+        let blk = self.block(n);
+        let path = self.dir.join(&blk.params.file);
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading params {}", path.display()))?;
+        let total: usize = blk.params.shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        ensure!(
+            raw.len() == total * 4,
+            "param blob size mismatch for block {n}: {} != {}",
+            raw.len(),
+            total * 4
+        );
+        let mut out = Vec::with_capacity(blk.params.shapes.len());
+        let mut off = 0usize;
+        for shape in &blk.params.shapes {
+            let count: usize = shape.iter().product();
+            let mut v = Vec::with_capacity(count);
+            for i in 0..count {
+                let s = off + i * 4;
+                v.push(f32::from_le_bytes([raw[s], raw[s + 1], raw[s + 2], raw[s + 3]]));
+            }
+            off += count * 4;
+            out.push((shape.clone(), v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.n_blocks, 9);
+        assert_eq!(man.buckets, vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(man.bucket_for(3), 4);
+        assert_eq!(man.bucket_for(1), 1);
+        assert_eq!(man.bucket_for(33), 32);
+        // params of block 1: bias (32) then stem conv weight (3,3,3,32)
+        // (jax tree_flatten sorts dict keys, so 'b' precedes 'w')
+        let params = man.load_params(1).unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].0, vec![32]);
+        assert_eq!(params[1].0, vec![3, 3, 3, 32]);
+        assert_eq!(params[1].1.len(), 864);
+    }
+}

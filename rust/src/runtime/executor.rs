@@ -1,0 +1,179 @@
+//! Block executor: compile-on-first-use cache of (block, bucket) HLO
+//! executables, device-resident parameter buffers, zero-pad batching.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use std::sync::Mutex;
+
+use super::artifacts::Manifest;
+
+/// A compiled (block, bucket) executable plus its device-resident params.
+struct BlockExe {
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameter buffers, already on device, in manifest leaf order.
+    params: Vec<xla::PjRtBuffer>,
+    in_elems_per_sample: usize,
+    out_elems_per_sample: usize,
+}
+
+/// Thread-safe runtime over the AOT artifacts.
+///
+/// `run_block(n, input, batch)` pads `batch` samples to the next compiled
+/// bucket, executes, and returns exactly `batch` samples of output.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(usize, usize), std::sync::Arc<BlockExe>>>,
+    /// Host-side param literals kept per block (uploaded once per bucket).
+    host_params: Mutex<HashMap<usize, std::sync::Arc<Vec<xla::Literal>>>>,
+}
+
+impl ModelRuntime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            host_params: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.manifest.n_blocks
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn host_params_for(&self, n: usize) -> Result<std::sync::Arc<Vec<xla::Literal>>> {
+        if let Some(p) = self.host_params.lock().unwrap().get(&n) {
+            return Ok(p.clone());
+        }
+        let leaves = self.manifest.load_params(n)?;
+        let mut lits = Vec::with_capacity(leaves.len());
+        for (shape, data) in leaves {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping param {:?} of block {n}", shape))?;
+            lits.push(lit);
+        }
+        let arc = std::sync::Arc::new(lits);
+        self.host_params.lock().unwrap().insert(n, arc.clone());
+        Ok(arc)
+    }
+
+    /// Compile (or fetch) the executable for block `n` at `bucket`.
+    fn block_exe(&self, n: usize, bucket: usize) -> Result<std::sync::Arc<BlockExe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&(n, bucket)) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(n, bucket);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().expect("utf8 path"))
+            .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling block {n} bucket {bucket}"))?;
+
+        // Upload parameters once for this executable.
+        let host = self.host_params_for(n)?;
+        let device = &self.client.devices()[0];
+        let mut params = Vec::with_capacity(host.len());
+        for lit in host.iter() {
+            params.push(self.client.buffer_from_host_literal(Some(device), lit)?);
+        }
+
+        let blk = self.manifest.block(n);
+        let entry = std::sync::Arc::new(BlockExe {
+            exe,
+            params,
+            in_elems_per_sample: blk.in_shape.iter().product(),
+            out_elems_per_sample: blk.out_shape.iter().product(),
+        });
+        self.cache.lock().unwrap().insert((n, bucket), entry.clone());
+        Ok(entry)
+    }
+
+    /// Pre-compile a set of (block, bucket) pairs (warm start for serving).
+    pub fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()> {
+        for &(n, b) in pairs {
+            self.block_exe(n, self.manifest.bucket_for(b))?;
+        }
+        Ok(())
+    }
+
+    /// Execute block `n` on `batch` samples (row-major NHWC flattened in
+    /// `input`). Pads to the compiled bucket with zeros and slices the
+    /// padding back off the output.
+    pub fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        ensure!(batch >= 1, "batch must be >= 1");
+        let bucket = self.manifest.bucket_for(batch);
+        let e = self.block_exe(n, bucket)?;
+        ensure!(
+            input.len() == batch * e.in_elems_per_sample,
+            "block {n}: input len {} != batch {batch} x {}",
+            input.len(),
+            e.in_elems_per_sample
+        );
+
+        // Zero-pad the batch to the bucket size.
+        let padded_len = bucket * e.in_elems_per_sample;
+        let mut padded;
+        let data: &[f32] = if batch == bucket {
+            input
+        } else {
+            padded = vec![0f32; padded_len];
+            padded[..input.len()].copy_from_slice(input);
+            &padded
+        };
+
+        let blk = self.manifest.block(n);
+        let mut dims: Vec<i64> = vec![bucket as i64];
+        dims.extend(blk.in_shape.iter().map(|&d| d as i64));
+        let x = xla::Literal::vec1(data).reshape(&dims)?;
+        let device = &self.client.devices()[0];
+        let x_buf = self.client.buffer_from_host_literal(Some(device), &x)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = e.params.iter().collect();
+        args.push(&x_buf);
+        let result = e.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let mut v = out.to_vec::<f32>()?;
+        v.truncate(batch * e.out_elems_per_sample);
+        Ok(v)
+    }
+
+    /// Execute the tail blocks ñ+1..N (the edge side of a partition plan).
+    pub fn run_tail(&self, n_from: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut act = input.to_vec();
+        for n in (n_from + 1)..=self.manifest.n_blocks {
+            act = self.run_block(n, &act, batch)?;
+        }
+        Ok(act)
+    }
+
+    /// Full model forward (used by tests and the local-compute stand-in).
+    pub fn run_full(&self, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.run_tail(0, input, batch)
+    }
+
+    /// Input element count per sample for block n+1 (i.e. activation at cut n).
+    pub fn elems_at_cut(&self, n: usize) -> usize {
+        if n == self.manifest.n_blocks {
+            self.manifest.block(n).out_shape.iter().product()
+        } else {
+            self.manifest.block(n + 1).in_shape.iter().product()
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO *text* (see aot.py for why), parsed with
+//! `HloModuleProto::from_text_file`, compiled once per (block, bucket) and
+//! cached.  Block parameters are uploaded to device once and executions use
+//! `execute_b` over device-resident buffers — only the activation crosses
+//! the host/device boundary per call.
+
+pub mod artifacts;
+pub mod executor;
+pub mod profiler;
+
+pub use artifacts::Manifest;
+pub use executor::ModelRuntime;

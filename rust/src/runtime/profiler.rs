@@ -1,0 +1,78 @@
+//! Edge profiler: measures per-(block, bucket) execution latency on the
+//! PJRT backend — the Fig. 3 data source and the `MeasuredEdge` builder.
+//!
+//! The measured wall latencies are interpreted as the edge accelerator
+//! running at the reference frequency f_ref = f_e,max; DVFS is then applied
+//! through the paper's own 1/f_e scaling law (Eq. 5).  See DESIGN.md
+//! §Hardware-Adaptation.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::energy::edge::MeasuredEdge;
+use crate::model::ModelProfile;
+use crate::runtime::ModelRuntime;
+
+/// Raw profiling table: latency_s[block-1][bucket_idx] (median of `reps`).
+#[derive(Debug, Clone)]
+pub struct EdgeProfile {
+    pub buckets: Vec<usize>,
+    pub latency_s: Vec<Vec<f64>>,
+}
+
+/// Measure every (block, bucket) pair. `reps` >= 3 recommended; the median
+/// is recorded to shed scheduler noise.
+pub fn profile_edge(rt: &ModelRuntime, reps: usize) -> Result<EdgeProfile> {
+    let man = rt.manifest();
+    let buckets = man.buckets.clone();
+    let mut latency_s = Vec::with_capacity(man.n_blocks);
+    for n in 1..=man.n_blocks {
+        let in_elems: usize = man.block(n).in_shape.iter().product();
+        let mut row = Vec::with_capacity(buckets.len());
+        for &b in &buckets {
+            let input = vec![0.1f32; b * in_elems];
+            // warmup compiles + caches
+            rt.run_block(n, &input, b)?;
+            let mut times: Vec<f64> = (0..reps.max(1))
+                .map(|_| {
+                    let t0 = Instant::now();
+                    rt.run_block(n, &input, b).expect("profiled block runs");
+                    t0.elapsed().as_secs_f64()
+                })
+                .collect();
+            times.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            row.push(times[times.len() / 2]);
+        }
+        latency_s.push(row);
+    }
+    Ok(EdgeProfile { buckets, latency_s })
+}
+
+impl EdgeProfile {
+    /// Interpret the measurements as the accelerator at f_ref = f_e,max and
+    /// build the planner's measured edge model.
+    pub fn into_measured_edge(
+        self,
+        cfg: &SystemConfig,
+        profile: &ModelProfile,
+    ) -> Result<MeasuredEdge> {
+        MeasuredEdge::new(
+            self.buckets,
+            self.latency_s,
+            cfg.f_edge_max_hz,
+            cfg,
+            profile,
+        )
+    }
+
+    /// Full-model latency per bucket (the Fig. 3a series).
+    pub fn full_model_latency(&self) -> Vec<(usize, f64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .map(|(j, &b)| (b, self.latency_s.iter().map(|row| row[j]).sum()))
+            .collect()
+    }
+}

@@ -1,0 +1,179 @@
+//! Experiment drivers that regenerate the paper's Fig. 4 / Fig. 5 series:
+//! pure planning over generated scenarios, reporting average energy per
+//! user for every algorithm in the roster.
+
+use crate::algo::baselines::roster;
+use crate::algo::grouping::optimal_grouping;
+use crate::algo::types::{GroupSolver, PlanningContext};
+use crate::sim::scenario::{identical_deadline_users, uniform_beta_users};
+use crate::util::rng::Rng;
+use crate::util::mean;
+
+/// One row of a figure: x-value plus (algorithm, avg energy/user) pairs.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub x: f64,
+    pub series: Vec<(String, f64)>,
+}
+
+/// Fig. 4: avg energy per user vs number of users, identical deadline beta.
+/// All algorithms plan a single group (identical deadlines — grouping is
+/// trivial) starting from a free GPU.
+pub fn fig4_identical_deadline(
+    ctx: &PlanningContext,
+    beta: f64,
+    user_counts: &[usize],
+) -> Vec<FigureRow> {
+    let algos = roster();
+    user_counts
+        .iter()
+        .map(|&m| {
+            let users = identical_deadline_users(ctx, m, beta);
+            let series = algos
+                .iter()
+                .map(|a| {
+                    let e = a
+                        .solve(ctx, &users, 0.0)
+                        .map(|p| p.energy_per_user())
+                        .unwrap_or(f64::NAN);
+                    (a.name().to_string(), e)
+                })
+                .collect();
+            FigureRow { x: m as f64, series }
+        })
+        .collect()
+}
+
+/// Fig. 5: avg energy per user vs beta range, different deadlines, OG outer
+/// grouping around every inner algorithm, averaged over `trials` seeds.
+pub fn fig5_different_deadlines(
+    ctx: &PlanningContext,
+    m: usize,
+    beta_ranges: &[(f64, f64)],
+    trials: usize,
+    seed0: u64,
+) -> Vec<FigureRow> {
+    let algos = roster();
+    beta_ranges
+        .iter()
+        .enumerate()
+        .map(|(ri, &range)| {
+            let mut per_algo: Vec<Vec<f64>> = vec![Vec::with_capacity(trials); algos.len()];
+            for t in 0..trials {
+                let mut rng = Rng::seed_from_u64(seed0 + (ri * trials + t) as u64);
+                let users = uniform_beta_users(ctx, m, range, &mut rng);
+                for (ai, a) in algos.iter().enumerate() {
+                    if let Some(gp) = optimal_grouping(ctx, &users, a.as_ref(), 0.0) {
+                        per_algo[ai].push(gp.energy_per_user());
+                    }
+                }
+            }
+            FigureRow {
+                x: range.1 - range.0, // plotted by range width (paper's x categories)
+                series: algos
+                    .iter()
+                    .zip(&per_algo)
+                    .map(|(a, es)| (a.name().to_string(), mean(es)))
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Headline numbers: max energy reduction of an algorithm vs LC across rows.
+pub fn max_reduction_vs_lc(rows: &[FigureRow], algo: &str) -> f64 {
+    rows.iter()
+        .filter_map(|r| {
+            let lc = r.series.iter().find(|(n, _)| n == "LC")?.1;
+            let a = r.series.iter().find(|(n, _)| n == algo)?.1;
+            if lc.is_finite() && a.is_finite() && lc > 0.0 {
+                Some(1.0 - a / lc)
+            } else {
+                None
+            }
+        })
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Generic solver-vs-solver scan used by the ablation example.
+pub fn compare_solvers(
+    ctx: &PlanningContext,
+    solvers: &[&dyn GroupSolver],
+    user_counts: &[usize],
+    beta: f64,
+) -> Vec<FigureRow> {
+    user_counts
+        .iter()
+        .map(|&m| {
+            let users = identical_deadline_users(ctx, m, beta);
+            FigureRow {
+                x: m as f64,
+                series: solvers
+                    .iter()
+                    .map(|s| {
+                        let e = s
+                            .solve(ctx, &users, 0.0)
+                            .map(|p| p.energy_per_user())
+                            .unwrap_or(f64::NAN);
+                        (s.name().to_string(), e)
+                    })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_jdob_best_and_lc_flat() {
+        let ctx = PlanningContext::default_analytic();
+        let rows = fig4_identical_deadline(&ctx, 30.25, &[1, 4, 8, 16]);
+        for r in &rows {
+            let get = |n: &str| r.series.iter().find(|(s, _)| s == n).unwrap().1;
+            let lc = get("LC");
+            let jdob = get("J-DOB");
+            assert!(jdob <= lc * (1.0 + 1e-9), "J-DOB beats LC at M={}", r.x);
+            assert!(get("J-DOB w/o edge DVFS") >= jdob - 1e-12);
+            assert!(get("J-DOB binary") >= jdob - 1e-12);
+        }
+        // LC per-user energy is independent of M
+        let lc0 = rows[0].series.iter().find(|(s, _)| s == "LC").unwrap().1;
+        for r in &rows {
+            let lc = r.series.iter().find(|(s, _)| s == "LC").unwrap().1;
+            assert!((lc - lc0).abs() / lc0 < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fig4_savings_grow_with_m() {
+        let ctx = PlanningContext::default_analytic();
+        let rows = fig4_identical_deadline(&ctx, 30.25, &[1, 8, 24]);
+        let red: Vec<f64> = rows
+            .iter()
+            .map(|r| {
+                let get = |n: &str| r.series.iter().find(|(s, _)| s == n).unwrap().1;
+                1.0 - get("J-DOB") / get("LC")
+            })
+            .collect();
+        assert!(red[2] >= red[0] - 1e-9, "batching should help more at larger M: {red:?}");
+    }
+
+    #[test]
+    fn fig5_small_run_is_deterministic() {
+        let ctx = PlanningContext::default_analytic();
+        let a = fig5_different_deadlines(&ctx, 4, &[(2.0, 8.0)], 2, 99);
+        let b = fig5_different_deadlines(&ctx, 4, &[(2.0, 8.0)], 2, 99);
+        assert_eq!(a[0].series, b[0].series);
+    }
+
+    #[test]
+    fn headline_reduction_positive() {
+        let ctx = PlanningContext::default_analytic();
+        let rows = fig4_identical_deadline(&ctx, 30.25, &[1, 2, 4, 8, 16, 24, 30]);
+        let red = max_reduction_vs_lc(&rows, "J-DOB");
+        assert!(red > 0.2, "expected sizable savings, got {red:.3}");
+    }
+}

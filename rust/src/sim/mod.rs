@@ -1,0 +1,8 @@
+//! Scenario generation and pure-planning experiment drivers (the paper's
+//! evaluation is planning-level: energy of the chosen strategies).
+
+pub mod experiments;
+pub mod online;
+pub mod scenario;
+
+pub use scenario::{identical_deadline_users, uniform_beta_users};

@@ -1,0 +1,261 @@
+//! Online scenario (the paper's stated future work, §V): requests arrive
+//! over time (Poisson), the coordinator admits them in windows, plans each
+//! window with any [`GroupSolver`] given the GPU-busy horizon carried over
+//! from previous windows, and accounts energy and deadline compliance in
+//! virtual time — no request-path execution, pure planning-level simulation
+//! (the serving engine covers the executed path).
+
+use crate::algo::grouping::optimal_grouping;
+use crate::algo::types::{GroupSolver, PlanningContext, User};
+use crate::energy::device::DeviceModel;
+use crate::util::rng::Rng;
+
+/// A request in virtual time.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub user: User,
+    /// Virtual arrival time (s).
+    pub at: f64,
+    /// Absolute deadline = at + relative deadline.
+    pub absolute_deadline: f64,
+}
+
+/// Poisson arrival generator: exponential inter-arrival times at `rate_hz`,
+/// per-request beta ~ U[range].
+pub fn poisson_arrivals(
+    ctx: &PlanningContext,
+    rate_hz: f64,
+    horizon_s: f64,
+    beta_range: (f64, f64),
+    rng: &mut Rng,
+) -> Vec<Arrival> {
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0;
+    loop {
+        // exponential inter-arrival: -ln(U)/rate
+        t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+        if t >= horizon_s {
+            break;
+        }
+        let beta = rng.gen_range(beta_range.0, beta_range.1.max(beta_range.0 + 1e-12));
+        let deadline = User::deadline_from_beta(beta, &dev, total);
+        out.push(Arrival {
+            user: User {
+                id,
+                deadline,
+                dev: dev.clone(),
+            },
+            at: t,
+            absolute_deadline: t + deadline,
+        });
+        id += 1;
+    }
+    out
+}
+
+/// Outcome of an online run.
+#[derive(Debug, Default, Clone)]
+pub struct OnlineStats {
+    pub served: usize,
+    pub deadline_hits: usize,
+    pub total_energy_j: f64,
+    pub offloaded: usize,
+    pub windows: usize,
+    /// Mean modeled latency (s).
+    pub mean_latency_s: f64,
+}
+
+impl OnlineStats {
+    pub fn energy_per_user(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_energy_j / self.served as f64
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.served as f64
+        }
+    }
+}
+
+/// Windowed online coordinator in virtual time.
+///
+/// Every `window_s` the pending arrivals are admitted as one batch-planning
+/// problem: deadlines become relative to the window close, the GPU-busy
+/// horizon is carried between windows, and the chosen solver (J-DOB by
+/// default) plans through the OG grouping.  Requests whose deadline cannot
+/// survive the window wait are admitted immediately in a solo window —
+/// a simple earliest-deadline guard.
+pub fn run_online(
+    ctx: &PlanningContext,
+    arrivals: &[Arrival],
+    solver: &dyn GroupSolver,
+    window_s: f64,
+) -> OnlineStats {
+    let mut stats = OnlineStats::default();
+    let mut t_free = 0.0f64;
+    let mut latencies = Vec::new();
+
+    let mut i = 0usize;
+    while i < arrivals.len() {
+        // window [w0, w0 + window_s): admit everything arriving inside
+        let w0 = arrivals[i].at;
+        let close = w0 + window_s;
+        let mut window: Vec<&Arrival> = Vec::new();
+        while i < arrivals.len() && arrivals[i].at < close {
+            window.push(&arrivals[i]);
+            i += 1;
+        }
+        stats.windows += 1;
+
+        // plan at the window close, deadlines relative to `close`;
+        // the GPU horizon carries over, also relative to `close`
+        let rel_t_free = (t_free - close).max(0.0);
+
+        // Split into GPU-eligible users (premise: remaining deadline clears
+        // the busy horizon) and local fallbacks (served on-device at their
+        // deadline-optimal frequency — they never touch the GPU).
+        let mut eligible: Vec<User> = Vec::new();
+        for a in &window {
+            let rel_deadline = a.absolute_deadline - close;
+            if rel_deadline > rel_t_free && rel_deadline > 0.0 {
+                eligible.push(User {
+                    id: a.user.id,
+                    deadline: rel_deadline,
+                    dev: a.user.dev.clone(),
+                });
+            }
+        }
+        let eligible_ids: Vec<usize> = eligible.iter().map(|u| u.id).collect();
+
+        let plan = if eligible.is_empty() {
+            None
+        } else {
+            optimal_grouping(ctx, &eligible, solver, rel_t_free)
+        };
+
+        if let Some(gp) = &plan {
+            stats.total_energy_j += gp.total_energy;
+            t_free = close + gp.t_free_end;
+            for (members, p) in &gp.groups {
+                for &uidx in members {
+                    let up = p.users.iter().find(|u| u.id == eligible[uidx].id).expect("planned");
+                    stats.served += 1;
+                    stats.offloaded += up.offloaded as usize;
+                    let abs_finish = close + up.finish_time;
+                    let arr = window.iter().find(|a| a.user.id == eligible[uidx].id).unwrap();
+                    if abs_finish <= arr.absolute_deadline + 1e-9 {
+                        stats.deadline_hits += 1;
+                    }
+                    latencies.push(abs_finish - arr.at);
+                }
+            }
+        }
+
+        // local fallback for everyone not covered by the plan
+        for a in &window {
+            let in_plan = plan.is_some() && eligible_ids.contains(&a.user.id);
+            if in_plan {
+                continue;
+            }
+            stats.served += 1;
+            let total_work = ctx.tables.total_work();
+            let remaining = a.absolute_deadline - close;
+            let f = a
+                .user
+                .dev
+                .freq_for_deadline(total_work, remaining)
+                .unwrap_or(a.user.dev.f_max);
+            let finish = close + a.user.dev.compute_latency(total_work, f);
+            if finish <= a.absolute_deadline + 1e-9 {
+                stats.deadline_hits += 1;
+            }
+            stats.total_energy_j += a.user.dev.compute_energy(total_work, f);
+            latencies.push(finish - a.at);
+        }
+    }
+    stats.mean_latency_s = crate::util::mean(&latencies);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::baselines::LocalComputing;
+    use crate::algo::jdob::JDob;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(5);
+        let arr = poisson_arrivals(&c, 50.0, 10.0, (5.0, 10.0), &mut rng);
+        // E[count] = 500; allow wide tolerance
+        assert!(arr.len() > 350 && arr.len() < 650, "{}", arr.len());
+        // strictly increasing times
+        for w in arr.windows(2) {
+            assert!(w[1].at > w[0].at);
+        }
+    }
+
+    #[test]
+    fn online_jdob_beats_online_lc() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(11);
+        let arr = poisson_arrivals(&c, 40.0, 5.0, (8.0, 20.0), &mut rng);
+        let jd = run_online(&c, &arr, &JDob::full(), 0.05);
+        let lc = run_online(&c, &arr, &LocalComputing, 0.05);
+        assert_eq!(jd.served, arr.len());
+        assert_eq!(lc.served, arr.len());
+        assert!(
+            jd.total_energy_j < lc.total_energy_j,
+            "online J-DOB {} !< LC {}",
+            jd.total_energy_j,
+            lc.total_energy_j
+        );
+        // loose deadlines: high hit rates for both
+        assert!(jd.hit_rate() > 0.95, "{}", jd.hit_rate());
+        assert!(lc.hit_rate() > 0.95);
+    }
+
+    #[test]
+    fn online_is_deterministic_per_seed() {
+        let c = ctx();
+        let mk = || {
+            let mut rng = Rng::seed_from_u64(3);
+            poisson_arrivals(&c, 30.0, 3.0, (5.0, 15.0), &mut rng)
+        };
+        let a = run_online(&c, &mk(), &JDob::full(), 0.1);
+        let b = run_online(&c, &mk(), &JDob::full(), 0.1);
+        assert_eq!(a.served, b.served);
+        assert!((a.total_energy_j - b.total_energy_j).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tighter_windows_trade_batching_for_latency() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(21);
+        let arr = poisson_arrivals(&c, 60.0, 5.0, (10.0, 25.0), &mut rng);
+        let wide = run_online(&c, &arr, &JDob::full(), 0.25);
+        let narrow = run_online(&c, &arr, &JDob::full(), 0.01);
+        // wider admission windows -> bigger batches -> lower energy
+        assert!(
+            wide.total_energy_j <= narrow.total_energy_j * 1.05,
+            "wide {} vs narrow {}",
+            wide.total_energy_j,
+            narrow.total_energy_j
+        );
+        assert!(wide.windows < narrow.windows);
+    }
+}

@@ -1,0 +1,123 @@
+//! Scenario generators matching the paper's experiment setup (§IV):
+//! homogeneous Table-I devices; deadlines via the tightness parameter
+//! beta_m = T_m / (min local latency) - 1, either identical (Fig. 4) or
+//! i.i.d. uniform over a range (Fig. 5).
+
+use crate::algo::types::{PlanningContext, User};
+use crate::energy::device::DeviceModel;
+use crate::util::rng::Rng;
+
+/// M users with the same beta (Fig. 4 scenarios: beta = 2.13 / 30.25).
+pub fn identical_deadline_users(ctx: &PlanningContext, m: usize, beta: f64) -> Vec<User> {
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    (0..m)
+        .map(|id| User {
+            id,
+            deadline: User::deadline_from_beta(beta, &dev, total),
+            dev: dev.clone(),
+        })
+        .collect()
+}
+
+/// M users with beta ~ U[lo, hi] (Fig. 5 scenarios: [4.5,5.5], [2,8], [0,10]).
+pub fn uniform_beta_users(
+    ctx: &PlanningContext,
+    m: usize,
+    beta_range: (f64, f64),
+    rng: &mut Rng,
+) -> Vec<User> {
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    (0..m)
+        .map(|id| {
+            let beta = if beta_range.0 == beta_range.1 {
+                beta_range.0
+            } else {
+                rng.gen_range(beta_range.0, beta_range.1)
+            };
+            User {
+                id,
+                deadline: User::deadline_from_beta(beta, &dev, total),
+                dev: dev.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Heterogeneous-device variant (extension beyond the paper's Table I):
+/// per-user rate and capacitance jitter, for robustness experiments.
+pub fn heterogeneous_users(
+    ctx: &PlanningContext,
+    m: usize,
+    beta_range: (f64, f64),
+    rng: &mut Rng,
+) -> Vec<User> {
+    let base = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    (0..m)
+        .map(|id| {
+            let mut dev = base.clone();
+            dev.rate_bps *= rng.gen_range(0.5, 2.0);
+            dev.kappa *= rng.gen_range(0.7, 1.3);
+            let beta = rng.gen_range(beta_range.0, beta_range.1.max(beta_range.0 + 1e-9));
+            User {
+                id,
+                deadline: User::deadline_from_beta(beta, &dev, total),
+                dev,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_deadlines_identical() {
+        let ctx = PlanningContext::default_analytic();
+        let users = identical_deadline_users(&ctx, 5, 2.13);
+        assert_eq!(users.len(), 5);
+        for u in &users {
+            assert_eq!(u.deadline, users[0].deadline);
+            assert!((u.beta(ctx.tables.total_work()) - 2.13).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uniform_beta_within_range() {
+        let ctx = PlanningContext::default_analytic();
+        let mut rng = Rng::seed_from_u64(42);
+        let users = uniform_beta_users(&ctx, 50, (2.0, 8.0), &mut rng);
+        let total = ctx.tables.total_work();
+        for u in &users {
+            let b = u.beta(total);
+            assert!(b >= 2.0 - 1e-9 && b <= 8.0 + 1e-9, "{b}");
+        }
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let ctx = PlanningContext::default_analytic();
+        let mut r1 = Rng::seed_from_u64(7);
+        let mut r2 = Rng::seed_from_u64(7);
+        let a = uniform_beta_users(&ctx, 10, (0.0, 10.0), &mut r1);
+        let b = uniform_beta_users(&ctx, 10, (0.0, 10.0), &mut r2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.deadline, y.deadline);
+        }
+    }
+
+    #[test]
+    fn all_users_lc_feasible() {
+        // the paper's premise: every user can finish locally by its deadline
+        let ctx = PlanningContext::default_analytic();
+        let mut rng = Rng::seed_from_u64(1);
+        let users = uniform_beta_users(&ctx, 30, (0.0, 10.0), &mut rng);
+        let total = ctx.tables.total_work();
+        for u in &users {
+            assert!(u.dev.min_latency(total) <= u.deadline + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations, reports mean / p50 / p95 / min per iteration, and a
+//! `black_box` to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iterations, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` after `warmup` iterations; one sample
+/// per call. Caps iterations at `max_iters` for expensive bodies.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    if samples.is_empty() {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    samples.sort();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iterations: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        min: samples[0],
+    }
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, Duration::from_millis(20), 10_000, || {
+            count += 1;
+            black_box(count);
+        });
+        assert!(r.iterations >= 1);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(count >= r.iterations);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny argument parser: `prog <subcommand> [--key value] [--flag]`.
+//! In-tree replacement for clap (unavailable offline).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]). `flag_names` lists boolean flags that
+    /// take no value; any other `--key` consumes the next token.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let (key, inline) = match key.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (key, None),
+                };
+                if flag_names.contains(&key) {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    out.flags.push(key.to_string());
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .with_context(|| format!("--{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    out.options.insert(key.to_string(), val);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{name}: bad entry {s:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["fig4", "--beta", "2.13", "--verbose", "--out=x.csv"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.get_f64("beta", 0.0).unwrap(), 2.13);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["x", "--beta"]), &[]).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["x", "--users", "1, 2,4"]), &[]).unwrap();
+        assert_eq!(a.get_usize_list("users", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("other", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["x"]), &[]).unwrap();
+        assert_eq!(a.get_f64("beta", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.get_str("s", "d"), "d");
+        assert!(!a.flag("v"));
+    }
+}

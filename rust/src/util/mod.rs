@@ -1,0 +1,87 @@
+//! Shared numeric helpers and unit conventions — plus the in-tree
+//! replacements for crates unavailable in this offline environment:
+//! [`json`] (parser/serializer), [`toml_lite`] (flat TOML subset),
+//! [`rng`] (xoshiro256++), [`cli`] (argument parsing) and [`benchkit`]
+//! (micro-benchmark harness used by `rust/benches/*`).
+//!
+//! All quantities are SI: frequencies in Hz, time in seconds, energy in
+//! joules, data in bits, computational workload in FLOPs.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml_lite;
+
+/// Absolute slack used when comparing latencies/deadlines, to absorb f64
+/// round-off in the closed forms (Eq. 19-22). One nanosecond.
+pub const TIME_EPS: f64 = 1e-9;
+
+/// Relative tolerance for energy comparisons in tests/assertions.
+pub const REL_EPS: f64 = 1e-9;
+
+pub const GHZ: f64 = 1e9;
+pub const MHZ: f64 = 1e6;
+
+/// `a <= b` up to [`TIME_EPS`].
+#[inline]
+pub fn le_eps(a: f64, b: f64) -> bool {
+    a <= b + TIME_EPS
+}
+
+/// Clamp `x` into `[lo, hi]` (both inclusive); `lo <= hi` is debug-asserted.
+#[inline]
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    debug_assert!(lo <= hi, "clamp: lo {lo} > hi {hi}");
+    x.max(lo).min(hi)
+}
+
+/// Shannon rate `W * log2(1 + SNR)` in bit/s, SNR given in dB.
+#[inline]
+pub fn shannon_rate_bps(bandwidth_hz: f64, snr_db: f64) -> f64 {
+    bandwidth_hz * (1.0 + 10f64.powf(snr_db / 10.0)).log2()
+}
+
+/// Mean of a slice (0.0 for empty — callers guard).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shannon_rate_matches_table1() {
+        // Table I: W = 10 MHz, SNR = 30 dB => R ~ 99.67 Mbit/s
+        let r = shannon_rate_bps(10.0 * MHZ, 30.0);
+        assert!((r - 99.67e6).abs() < 0.1e6, "{r}");
+    }
+
+    #[test]
+    fn clamp_basics() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+}

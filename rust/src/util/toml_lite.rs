@@ -1,0 +1,156 @@
+//! Flat TOML subset parser for scenario config files — `key = value` pairs,
+//! comments, one optional `[table]` header (ignored), values: f64, bool,
+//! string, arrays of integers.  Covers everything `SystemConfig` needs; a
+//! full TOML crate is unavailable offline.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Num(f64),
+    Bool(bool),
+    Str(String),
+    IntArray(Vec<usize>),
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum TomlError {
+    #[error("line {0}: missing '='")]
+    MissingEq(usize),
+    #[error("line {0}: bad value {1:?}")]
+    BadValue(usize, String),
+    #[error("line {0}: duplicate key {1:?}")]
+    Duplicate(usize, String),
+}
+
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(TomlError::MissingEq(lineno + 1));
+        };
+        let key = line[..eq].trim().to_string();
+        let val = line[eq + 1..].trim();
+        let parsed = parse_value(val).ok_or_else(|| TomlError::BadValue(lineno + 1, val.into()))?;
+        if out.insert(key.clone(), parsed).is_some() {
+            return Err(TomlError::Duplicate(lineno + 1, key));
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if v == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Some(TomlValue::Str(v[1..v.len() - 1].to_string()));
+    }
+    if v.starts_with('[') && v.ends_with(']') {
+        let inner = &v[1..v.len() - 1];
+        let mut xs = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            xs.push(p.parse::<usize>().ok()?);
+        }
+        return Some(TomlValue::IntArray(xs));
+    }
+    // numbers, allowing 1_000 separators and scientific notation
+    v.replace('_', "").parse::<f64>().ok().map(TomlValue::Num)
+}
+
+/// Serialize a flat map back to TOML (sorted keys — deterministic).
+pub fn to_string(map: &BTreeMap<String, TomlValue>) -> String {
+    let mut s = String::new();
+    for (k, v) in map {
+        match v {
+            TomlValue::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    s.push_str(&format!("{k} = {}\n", *x as i64));
+                } else {
+                    s.push_str(&format!("{k} = {x}\n"));
+                }
+            }
+            TomlValue::Bool(b) => s.push_str(&format!("{k} = {b}\n")),
+            TomlValue::Str(t) => s.push_str(&format!("{k} = \"{t}\"\n")),
+            TomlValue::IntArray(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+                s.push_str(&format!("{k} = [{}]\n", inner.join(", ")));
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# scenario override
+[system]
+snr_db = 30.0          # Table I
+bandwidth_hz = 1e7
+p_tx_w = 1
+buckets = [1, 2, 4, 8]
+name = "custom"
+edge_dvfs = true
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["snr_db"], TomlValue::Num(30.0));
+        assert_eq!(m["bandwidth_hz"], TomlValue::Num(1e7));
+        assert_eq!(m["buckets"], TomlValue::IntArray(vec![1, 2, 4, 8]));
+        assert_eq!(m["name"], TomlValue::Str("custom".into()));
+        assert_eq!(m["edge_dvfs"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = what").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), TomlValue::Num(1.5));
+        m.insert("b".into(), TomlValue::IntArray(vec![1, 32]));
+        m.insert("c".into(), TomlValue::Str("s".into()));
+        let text = to_string(&m);
+        assert_eq!(parse(&text).unwrap(), m);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let m = parse("k = \"a#b\"").unwrap();
+        assert_eq!(m["k"], TomlValue::Str("a#b".into()));
+    }
+}

@@ -1,0 +1,62 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the integration test suites.
+
+use std::path::PathBuf;
+
+use jdob::algo::types::{PlanningContext, User};
+use jdob::energy::device::DeviceModel;
+use jdob::util::rng::Rng;
+
+pub fn ctx() -> PlanningContext {
+    PlanningContext::default_analytic()
+}
+
+/// Users with the given betas, homogeneous Table-I devices.
+pub fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
+    betas
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let dev = DeviceModel::from_config(&ctx.cfg);
+            let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
+            User {
+                id: i,
+                deadline: t,
+                dev,
+            }
+        })
+        .collect()
+}
+
+/// Heterogeneous users: randomized rate/kappa plus beta in the range.
+pub fn random_users(
+    ctx: &PlanningContext,
+    m: usize,
+    beta_range: (f64, f64),
+    rng: &mut Rng,
+) -> Vec<User> {
+    let base = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    (0..m)
+        .map(|id| {
+            let mut dev = base.clone();
+            dev.rate_bps *= rng.gen_range(0.5, 2.0);
+            dev.kappa *= rng.gen_range(0.7, 1.3);
+            let beta = rng.gen_range(beta_range.0, beta_range.1.max(beta_range.0 + 1e-12));
+            User {
+                id,
+                deadline: User::deadline_from_beta(beta, &dev, total),
+                dev,
+            }
+        })
+        .collect()
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn artifacts_present() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

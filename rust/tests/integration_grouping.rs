@@ -1,0 +1,120 @@
+//! OG grouping integration: DP vs exhaustive, multi-solver, t_free
+//! cascades, and the Fig. 5 scenario shapes.
+
+mod common;
+
+use common::{ctx, random_users, users_beta};
+use jdob::algo::baselines::{IpSsa, LocalComputing};
+use jdob::algo::grouping::{exhaustive_grouping, optimal_grouping};
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::GroupSolver;
+use jdob::algo::validate::validate_plan;
+use jdob::sim::experiments::{fig5_different_deadlines, max_reduction_vs_lc};
+use jdob::util::rng::Rng;
+
+#[test]
+fn dp_equals_exhaustive_for_every_solver() {
+    let c = ctx();
+    let solvers: Vec<Box<dyn GroupSolver>> = vec![
+        Box::new(JDob::full()),
+        Box::new(JDob::without_edge_dvfs()),
+        Box::new(LocalComputing),
+        Box::new(IpSsa),
+    ];
+    let mut rng = Rng::seed_from_u64(31337);
+    for trial in 0..4 {
+        let users = random_users(&c, 6, (0.2, 10.0), &mut rng);
+        for solver in &solvers {
+            let dp = optimal_grouping(&c, &users, solver.as_ref(), 0.0);
+            let ex = exhaustive_grouping(&c, &users, solver.as_ref(), 0.0);
+            match (dp, ex) {
+                (Some(d), Some(e)) => {
+                    let gap = (d.total_energy - e.total_energy).abs() / e.total_energy;
+                    assert!(
+                        gap < 1e-9,
+                        "trial {trial} solver {}: dp {} vs ex {}",
+                        solver.name(),
+                        d.total_energy,
+                        e.total_energy
+                    );
+                }
+                (None, None) => {}
+                (d, e) => panic!(
+                    "trial {trial} solver {}: dp {:?} ex {:?} disagree on feasibility",
+                    solver.name(),
+                    d.map(|p| p.total_energy),
+                    e.map(|p| p.total_energy)
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn every_group_plan_validates_with_cascading_tfree() {
+    let c = ctx();
+    let mut rng = Rng::seed_from_u64(5);
+    for _ in 0..5 {
+        let users = random_users(&c, 8, (0.0, 10.0), &mut rng);
+        let gp = optimal_grouping(&c, &users, &JDob::full(), 0.0).expect("feasible");
+        let mut t_free = 0.0;
+        for (members, plan) in &gp.groups {
+            let group: Vec<_> = members.iter().map(|&i| users[i].clone()).collect();
+            validate_plan(&c, &group, plan, t_free).unwrap();
+            t_free = plan.t_free_end;
+        }
+    }
+}
+
+#[test]
+fn similar_deadlines_group_together() {
+    // two tight + two loose users: the loose pair should not be forced
+    // into the tight pair's batch window when splitting is cheaper
+    let c = ctx();
+    let users = users_beta(&[1.0, 1.02, 25.0, 25.5], &c);
+    let gp = optimal_grouping(&c, &users, &JDob::full(), 0.0).unwrap();
+    // whatever the split, energy must beat the single-group alternative
+    if let Some(single) = GroupSolver::solve(&JDob::full(), &c, &users, 0.0) {
+        assert!(gp.total_energy <= single.total_energy * (1.0 + 1e-9));
+    }
+}
+
+#[test]
+fn fig5_shape_jdob_wins_and_wider_ranges_cost_more_for_lc() {
+    let c = ctx();
+    let ranges = [(4.5, 5.5), (2.0, 8.0), (0.0, 10.0)];
+    let rows = fig5_different_deadlines(&c, 6, &ranges, 5, 0xFEED);
+    for row in &rows {
+        let get = |n: &str| row.series.iter().find(|(s, _)| s == n).unwrap().1;
+        assert!(get("J-DOB") <= get("LC") * (1.0 + 1e-9));
+        assert!(get("J-DOB") <= get("IP-SSA") * (1.0 + 1e-9));
+        assert!(get("J-DOB") <= get("J-DOB w/o edge DVFS") * (1.0 + 1e-9));
+        assert!(get("J-DOB") <= get("J-DOB binary") * (1.0 + 1e-9));
+    }
+    let red = max_reduction_vs_lc(&rows, "J-DOB");
+    assert!(red > 0.25, "different-deadline reduction {red:.3}");
+}
+
+#[test]
+fn grouping_handles_single_user() {
+    let c = ctx();
+    let users = users_beta(&[3.0], &c);
+    let gp = optimal_grouping(&c, &users, &JDob::full(), 0.0).unwrap();
+    assert_eq!(gp.groups.len(), 1);
+    assert_eq!(gp.groups[0].0, vec![0]);
+}
+
+#[test]
+fn grouping_respects_initial_busy_gpu() {
+    let c = ctx();
+    let users = users_beta(&[2.0, 6.0, 12.0], &c);
+    let t0 = users[0].deadline * 0.5;
+    let gp = optimal_grouping(&c, &users, &JDob::full(), t0).unwrap();
+    assert!(gp.t_free_end >= t0 - 1e-12);
+    let mut t_free = t0;
+    for (members, plan) in &gp.groups {
+        let group: Vec<_> = members.iter().map(|&i| users[i].clone()).collect();
+        validate_plan(&c, &group, plan, t_free).unwrap();
+        t_free = plan.t_free_end;
+    }
+}

@@ -1,0 +1,130 @@
+//! Runtime integration over the real AOT artifacts: HLO load/compile,
+//! numerics vs the python golden vector, batching semantics.
+//!
+//! Tests are skipped (pass trivially with a notice) when artifacts are
+//! missing — run `make artifacts` first.  All tests share one PJRT client
+//! via a single #[test] entry per concern to avoid client churn.
+
+mod common;
+
+use common::{artifacts_dir, artifacts_present};
+use jdob::runtime::ModelRuntime;
+
+fn rt() -> Option<ModelRuntime> {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ModelRuntime::new(&artifacts_dir()).expect("runtime"))
+}
+
+fn read_f32(path: &std::path::Path) -> Vec<f32> {
+    let raw = std::fs::read(path).expect("golden file");
+    raw.chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+#[test]
+fn golden_logits_match_python_reference() {
+    let Some(rt) = rt() else { return };
+    let dir = artifacts_dir();
+    let input = read_f32(&dir.join("golden_input.bin"));
+    let want = read_f32(&dir.join("golden_logits.bin"));
+    let got = rt.run_full(&input, 2).expect("full forward");
+    assert_eq!(got.len(), want.len());
+    let mut max_abs = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_abs = max_abs.max((g - w).abs());
+    }
+    // python ref (pure jnp, f32) vs pallas-lowered HLO on PJRT CPU
+    assert!(max_abs < 1e-3, "max |diff| = {max_abs}");
+}
+
+#[test]
+fn batch_padding_is_lossless() {
+    // batch 3 pads to bucket 4: results must equal unpadded per-sample runs
+    let Some(rt) = rt() else { return };
+    let man = rt.manifest();
+    let in_elems: usize = man.block(1).in_shape.iter().product();
+    let input: Vec<f32> = (0..3 * in_elems).map(|i| ((i % 97) as f32) / 97.0 - 0.5).collect();
+    let batched = rt.run_block(1, &input, 3).unwrap();
+    let out_elems: usize = man.block(1).out_shape.iter().product();
+    assert_eq!(batched.len(), 3 * out_elems);
+    for s in 0..3 {
+        let single = rt
+            .run_block(1, &input[s * in_elems..(s + 1) * in_elems], 1)
+            .unwrap();
+        let b = &batched[s * out_elems..(s + 1) * out_elems];
+        let max = single
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max < 1e-4, "sample {s}: max diff {max}");
+    }
+}
+
+#[test]
+fn tail_equals_chained_blocks() {
+    let Some(rt) = rt() else { return };
+    let man = rt.manifest();
+    let cut = 4usize;
+    let elems: usize = man.block(cut + 1).in_shape.iter().product();
+    let act: Vec<f32> = (0..elems).map(|i| ((i % 31) as f32) / 31.0).collect();
+    let tail = rt.run_tail(cut, &act, 1).unwrap();
+    let mut chained = act.clone();
+    for n in (cut + 1)..=man.n_blocks {
+        chained = rt.run_block(n, &chained, 1).unwrap();
+    }
+    assert_eq!(tail.len(), chained.len());
+    let max = tail
+        .iter()
+        .zip(&chained)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max == 0.0, "tail vs chained diff {max}"); // identical code path
+}
+
+#[test]
+fn split_invariance_on_runtime() {
+    // running prefix locally then tail "at the edge" must equal run_full,
+    // for every partition point — the co-inference correctness property.
+    let Some(rt) = rt() else { return };
+    let man = rt.manifest();
+    let in_elems: usize = man.block(1).in_shape.iter().product();
+    let input: Vec<f32> = (0..in_elems).map(|i| ((i % 53) as f32) / 53.0 - 0.5).collect();
+    let full = rt.run_full(&input, 1).unwrap();
+    for cut in [0usize, 1, 4, 8] {
+        let mut act = input.clone();
+        for n in 1..=cut {
+            act = rt.run_block(n, &act, 1).unwrap();
+        }
+        let out = rt.run_tail(cut, &act, 1).unwrap();
+        let max = full
+            .iter()
+            .zip(&out)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max < 1e-4, "cut {cut}: diff {max}");
+    }
+}
+
+#[test]
+fn rejects_wrong_input_shape() {
+    let Some(rt) = rt() else { return };
+    let err = rt.run_block(1, &[0.0; 7], 1);
+    assert!(err.is_err());
+}
+
+#[test]
+fn warmup_compiles_without_error() {
+    let Some(rt) = rt() else { return };
+    rt.warmup(&[(9, 1), (9, 2)]).unwrap();
+    // cached path executes fine afterwards
+    let man = rt.manifest();
+    let elems: usize = man.block(9).in_shape.iter().product();
+    let out = rt.run_block(9, &vec![0.5; elems], 1).unwrap();
+    assert_eq!(out.len(), man.num_classes);
+    assert!(out.iter().all(|x| x.is_finite()));
+}

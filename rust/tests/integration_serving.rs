@@ -1,0 +1,147 @@
+//! Serving integration: the engine + server thread over real artifacts.
+//! Skips (with a notice) when artifacts are missing.
+
+mod common;
+
+use std::time::Duration;
+
+use common::{artifacts_dir, artifacts_present, ctx};
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::User;
+use jdob::coordinator::engine::ServingEngine;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::coordinator::server::{start, WindowPolicy};
+use jdob::energy::device::DeviceModel;
+use jdob::runtime::ModelRuntime;
+
+fn mk_requests(c: &jdob::algo::types::PlanningContext, m: usize, beta: f64) -> Vec<InferenceRequest> {
+    let dev = DeviceModel::from_config(&c.cfg);
+    let deadline = User::deadline_from_beta(beta, &dev, c.tables.total_work());
+    let elems: usize = c.profile.input_shape.iter().product();
+    (0..m)
+        .map(|u| InferenceRequest {
+            user_id: u,
+            input: (0..elems)
+                .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
+                .collect(),
+            deadline_s: deadline,
+        })
+        .collect()
+}
+
+#[test]
+fn engine_serves_window_with_correct_accounting() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = ctx();
+    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
+    let reqs = mk_requests(&c, 4, 30.25);
+    let out = engine.serve_window(&reqs, 0.0).unwrap();
+
+    assert_eq!(out.responses.len(), 4);
+    for r in &out.responses {
+        assert_eq!(r.logits.len(), c.profile.num_classes);
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+        assert!(r.deadline_met, "user {} missed deadline", r.user_id);
+        assert!(r.modeled_latency_s > 0.0);
+    }
+    assert_eq!(out.ledger.requests, 4);
+    assert!(out.ledger.total_j() > 0.0);
+    assert!((out.ledger.hit_rate() - 1.0).abs() < 1e-12);
+    // loose deadlines: expect a real batch
+    assert!(out.metrics.batches >= 1);
+    assert!(out.metrics.mean_batch_size() >= 2.0);
+}
+
+#[test]
+fn batched_logits_equal_individual_forwards() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = ctx();
+    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
+    let reqs = mk_requests(&c, 3, 30.25);
+    let out = engine.serve_window(&reqs, 0.0).unwrap();
+    for (req, resp) in reqs.iter().zip(&out.responses) {
+        let direct = rt.run_full(&req.input, 1).unwrap();
+        let max = direct
+            .iter()
+            .zip(&resp.logits)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max < 1e-3, "user {}: batched vs direct diff {max}", req.user_id);
+    }
+}
+
+#[test]
+fn mixed_deadlines_split_into_groups() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = ctx();
+    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
+    let dev = DeviceModel::from_config(&c.cfg);
+    let total = c.tables.total_work();
+    let elems: usize = c.profile.input_shape.iter().product();
+    // two tight, two loose
+    let betas = [0.5, 0.6, 28.0, 30.0];
+    let reqs: Vec<InferenceRequest> = betas
+        .iter()
+        .enumerate()
+        .map(|(u, &b)| InferenceRequest {
+            user_id: u,
+            input: vec![0.1; elems],
+            deadline_s: User::deadline_from_beta(b, &dev, total),
+        })
+        .collect();
+    let out = engine.serve_window(&reqs, 0.0).unwrap();
+    assert_eq!(out.responses.len(), 4);
+    for r in &out.responses {
+        assert!(r.deadline_met, "user {}", r.user_id);
+    }
+    // telemetry covers every request exactly once
+    let covered: usize = out.groups.iter().map(|(sz, _, _)| sz).sum();
+    assert_eq!(covered, 4);
+}
+
+#[test]
+fn threaded_server_roundtrip() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let c = ctx();
+    let policy = WindowPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+    };
+    let (handle, join) = start(c.clone(), artifacts_dir(), "J-DOB", policy);
+    let reqs = mk_requests(&c, 4, 30.25);
+
+    // submit all four concurrently so they land in one window
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| handle.submit_async(r).expect("submit"))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(300))
+            .expect("response within timeout")
+            .expect("served ok");
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        ok += 1;
+    }
+    assert_eq!(ok, 4);
+    drop(handle);
+    let ledger = join.join().expect("leader joins").expect("leader ok");
+    assert_eq!(ledger.requests, 4);
+    assert!((ledger.hit_rate() - 1.0).abs() < 1e-12);
+}
