@@ -1,5 +1,7 @@
 //! Fig. 3 regeneration bench: edge latency/energy vs batch size on both
-//! the analytic (RTX3090-shaped) and the measured (PJRT CPU) backends.
+//! the analytic (RTX3090-shaped) model and the *measured* inference
+//! backend (SimBackend reference kernels by default; PJRT executables with
+//! `--features pjrt` + `make artifacts`).
 //! Run: `cargo bench --bench fig3_profiling`
 
 use std::path::PathBuf;
@@ -9,7 +11,7 @@ use jdob::config::SystemConfig;
 use jdob::energy::edge::AnalyticEdge;
 use jdob::model::ModelProfile;
 use jdob::runtime::profiler::profile_edge;
-use jdob::runtime::ModelRuntime;
+use jdob::runtime::{default_backend, InferenceBackend};
 use jdob::util::benchkit::header;
 
 fn main() {
@@ -33,13 +35,12 @@ fn main() {
     println!("shape check: PASS (total grows, per-sample amortizes)\n");
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("measured backend skipped: run `make artifacts` first");
-        return;
-    }
-    header("Fig. 3 — measured backend (PJRT CPU, the actual serving substrate)");
-    let rt = ModelRuntime::new(&dir).expect("runtime");
-    let prof = profile_edge(&rt, 5).expect("profiling");
+    let rt = default_backend(&profile, &cfg.buckets, Some(&dir)).expect("backend");
+    header(&format!(
+        "Fig. 3 — measured backend ({}, the actual serving substrate)",
+        rt.platform()
+    ));
+    let prof = profile_edge(rt.as_ref(), 5).expect("profiling");
     for (b, l) in prof.full_model_latency() {
         println!(
             "  batch {b:>2}: full model {:>8.2} ms   ({:>6.3} ms/sample)",

@@ -1,26 +1,30 @@
-//! Runtime hot-path benchmarks: per-block and full-model PJRT execution
-//! latency across batch buckets — the L3 executor's share of end-to-end
-//! latency, and the source of the measured d_n(b) tables.
-//! Run: `cargo bench --bench runtime_exec` (requires `make artifacts`)
+//! Runtime hot-path benchmarks: per-block and full-model execution latency
+//! across batch buckets on the build's inference backend — the L3
+//! executor's share of end-to-end latency, and the source of the measured
+//! d_n(b) tables.
+//!
+//! Runs on the default `SimBackend` out of the box; with `--features pjrt`
+//! and `make artifacts` it measures the compiled PJRT executables instead.
+//! Run: `cargo bench --bench runtime_exec`
 
 use std::path::PathBuf;
 use std::time::Duration;
 
-use jdob::runtime::ModelRuntime;
+use jdob::config::SystemConfig;
+use jdob::model::ModelProfile;
+use jdob::runtime::{default_backend, InferenceBackend};
 use jdob::util::benchkit::{bench, black_box, header};
 
 fn main() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("skipped: run `make artifacts` first");
-        return;
-    }
-    let rt = ModelRuntime::new(&dir).expect("runtime");
-    let man = rt.manifest();
+    let profile = ModelProfile::default_eval();
+    let cfg = SystemConfig::default();
+    let rt = default_backend(&profile, &cfg.buckets, Some(&dir)).expect("backend");
+    println!("backend: {}\n", rt.platform());
     let budget = Duration::from_millis(900);
 
     header("full-model forward vs batch (per-sample amortization)");
-    let in_elems: usize = man.block(1).in_shape.iter().product();
+    let in_elems = rt.in_elems(1);
     for b in [1usize, 2, 4, 8] {
         let input = vec![0.1f32; b * in_elems];
         rt.run_full(&input, b).expect("warm compile");
@@ -35,8 +39,8 @@ fn main() {
     }
 
     header("per-block latency at b = 1 (device-side prefix cost)");
-    for n in 1..=man.n_blocks {
-        let elems: usize = man.block(n).in_shape.iter().product();
+    for n in 1..=rt.n_blocks() {
+        let elems = rt.in_elems(n);
         let input = vec![0.1f32; elems];
         rt.run_block(n, &input, 1).expect("warm");
         let r = bench(&format!("block{n}_b1"), 1, budget / 3, 200, || {
@@ -46,7 +50,7 @@ fn main() {
     }
 
     header("edge tail at cut ñ = 4 vs batch (the offloaded path)");
-    let elems: usize = man.block(5).in_shape.iter().product();
+    let elems = rt.in_elems(5);
     for b in [1usize, 4, 8] {
         let input = vec![0.1f32; b * elems];
         rt.run_tail(4, &input, b).expect("warm");

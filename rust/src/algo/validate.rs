@@ -4,30 +4,56 @@
 //! coordinator's admission path (a plan that fails validation is a bug, and
 //! must never reach the executor).
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::algo::types::{Plan, PlanningContext, User};
 use crate::util::TIME_EPS;
 
-#[derive(Debug, Error, PartialEq)]
+// Hand-rolled Display/Error (the offline vendor set has no thiserror).
+#[derive(Debug, PartialEq)]
 pub enum Violation {
-    #[error("user {0}: device frequency {1} outside [{2}, {3}]")]
     DeviceFreqRange(usize, f64, f64, f64),
-    #[error("edge frequency {0} outside [{1}, {2}]")]
     EdgeFreqRange(f64, f64, f64),
-    #[error("user {0}: misses deadline ({1:.6}s > {2:.6}s)")]
     Deadline(usize, f64, f64),
-    #[error("GPU occupation violates Eq. 6: t_free {0:.6} + tail {1:.6} > l_o {2:.6}")]
     GpuOccupation(f64, f64, f64),
-    #[error("plan t_free_end {0:.6} earlier than input t_free {1:.6}")]
     TFreeRegression(f64, f64),
-    #[error("energy accounting off: reported {0}, recomputed {1}")]
     EnergyMismatch(f64, f64),
-    #[error("batch size {0} != offloading set size {1} (greedy batching, Eq. 12)")]
     BatchSize(usize, usize),
-    #[error("plan user list does not match input users")]
     UserSetMismatch,
 }
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::DeviceFreqRange(u, fd, lo, hi) => {
+                write!(f, "user {u}: device frequency {fd} outside [{lo}, {hi}]")
+            }
+            Violation::EdgeFreqRange(fe, lo, hi) => {
+                write!(f, "edge frequency {fe} outside [{lo}, {hi}]")
+            }
+            Violation::Deadline(u, finish, deadline) => {
+                write!(f, "user {u}: misses deadline ({finish:.6}s > {deadline:.6}s)")
+            }
+            Violation::GpuOccupation(t_free, tail, l_o) => write!(
+                f,
+                "GPU occupation violates Eq. 6: t_free {t_free:.6} + tail {tail:.6} > l_o {l_o:.6}"
+            ),
+            Violation::TFreeRegression(end, start) => {
+                write!(f, "plan t_free_end {end:.6} earlier than input t_free {start:.6}")
+            }
+            Violation::EnergyMismatch(reported, recomputed) => {
+                write!(f, "energy accounting off: reported {reported}, recomputed {recomputed}")
+            }
+            Violation::BatchSize(batch, set) => write!(
+                f,
+                "batch size {batch} != offloading set size {set} (greedy batching, Eq. 12)"
+            ),
+            Violation::UserSetMismatch => write!(f, "plan user list does not match input users"),
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
 
 /// Recompute all constraints and the objective of (P1) for `plan`.
 pub fn validate_plan(

@@ -3,15 +3,16 @@
 //! Pipeline per window:
 //! 1. wrap requests into [`User`]s (deadline relative to window close);
 //! 2. OG grouping + J-DOB inner planning (the paper's full stack);
-//! 3. execute each group in GPU order:
-//!    * local users — full model at b=1 on the PJRT backend (device
-//!      stand-in); energy/latency billed from the plan;
+//! 3. execute each group in GPU order on any [`InferenceBackend`]
+//!    (the default `SimBackend`, or PJRT with `--features pjrt`):
+//!    * local users — full model at b=1 (device stand-in); energy/latency
+//!      billed from the plan;
 //!    * offloaded users — prefix blocks at b=1 per user, activations
 //!      gathered into one batch tensor, edge tail executed at B_o;
 //! 4. validate against the plan's promises, fill the ledger and metrics.
 //!
-//! The engine is synchronous; [`crate::coordinator::server`] wraps it in a
-//! tokio ingress loop.
+//! The engine is synchronous and backend-agnostic;
+//! [`crate::coordinator::server`] wraps it in a threaded ingress loop.
 
 use std::time::Instant;
 
@@ -24,7 +25,7 @@ use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::energy::device::DeviceModel;
-use crate::runtime::ModelRuntime;
+use crate::runtime::InferenceBackend;
 
 /// Outcome of serving one window.
 #[derive(Debug)]
@@ -38,14 +39,14 @@ pub struct ServeOutcome {
 
 pub struct ServingEngine<'rt> {
     pub ctx: PlanningContext,
-    pub runtime: &'rt ModelRuntime,
+    pub runtime: &'rt dyn InferenceBackend,
     pub solver: Box<dyn GroupSolver>,
 }
 
 impl<'rt> ServingEngine<'rt> {
     pub fn new(
         ctx: PlanningContext,
-        runtime: &'rt ModelRuntime,
+        runtime: &'rt dyn InferenceBackend,
         solver: Box<dyn GroupSolver>,
     ) -> Self {
         Self {

@@ -5,15 +5,17 @@
 //! * [`metrics`] — latency/throughput metrics registry.
 //! * [`engine`] — synchronous serving engine: admission window → OG
 //!   grouping → J-DOB plan → device-prefix / uplink / edge-batch execution
-//!   over the PJRT runtime.
-//! * [`server`] — async (tokio) front: mpsc ingress, windowed batching,
-//!   response delivery.
+//!   over any [`crate::runtime::InferenceBackend`].
+//! * [`server`] — threaded front (std::thread + mpsc; no tokio in the
+//!   offline vendor set): windowed batching, response delivery, backend
+//!   constructed on the leader thread.
 //!
 //! The mobile devices and the radio are simulated (DESIGN.md
 //! §Hardware-Adaptation): device-side prefix computation physically runs on
-//! the same PJRT backend at batch 1 (standing in for the phone CPU), while
+//! the same backend at batch 1 (standing in for the phone CPU), while
 //! time and energy are billed from the paper's device model.  The edge side
-//! is the real batched PJRT execution.
+//! is the real batched execution — SimBackend reference kernels by default,
+//! compiled PJRT executables with `--features pjrt`.
 
 pub mod engine;
 pub mod ledger;

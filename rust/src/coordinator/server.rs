@@ -2,10 +2,12 @@
 //! mpsc ingress; requests are admitted in windows (size- or time-bounded)
 //! and answered through per-request reply channels.
 //!
-//! This is the L3 "leader" of the three-layer architecture: python never
-//! appears here — the engine executes AOT artifacts through PJRT.  (The
-//! offline vendor set has no tokio; std::thread + channels serve the same
-//! role with fewer moving parts at this concurrency level.)
+//! This is the L3 "leader" of the three-layer architecture. The execution
+//! substrate is any [`InferenceBackend`], constructed *on* the leader
+//! thread (PJRT client handles are not Send; the default `SimBackend`
+//! happens to be, but the factory design keeps both honest).  The offline
+//! vendor set has no tokio; std::thread + channels serve the same role
+//! with fewer moving parts at this concurrency level.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
@@ -16,7 +18,7 @@ use crate::algo::types::{GroupSolver, PlanningContext};
 use crate::coordinator::engine::ServingEngine;
 use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
-use crate::runtime::ModelRuntime;
+use crate::runtime::{default_backend, InferenceBackend};
 
 /// One enqueued request with its reply channel.
 pub struct Enqueued {
@@ -78,18 +80,18 @@ impl Default for WindowPolicy {
 
 /// The server loop: windowed admission around the sync engine.
 ///
-/// The PJRT client and every executable/buffer live exclusively on this
-/// thread (the xla crate's handles are not Send); only plain request/
-/// response data crosses the channel boundary.
+/// The backend and every executable/buffer live exclusively on this thread
+/// (PJRT handles are not Send); only plain request/response data crosses
+/// the channel boundary.
 fn serve_loop(
     ctx: PlanningContext,
-    artifacts_dir: PathBuf,
+    make_backend: impl FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>>,
     solver_name: &'static str,
     policy: WindowPolicy,
     rx: Receiver<Enqueued>,
 ) -> anyhow::Result<EnergyLedger> {
-    let runtime = ModelRuntime::new(&artifacts_dir)?;
-    let engine = ServingEngine::new(ctx, &runtime, solver_from_name(solver_name));
+    let backend = make_backend(&ctx)?;
+    let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name));
     let mut cumulative = EnergyLedger::default();
     loop {
         // wait for the first request of a window
@@ -149,21 +151,42 @@ pub fn solver_from_name(name: &str) -> Box<dyn GroupSolver> {
     }
 }
 
-/// Start a server thread; returns a submit handle and the join handle that
-/// yields the cumulative energy ledger once every [`ServerHandle`] clone is
-/// dropped.
+/// Start a server thread over an explicit backend factory (run on the
+/// leader thread, so non-Send backends like the PJRT runtime are fine).
+/// Returns a submit handle and the join handle that yields the cumulative
+/// energy ledger once every [`ServerHandle`] clone is dropped.
+pub fn start_with_backend<F>(
+    ctx: PlanningContext,
+    make_backend: F,
+    solver_name: &'static str,
+    policy: WindowPolicy,
+) -> (ServerHandle, JoinHandle<anyhow::Result<EnergyLedger>>)
+where
+    F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
+    let join = std::thread::Builder::new()
+        .name("jdob-leader".into())
+        .spawn(move || serve_loop(ctx, make_backend, solver_name, policy, rx))
+        .expect("spawning leader thread");
+    (ServerHandle { tx }, join)
+}
+
+/// Start a server thread on the build's default backend: the PJRT runtime
+/// over `artifacts_dir` when compiled with `--features pjrt` and artifacts
+/// exist, the deterministic `SimBackend` otherwise.
 pub fn start(
     ctx: PlanningContext,
     artifacts_dir: PathBuf,
     solver_name: &'static str,
     policy: WindowPolicy,
 ) -> (ServerHandle, JoinHandle<anyhow::Result<EnergyLedger>>) {
-    let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
-    let join = std::thread::Builder::new()
-        .name("jdob-leader".into())
-        .spawn(move || serve_loop(ctx, artifacts_dir, solver_name, policy, rx))
-        .expect("spawning leader thread");
-    (ServerHandle { tx }, join)
+    start_with_backend(
+        ctx,
+        move |c| default_backend(&c.profile, &c.cfg.buckets, Some(&artifacts_dir)),
+        solver_name,
+        policy,
+    )
 }
 
 #[cfg(test)]

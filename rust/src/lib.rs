@@ -9,12 +9,30 @@
 //!
 //! Architecture (three layers, python never on the request path):
 //! * **L3 (this crate)** — planner ([`algo`]), outer grouping, serving
-//!   coordinator ([`coordinator`]), PJRT runtime ([`runtime`]).
+//!   coordinator ([`coordinator`]), pluggable execution [`runtime`].
 //! * **L2** — MobileNetV2 blocks in JAX (`python/compile/model.py`), lowered
 //!   once to HLO text artifacts.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`).
 //!
-//! Entry points: [`algo::jdob::solve`] for planning, [`coordinator::server`]
+//! ## Inference backends
+//!
+//! Execution goes through the [`runtime::InferenceBackend`] trait, so the
+//! serving stack never names its substrate:
+//!
+//! * [`runtime::SimBackend`] *(default build)* — pure-Rust reference
+//!   kernels (port of `python/compile/kernels/ref.py`) over deterministic
+//!   seeded weights; no artifacts, no PJRT, bitwise reproducible.  This is
+//!   what `cargo test -q` (tier-1) and the default server run on.
+//! * `runtime::ModelRuntime` *(`--features pjrt`)* — compiles the AOT
+//!   HLO-text artifacts per (block, bucket) through a PJRT client; enable
+//!   it after `make artifacts` and after pointing the `xla` dependency at a
+//!   real PJRT binding (see `rust/vendor/xla/README.md`).
+//!
+//! [`runtime::default_backend`] picks the right one for the current build;
+//! both sides honor the same contract (1-based blocks, zero-pad batching to
+//! buckets, lossless padding), pinned by `rust/tests/integration_runtime.rs`.
+//!
+//! Entry points: [`algo::jdob`] for planning, [`coordinator::server`]
 //! for serving, `bench::figures` for regenerating the paper's evaluation.
 
 pub mod algo;

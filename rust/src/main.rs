@@ -12,7 +12,7 @@ use jdob::config::SystemConfig;
 use jdob::energy::edge::{AnalyticEdge, MeasuredEdge};
 use jdob::model::ModelProfile;
 use jdob::runtime::profiler::profile_edge;
-use jdob::runtime::ModelRuntime;
+use jdob::runtime::{default_backend, InferenceBackend};
 use jdob::sim::scenario::identical_deadline_users;
 use jdob::util::cli::Args;
 
@@ -28,7 +28,9 @@ COMMANDS:
   fig4   [--beta B] [--users 1,2,...] [--out CSV]
   fig5   [--users M] [--trials T] [--out CSV]
   plan   [--users M] [--beta B] [--t-free S] [--trace]   plan one group, all algorithms
-  profile-edge [--reps N]      measure d_n(b) via PJRT -> artifacts/edge_profile.json
+  profile-edge [--reps N]      measure d_n(b) on the active inference
+                               backend (SimBackend by default, PJRT with
+                               --features pjrt) -> artifacts/edge_profile.json
   serve  [--users M] [--rounds R] [--beta B]    end-to-end serving demo
 ";
 
@@ -94,8 +96,9 @@ fn main() -> Result<()> {
             let reps = args.get_usize("reps", 5)?;
             let report = match args.get_str("backend", "analytic") {
                 "measured" => {
-                    let rt = ModelRuntime::new(&artifacts_dir(&args))?;
-                    let prof = profile_edge(&rt, reps)?;
+                    let dir = artifacts_dir(&args);
+                    let rt = default_backend(&ctx.profile, &ctx.cfg.buckets, Some(&dir))?;
+                    let prof = profile_edge(rt.as_ref(), reps)?;
                     let edge = prof.into_measured_edge(&ctx.cfg, &ctx.profile)?;
                     figures::fig3_report(&edge, &ctx.cfg.buckets.clone(), out.as_deref())?
                 }
@@ -162,9 +165,9 @@ J-DOB execution timeline:");
         "profile-edge" => {
             let reps = args.get_usize("reps", 5)?;
             let dir = artifacts_dir(&args);
-            let rt = ModelRuntime::new(&dir)?;
+            let rt = default_backend(&ctx.profile, &ctx.cfg.buckets, Some(&dir))?;
             println!("profiling on {} ({} blocks)...", rt.platform(), rt.n_blocks());
-            let prof = profile_edge(&rt, reps)?;
+            let prof = profile_edge(rt.as_ref(), reps)?;
             for (b, l) in prof.full_model_latency() {
                 println!(
                     "  batch {b:>2}: full model {:.2} ms ({:.3} ms/sample)",
@@ -173,6 +176,7 @@ J-DOB execution timeline:");
                 );
             }
             let edge = prof.into_measured_edge(&ctx.cfg, &ctx.profile)?;
+            std::fs::create_dir_all(&dir)?;
             let path = dir.join("edge_profile.json");
             std::fs::write(&path, edge.to_json())?;
             println!("wrote {}", path.display());
@@ -203,11 +207,13 @@ fn serve_demo(
     use jdob::coordinator::request::InferenceRequest;
     use jdob::energy::device::DeviceModel;
 
-    let rt = ModelRuntime::new(artifacts).context("loading artifacts (run `make artifacts`)")?;
+    let rt = default_backend(&ctx.profile, &ctx.cfg.buckets, Some(artifacts))
+        .context("constructing inference backend")?;
     let dev = DeviceModel::from_config(&ctx.cfg);
     let deadline =
         jdob::algo::types::User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
-    let engine = ServingEngine::new(ctx.clone(), &rt, Box::new(jdob::algo::jdob::JDob::full()));
+    let engine =
+        ServingEngine::new(ctx.clone(), rt.as_ref(), Box::new(jdob::algo::jdob::JDob::full()));
     let elems: usize = ctx.profile.input_shape.iter().product();
     let mut total = jdob::coordinator::ledger::EnergyLedger::default();
     for round in 0..rounds {

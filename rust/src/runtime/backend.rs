@@ -1,0 +1,155 @@
+//! The pluggable inference backend: the contract between the serving stack
+//! (engine, server, profiler, benches) and whatever actually executes the
+//! model's block graph.
+//!
+//! Everything above this trait is backend-agnostic: the coordinator plans
+//! with [`crate::algo`], then drives `run_block`/`run_tail` over *some*
+//! executor. Two implementations ship in-tree:
+//!
+//! * [`crate::runtime::SimBackend`] (default) — pure-Rust reference kernels
+//!   over deterministic weights; no artifacts, no PJRT, bitwise
+//!   reproducible. This is what tier-1 (`cargo test -q`) exercises.
+//! * `crate::runtime::ModelRuntime` (`--features pjrt`) — compiles the
+//!   AOT HLO-text artifacts through a PJRT client and keeps parameters
+//!   device-resident.
+//!
+//! The trait deliberately speaks in *shapes and buckets*, not manifests:
+//! the Sim backend derives both from the analytic [`crate::model::ModelProfile`],
+//! the PJRT backend from `artifacts/manifest.json`, and the serving engine
+//! cannot tell them apart.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::ModelProfile;
+
+/// A batched block-graph executor.
+///
+/// Implementations promise:
+/// * blocks are numbered `1..=n_blocks()` (the paper's sub-tasks);
+/// * `run_block` accepts `batch * in_elems(n)` f32s (row-major NHWC,
+///   sample-major) and returns exactly `batch * out_elems(n)` f32s —
+///   zero-padding to the next compiled/simulated bucket happens inside;
+/// * per-sample results are independent of the co-batched samples
+///   (padding is lossless);
+/// * execution is deterministic for a fixed backend instance.
+///
+/// Object safety is load-bearing: the engine and server hold
+/// `&dyn InferenceBackend` / `Box<dyn InferenceBackend>`.
+pub trait InferenceBackend {
+    /// Human-readable substrate name ("sim", "cpu", "cuda", ...).
+    fn platform(&self) -> String;
+
+    /// Number of sub-tasks N.
+    fn n_blocks(&self) -> usize;
+
+    /// Classifier width of the final block's output.
+    fn num_classes(&self) -> usize;
+
+    /// The batch buckets this backend pads to (strictly increasing, [0] == 1).
+    fn buckets(&self) -> &[usize];
+
+    /// Input activation shape of block `n` (1-based), excluding batch.
+    fn in_shape(&self, n: usize) -> &[usize];
+
+    /// Output activation shape of block `n` (1-based), excluding batch.
+    fn out_shape(&self, n: usize) -> &[usize];
+
+    /// Prepare a set of (block, batch) pairs (compile caches, weight
+    /// uploads, ...). `batch` is a raw batch size; implementations bucket it.
+    fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()>;
+
+    /// Execute block `n` on `batch` samples.
+    fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    // ---- provided ----
+
+    /// Smallest bucket >= `b` (saturating at the largest).
+    fn bucket_for(&self, b: usize) -> usize {
+        let buckets = self.buckets();
+        *buckets
+            .iter()
+            .find(|&&bk| bk >= b)
+            .unwrap_or_else(|| buckets.last().expect("non-empty buckets"))
+    }
+
+    /// Input element count per sample of block `n`.
+    fn in_elems(&self, n: usize) -> usize {
+        self.in_shape(n).iter().product()
+    }
+
+    /// Output element count per sample of block `n`.
+    fn out_elems(&self, n: usize) -> usize {
+        self.out_shape(n).iter().product()
+    }
+
+    /// Activation element count at partition point `n` (0 = model input,
+    /// N = logits): what crosses the device->edge boundary per sample.
+    fn elems_at_cut(&self, n: usize) -> usize {
+        if n == self.n_blocks() {
+            self.out_elems(n)
+        } else {
+            self.in_elems(n + 1)
+        }
+    }
+
+    /// Execute the tail blocks ñ+1..N (the edge side of a partition plan).
+    fn run_tail(&self, n_from: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let mut act = input.to_vec();
+        for n in (n_from + 1)..=self.n_blocks() {
+            act = self.run_block(n, &act, batch)?;
+        }
+        Ok(act)
+    }
+
+    /// Full model forward (tests and the local-compute stand-in).
+    fn run_full(&self, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.run_tail(0, input, batch)
+    }
+}
+
+/// Build the backend the current build is configured for.
+///
+/// * With `--features pjrt` *and* artifacts on disk: the PJRT
+///   `crate::runtime::ModelRuntime` over `artifacts_dir`.
+/// * Otherwise: a [`crate::runtime::SimBackend`] derived from `profile`
+///   (seeded deterministically), so every caller — server leader thread,
+///   benches, the CLI — works out of the box.
+pub fn default_backend(
+    profile: &ModelProfile,
+    buckets: &[usize],
+    artifacts_dir: Option<&Path>,
+) -> Result<Box<dyn InferenceBackend>> {
+    let _ = &artifacts_dir;
+    #[cfg(feature = "pjrt")]
+    if let Some(dir) = artifacts_dir {
+        if dir.join("manifest.json").exists() {
+            return Ok(Box::new(crate::runtime::executor::ModelRuntime::new(dir)?));
+        }
+    }
+    Ok(Box::new(crate::runtime::sim::SimBackend::from_profile(
+        profile,
+        buckets,
+        crate::runtime::sim::SIM_SEED,
+    )?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn default_backend_always_available() {
+        let profile = ModelProfile::default_eval();
+        let cfg = SystemConfig::default();
+        let be = default_backend(&profile, &cfg.buckets, None).unwrap();
+        assert_eq!(be.n_blocks(), profile.n_blocks);
+        assert_eq!(be.num_classes(), profile.num_classes);
+        assert_eq!(be.bucket_for(3), 4);
+        assert_eq!(be.bucket_for(1), 1);
+        assert_eq!(be.bucket_for(33), 32);
+        assert_eq!(be.elems_at_cut(0), profile.input_shape.iter().product::<usize>());
+    }
+}

@@ -8,6 +8,7 @@ use anyhow::{ensure, Context, Result};
 use std::sync::Mutex;
 
 use super::artifacts::Manifest;
+use super::backend::InferenceBackend;
 
 /// A compiled (block, bucket) executable plus its device-resident params.
 struct BlockExe {
@@ -44,14 +45,6 @@ impl ModelRuntime {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
-    }
-
-    pub fn n_blocks(&self) -> usize {
-        self.manifest.n_blocks
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
     }
 
     fn host_params_for(&self, n: usize) -> Result<std::sync::Arc<Vec<xla::Literal>>> {
@@ -119,6 +112,10 @@ impl ModelRuntime {
     pub fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
         ensure!(batch >= 1, "batch must be >= 1");
         let bucket = self.manifest.bucket_for(batch);
+        ensure!(
+            batch <= bucket,
+            "batch {batch} exceeds the largest compiled bucket {bucket}"
+        );
         let e = self.block_exe(n, bucket)?;
         ensure!(
             input.len() == batch * e.in_elems_per_sample,
@@ -154,26 +151,38 @@ impl ModelRuntime {
         Ok(v)
     }
 
-    /// Execute the tail blocks ñ+1..N (the edge side of a partition plan).
-    pub fn run_tail(&self, n_from: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let mut act = input.to_vec();
-        for n in (n_from + 1)..=self.manifest.n_blocks {
-            act = self.run_block(n, &act, batch)?;
-        }
-        Ok(act)
+}
+
+impl InferenceBackend for ModelRuntime {
+    fn platform(&self) -> String {
+        self.client.platform_name()
     }
 
-    /// Full model forward (used by tests and the local-compute stand-in).
-    pub fn run_full(&self, input: &[f32], batch: usize) -> Result<Vec<f32>> {
-        self.run_tail(0, input, batch)
+    fn n_blocks(&self) -> usize {
+        self.manifest.n_blocks
     }
 
-    /// Input element count per sample for block n+1 (i.e. activation at cut n).
-    pub fn elems_at_cut(&self, n: usize) -> usize {
-        if n == self.manifest.n_blocks {
-            self.manifest.block(n).out_shape.iter().product()
-        } else {
-            self.manifest.block(n + 1).in_shape.iter().product()
-        }
+    fn num_classes(&self) -> usize {
+        self.manifest.num_classes
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.manifest.buckets
+    }
+
+    fn in_shape(&self, n: usize) -> &[usize] {
+        &self.manifest.block(n).in_shape
+    }
+
+    fn out_shape(&self, n: usize) -> &[usize] {
+        &self.manifest.block(n).out_shape
+    }
+
+    fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()> {
+        ModelRuntime::warmup(self, pairs)
+    }
+
+    fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        ModelRuntime::run_block(self, n, input, batch)
     }
 }

@@ -1,15 +1,28 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
+//! Execution runtime behind the pluggable [`InferenceBackend`] trait.
 //!
-//! Interchange is HLO *text* (see aot.py for why), parsed with
-//! `HloModuleProto::from_text_file`, compiled once per (block, bucket) and
-//! cached.  Block parameters are uploaded to device once and executions use
-//! `execute_b` over device-resident buffers — only the activation crosses
-//! the host/device boundary per call.
+//! * [`backend`] — the trait itself plus [`default_backend`], the
+//!   build-configured constructor everything above this layer uses.
+//! * [`sim`] — pure-Rust [`SimBackend`]: reference kernels over
+//!   deterministic weights; the default (tier-1) execution substrate.
+//! * `executor` (`--features pjrt`) — `ModelRuntime`: loads the AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py`, compiles one
+//!   executable per (block, bucket) through a PJRT client and keeps
+//!   parameters device-resident; only the activation crosses the
+//!   host/device boundary per call.
+//! * [`artifacts`] — the manifest contract between `aot.py` and the PJRT
+//!   executor (feature-independent: the manifest is plain JSON).
+//! * [`profiler`] — measures per-(block, bucket) latency on *any* backend;
+//!   source of the Fig. 3 data and the `MeasuredEdge` planner model.
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod profiler;
+pub mod sim;
 
 pub use artifacts::Manifest;
+pub use backend::{default_backend, InferenceBackend};
+#[cfg(feature = "pjrt")]
 pub use executor::ModelRuntime;
+pub use sim::{SimBackend, SIM_SEED};

@@ -1,10 +1,13 @@
-//! Edge profiler: measures per-(block, bucket) execution latency on the
-//! PJRT backend — the Fig. 3 data source and the `MeasuredEdge` builder.
+//! Edge profiler: measures per-(block, bucket) execution latency on any
+//! [`InferenceBackend`] — the Fig. 3 data source and the `MeasuredEdge`
+//! builder.
 //!
 //! The measured wall latencies are interpreted as the edge accelerator
 //! running at the reference frequency f_ref = f_e,max; DVFS is then applied
 //! through the paper's own 1/f_e scaling law (Eq. 5).  See DESIGN.md
-//! §Hardware-Adaptation.
+//! §Hardware-Adaptation.  On the default `SimBackend` the profile measures
+//! the reference kernels (a CPU-shaped batch-scaling curve); with
+//! `--features pjrt` it measures the compiled HLO executables.
 
 use std::time::Instant;
 
@@ -13,7 +16,7 @@ use anyhow::Result;
 use crate::config::SystemConfig;
 use crate::energy::edge::MeasuredEdge;
 use crate::model::ModelProfile;
-use crate::runtime::ModelRuntime;
+use crate::runtime::InferenceBackend;
 
 /// Raw profiling table: latency_s[block-1][bucket_idx] (median of `reps`).
 #[derive(Debug, Clone)]
@@ -24,12 +27,11 @@ pub struct EdgeProfile {
 
 /// Measure every (block, bucket) pair. `reps` >= 3 recommended; the median
 /// is recorded to shed scheduler noise.
-pub fn profile_edge(rt: &ModelRuntime, reps: usize) -> Result<EdgeProfile> {
-    let man = rt.manifest();
-    let buckets = man.buckets.clone();
-    let mut latency_s = Vec::with_capacity(man.n_blocks);
-    for n in 1..=man.n_blocks {
-        let in_elems: usize = man.block(n).in_shape.iter().product();
+pub fn profile_edge(rt: &dyn InferenceBackend, reps: usize) -> Result<EdgeProfile> {
+    let buckets = rt.buckets().to_vec();
+    let mut latency_s = Vec::with_capacity(rt.n_blocks());
+    for n in 1..=rt.n_blocks() {
+        let in_elems = rt.in_elems(n);
         let mut row = Vec::with_capacity(buckets.len());
         for &b in &buckets {
             let input = vec![0.1f32; b * in_elems];
@@ -74,5 +76,29 @@ impl EdgeProfile {
             .enumerate()
             .map(|(j, &b)| (b, self.latency_s.iter().map(|row| row[j]).sum()))
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SimBackend;
+
+    #[test]
+    fn profiles_sim_backend_small() {
+        // Cheap graph (32px, 10 classes) with two buckets: the profiler must
+        // fill a full table of positive latencies on the sim substrate.
+        let be = SimBackend::from_profile(&ModelProfile::mobilenet_v2(32, 10), &[1, 2], 3).unwrap();
+        let prof = profile_edge(&be, 1).unwrap();
+        assert_eq!(prof.buckets, vec![1, 2]);
+        assert_eq!(prof.latency_s.len(), 9);
+        assert!(prof
+            .latency_s
+            .iter()
+            .flatten()
+            .all(|&l| l.is_finite() && l >= 0.0));
+        let full = prof.full_model_latency();
+        assert_eq!(full.len(), 2);
+        assert!(full[0].1 > 0.0);
     }
 }

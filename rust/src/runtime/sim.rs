@@ -1,0 +1,642 @@
+//! Pure-Rust simulation backend: the MobileNetV2 block graph executed with
+//! reference kernels — a direct port of `python/compile/kernels/ref.py`
+//! (the pure-jnp oracles the Pallas kernels are verified against).
+//!
+//! Purpose: make the *entire* serving path (engine, server, profiler,
+//! benches, integration suites) executable with zero external dependencies
+//! — no PJRT client, no AOT artifacts on disk. Weights are initialized
+//! deterministically from a seed (He-style uniform fan-in scaling, zero
+//! biases, mirroring `python/compile/model.py::init_params` structurally),
+//! so two backends built from the same seed are bitwise identical and every
+//! test is reproducible.
+//!
+//! Semantics match the PJRT executor contract exactly:
+//! * block numbering 1..=N (stem | 7 bottleneck stages | head);
+//! * batches are zero-padded to the next bucket, executed at the bucket
+//!   size, and the padding is sliced back off the output;
+//! * per-sample results are independent of co-batched samples (every kernel
+//!   is sample-major), so padding is lossless — the property
+//!   `tests/integration_runtime.rs` pins.
+
+use anyhow::{bail, ensure, Result};
+
+use super::backend::InferenceBackend;
+use crate::model::ModelProfile;
+use crate::util::rng::Rng;
+
+/// Seed used by [`crate::runtime::default_backend`]; fixed so the default
+/// serving stack is reproducible across processes.
+pub const SIM_SEED: u64 = 0x5EED_CAFE;
+
+/// MobileNetV2 stage table (expansion t, out channels c, repeats n, first
+/// stride s) — must match `python/compile/model.py::ARCH` and
+/// `ModelProfile::mobilenet_v2`.
+const ARCH: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+const STEM_CHANNELS: usize = 32;
+const HEAD_CHANNELS: usize = 1280;
+const N_BLOCKS: usize = 9;
+
+// ---------------------------------------------------------------------------
+// Reference kernels (port of python/compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Act {
+    Relu6,
+    None,
+}
+
+#[inline]
+fn apply(v: f32, a: Act) -> f32 {
+    match a {
+        Act::Relu6 => v.clamp(0.0, 6.0),
+        Act::None => v,
+    }
+}
+
+/// `y = act(x @ w + b)`; x: [rows, k], w: [k, cols], b: [cols].
+fn matmul_bias_act(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    cols: usize,
+    bias: &[f32],
+    a: Act,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * cols);
+    debug_assert_eq!(bias.len(), cols);
+    let mut y = vec![0f32; rows * cols];
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let yrow = &mut y[i * cols..(i + 1) * cols];
+        for (p, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                // exact no-op contribution; makes zero-padded samples cheap
+                continue;
+            }
+            let wrow = &w[p * cols..(p + 1) * cols];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+        for (yv, &bv) in yrow.iter_mut().zip(bias) {
+            *yv = apply(*yv + bv, a);
+        }
+    }
+    y
+}
+
+/// NHWC depthwise 3x3, padding 1; w layout `[(ky*3+kx)*c + ch]`, b: [c].
+#[allow(clippy::too_many_arguments)]
+fn depthwise3x3(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    wts: &[f32],
+    bias: &[f32],
+    stride: usize,
+    a: Act,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), bsz * h * w * c);
+    debug_assert_eq!(wts.len(), 9 * c);
+    let ho = (h - 1) / stride + 1;
+    let wo = (w - 1) / stride + 1;
+    let mut y = vec![0f32; bsz * ho * wo * c];
+    for b in 0..bsz {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let out = &mut y[((b * ho + oy) * wo + ox) * c..][..c];
+                out.copy_from_slice(&bias[..c]);
+                for ky in 0..3 {
+                    let iy = (oy * stride + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let xrow = &x[((b * h + iy as usize) * w + ix as usize) * c..][..c];
+                        let wrow = &wts[(ky * 3 + kx) * c..][..c];
+                        for ch in 0..c {
+                            out[ch] += xrow[ch] * wrow[ch];
+                        }
+                    }
+                }
+                for v in out.iter_mut() {
+                    *v = apply(*v, a);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// NHWC -> [B*Ho*Wo, 9*C] patches for a 3x3 conv with padding 1 (the same
+/// layout `ref.py::_im2col`/the Pallas stem use, so an HWIO weight tensor
+/// reshaped to [9*C, Cout] row-major lines up).
+fn im2col3x3(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, stride: usize) -> Vec<f32> {
+    let ho = (h - 1) / stride + 1;
+    let wo = (w - 1) / stride + 1;
+    let k = 9 * c;
+    let mut cols = vec![0f32; bsz * ho * wo * k];
+    for b in 0..bsz {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((b * ho + oy) * wo + ox) * k;
+                for ky in 0..3 {
+                    let iy = (oy * stride + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                        let dst = base + (ky * 3 + kx) * c;
+                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// [B, H, W, C] -> [B, C] mean over the spatial dims.
+fn global_avg_pool(x: &[f32], bsz: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut y = vec![0f32; bsz * c];
+    let inv = 1.0 / (h * w) as f32;
+    for b in 0..bsz {
+        let yrow = &mut y[b * c..(b + 1) * c];
+        for p in 0..h * w {
+            let xrow = &x[(b * h * w + p) * c..][..c];
+            for ch in 0..c {
+                yrow[ch] += xrow[ch];
+            }
+        }
+        for v in yrow.iter_mut() {
+            *v *= inv;
+        }
+    }
+    y
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic parameters
+// ---------------------------------------------------------------------------
+
+/// He-style uniform init: U[-sqrt(6/fan_in), +sqrt(6/fan_in)].
+fn init_weights(rng: &mut Rng, count: usize, fan_in: usize) -> Vec<f32> {
+    let bound = (6.0 / fan_in as f64).sqrt();
+    (0..count).map(|_| rng.gen_range(-bound, bound) as f32).collect()
+}
+
+#[derive(Debug, Clone)]
+struct Linear {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    cin: usize,
+    cout: usize,
+}
+
+impl Linear {
+    fn init(rng: &mut Rng, cin: usize, cout: usize) -> Self {
+        Self {
+            w: init_weights(rng, cin * cout, cin),
+            b: vec![0f32; cout],
+            cin,
+            cout,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct DwConv {
+    w: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl DwConv {
+    fn init(rng: &mut Rng, c: usize) -> Self {
+        Self {
+            w: init_weights(rng, 9 * c, 9),
+            b: vec![0f32; c],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Bottleneck {
+    cin: usize,
+    cout: usize,
+    cmid: usize,
+    stride: usize,
+    expand: Option<Linear>,
+    dw: DwConv,
+    project: Linear,
+}
+
+impl Bottleneck {
+    fn init(rng: &mut Rng, t: usize, cin: usize, cout: usize, stride: usize) -> Self {
+        let cmid = cin * t;
+        Self {
+            cin,
+            cout,
+            cmid,
+            stride,
+            expand: (t != 1).then(|| Linear::init(rng, cin, cmid)),
+            dw: DwConv::init(rng, cmid),
+            project: Linear::init(rng, cmid, cout),
+        }
+    }
+
+    /// Forward over a [bsz, h, w, cin] batch; returns (y, ho, wo).
+    fn forward(&self, x: &[f32], bsz: usize, h: usize, w: usize) -> (Vec<f32>, usize, usize) {
+        let pixels = bsz * h * w;
+        let expanded;
+        let mid: &[f32] = match &self.expand {
+            Some(e) => {
+                expanded = matmul_bias_act(x, pixels, e.cin, &e.w, e.cout, &e.b, Act::Relu6);
+                &expanded
+            }
+            None => x,
+        };
+        let yd = depthwise3x3(
+            mid,
+            bsz,
+            h,
+            w,
+            self.cmid,
+            &self.dw.w,
+            &self.dw.b,
+            self.stride,
+            Act::Relu6,
+        );
+        let ho = (h - 1) / self.stride + 1;
+        let wo = (w - 1) / self.stride + 1;
+        let mut out = matmul_bias_act(
+            &yd,
+            bsz * ho * wo,
+            self.project.cin,
+            &self.project.w,
+            self.project.cout,
+            &self.project.b,
+            Act::None,
+        );
+        if self.stride == 1 && self.cin == self.cout {
+            for (o, &xv) in out.iter_mut().zip(x) {
+                *o += xv;
+            }
+        }
+        (out, ho, wo)
+    }
+}
+
+#[derive(Debug, Clone)]
+enum SimBlock {
+    /// Stem conv 3x3 s2 as im2col (27 -> 32) + relu6.
+    Stem(Linear),
+    Stage(Vec<Bottleneck>),
+    /// Pointwise 320 -> 1280 relu6, global average pool, classifier.
+    Head { head: Linear, cls: Linear },
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Deterministic, dependency-free inference backend over the MobileNetV2
+/// block graph (see module docs).
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    num_classes: usize,
+    buckets: Vec<usize>,
+    blocks: Vec<SimBlock>,
+    /// in_shapes[n-1] / out_shapes[n-1] = activation shape around block n.
+    in_shapes: Vec<Vec<usize>>,
+    out_shapes: Vec<Vec<usize>>,
+    seed: u64,
+}
+
+impl SimBackend {
+    /// Build the backend for `profile` (must be the MobileNetV2 block graph
+    /// this module implements — shapes are cross-checked) padding batches
+    /// to `buckets`. Same `seed` => bitwise-identical weights.
+    pub fn from_profile(profile: &ModelProfile, buckets: &[usize], seed: u64) -> Result<Self> {
+        ensure!(
+            profile.n_blocks == N_BLOCKS,
+            "SimBackend implements the {N_BLOCKS}-block MobileNetV2 graph, profile has {}",
+            profile.n_blocks
+        );
+        ensure!(!buckets.is_empty(), "no batch buckets");
+        ensure!(buckets[0] == 1, "smallest bucket must be 1");
+        ensure!(
+            buckets.windows(2).all(|w| w[0] < w[1]),
+            "buckets must be strictly increasing"
+        );
+
+        let res = profile.resolution;
+        let num_classes = profile.num_classes;
+        let mut rng = Rng::seed_from_u64(seed);
+
+        // Shape chain + parameters, mirroring model.py::init_params.
+        let mut in_shapes: Vec<Vec<usize>> = Vec::with_capacity(N_BLOCKS);
+        let mut out_shapes: Vec<Vec<usize>> = Vec::with_capacity(N_BLOCKS);
+        let mut blocks: Vec<SimBlock> = Vec::with_capacity(N_BLOCKS);
+
+        let mut h = (res - 1) / 2 + 1;
+        in_shapes.push(vec![res, res, 3]);
+        out_shapes.push(vec![h, h, STEM_CHANNELS]);
+        blocks.push(SimBlock::Stem(Linear::init(&mut rng, 27, STEM_CHANNELS)));
+
+        let mut cin = STEM_CHANNELS;
+        for &(t, c, n, s) in ARCH.iter() {
+            in_shapes.push(vec![h, h, cin]);
+            let mut units = Vec::with_capacity(n);
+            for j in 0..n {
+                let stride = if j == 0 { s } else { 1 };
+                units.push(Bottleneck::init(&mut rng, t, cin, c, stride));
+                h = (h - 1) / stride + 1;
+                cin = c;
+            }
+            out_shapes.push(vec![h, h, c]);
+            blocks.push(SimBlock::Stage(units));
+        }
+
+        in_shapes.push(vec![h, h, cin]);
+        out_shapes.push(vec![num_classes]);
+        blocks.push(SimBlock::Head {
+            head: Linear::init(&mut rng, cin, HEAD_CHANNELS),
+            cls: Linear::init(&mut rng, HEAD_CHANNELS, num_classes),
+        });
+
+        // The profile is the planner's source of truth; refuse to simulate a
+        // graph whose activations don't line up with it.
+        for n in 1..=N_BLOCKS {
+            let blk = &profile.blocks[n - 1];
+            if blk.in_shape != in_shapes[n - 1] || blk.out_shape != out_shapes[n - 1] {
+                bail!(
+                    "profile/sim shape mismatch at block {n}: profile {:?}->{:?}, sim {:?}->{:?}",
+                    blk.in_shape,
+                    blk.out_shape,
+                    in_shapes[n - 1],
+                    out_shapes[n - 1]
+                );
+            }
+        }
+
+        Ok(Self {
+            num_classes,
+            buckets: buckets.to_vec(),
+            blocks,
+            in_shapes,
+            out_shapes,
+            seed,
+        })
+    }
+
+    /// Default-evaluation backend (MobileNetV2@96, Table-I buckets).
+    pub fn default_eval(seed: u64) -> Self {
+        Self::from_profile(
+            &ModelProfile::default_eval(),
+            &crate::config::SystemConfig::default().buckets,
+            seed,
+        )
+        .expect("default profile always matches the sim graph")
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Forward of block `n` on exactly `bsz` samples (no bucket padding).
+    fn forward_block(&self, n: usize, x: &[f32], bsz: usize) -> Vec<f32> {
+        let shape = &self.in_shapes[n - 1];
+        match &self.blocks[n - 1] {
+            SimBlock::Stem(lin) => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let cols = im2col3x3(x, bsz, h, w, c, 2);
+                let ho = (h - 1) / 2 + 1;
+                let wo = (w - 1) / 2 + 1;
+                matmul_bias_act(&cols, bsz * ho * wo, 9 * c, &lin.w, lin.cout, &lin.b, Act::Relu6)
+            }
+            SimBlock::Stage(units) => {
+                let (mut h, mut w) = (shape[0], shape[1]);
+                let mut act = x.to_vec();
+                for u in units {
+                    let (next, ho, wo) = u.forward(&act, bsz, h, w);
+                    act = next;
+                    h = ho;
+                    w = wo;
+                }
+                act
+            }
+            SimBlock::Head { head, cls } => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let y = matmul_bias_act(x, bsz * h * w, c, &head.w, head.cout, &head.b, Act::Relu6);
+                let pooled = global_avg_pool(&y, bsz, h, w, head.cout);
+                matmul_bias_act(&pooled, bsz, cls.cin, &cls.w, cls.cout, &cls.b, Act::None)
+            }
+        }
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn platform(&self) -> String {
+        "sim".to_string()
+    }
+
+    fn n_blocks(&self) -> usize {
+        N_BLOCKS
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn in_shape(&self, n: usize) -> &[usize] {
+        &self.in_shapes[n - 1]
+    }
+
+    fn out_shape(&self, n: usize) -> &[usize] {
+        &self.out_shapes[n - 1]
+    }
+
+    fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()> {
+        // Nothing to compile; validate the request like the PJRT path would.
+        for &(n, b) in pairs {
+            ensure!(
+                (1..=N_BLOCKS).contains(&n),
+                "warmup: block {n} out of range 1..={N_BLOCKS}"
+            );
+            ensure!(b >= 1, "warmup: batch must be >= 1");
+        }
+        Ok(())
+    }
+
+    fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        ensure!(
+            (1..=N_BLOCKS).contains(&n),
+            "block {n} out of range 1..={N_BLOCKS}"
+        );
+        ensure!(batch >= 1, "batch must be >= 1");
+        let in_elems = self.in_elems(n);
+        ensure!(
+            input.len() == batch * in_elems,
+            "block {n}: input len {} != batch {batch} x {in_elems}",
+            input.len()
+        );
+
+        // Zero-pad to the bucket, execute at bucket size, slice padding off —
+        // the same cost/shape semantics as the compiled PJRT executables.
+        let bucket = self.bucket_for(batch);
+        ensure!(
+            batch <= bucket,
+            "batch {batch} exceeds the largest bucket {bucket}"
+        );
+        let out = if batch == bucket {
+            self.forward_block(n, input, batch)
+        } else {
+            let mut padded = vec![0f32; bucket * in_elems];
+            padded[..input.len()].copy_from_slice(input);
+            self.forward_block(n, &padded, bucket)
+        };
+        let mut v = out;
+        v.truncate(batch * self.out_elems(n));
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cheap graph for kernel-level tests: MobileNetV2@32, 10 classes.
+    fn small() -> SimBackend {
+        SimBackend::from_profile(&ModelProfile::mobilenet_v2(32, 10), &[1, 2, 4], 7).unwrap()
+    }
+
+    #[test]
+    fn matmul_known_case() {
+        // [1 2; 3 4] @ [5; 6] + b=1 = [18; 40]
+        let y = matmul_bias_act(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0], 1, &[1.0], Act::None);
+        assert_eq!(y, vec![18.0, 40.0]);
+        // relu6 clamps
+        let y = matmul_bias_act(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0], 1, &[1.0], Act::Relu6);
+        assert_eq!(y, vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn depthwise_known_case() {
+        // 3x3 ones input, ones kernel, pad 1: corner sees 4, edge 6, center 9.
+        let x = vec![1.0f32; 9];
+        let w = vec![1.0f32; 9];
+        let b = vec![0.0f32];
+        let y = depthwise3x3(&x, 1, 3, 3, 1, &w, &b, 1, Act::None);
+        assert_eq!(y, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+        // stride 2 keeps the four corners' receptive fields
+        let y2 = depthwise3x3(&x, 1, 3, 3, 1, &w, &b, 2, Act::None);
+        assert_eq!(y2, vec![4.0, 4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn gap_known_case() {
+        // 2 channels over 2x2: means per channel
+        let x = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let y = global_avg_pool(&x, 1, 2, 2, 2);
+        assert_eq!(y, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn im2col_center_patch_is_identity_window() {
+        // 3x3 single-channel, stride 1: the center output row must be the
+        // whole input in raster order.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let cols = im2col3x3(&x, 1, 3, 3, 1, 1);
+        let center = &cols[4 * 9..5 * 9];
+        assert_eq!(center, &x[..]);
+    }
+
+    #[test]
+    fn shapes_chain_and_match_profile() {
+        let be = small();
+        for n in 1..N_BLOCKS {
+            assert_eq!(be.out_shape(n), be.in_shape(n + 1), "block {n}");
+        }
+        assert_eq!(be.out_shape(N_BLOCKS), &[10]);
+        assert_eq!(be.elems_at_cut(0), 32 * 32 * 3);
+        assert_eq!(be.elems_at_cut(N_BLOCKS), 10);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = small();
+        let b = small();
+        let elems = a.in_elems(1);
+        let x: Vec<f32> = (0..elems).map(|i| ((i % 89) as f32) / 89.0 - 0.5).collect();
+        let ya = a.run_full(&x, 1).unwrap();
+        let yb = b.run_full(&x, 1).unwrap();
+        assert_eq!(ya, yb);
+        assert!(ya.iter().all(|v| v.is_finite()));
+        // different seeds give a different network
+        let c =
+            SimBackend::from_profile(&ModelProfile::mobilenet_v2(32, 10), &[1, 2, 4], 8).unwrap();
+        assert_ne!(ya, c.run_full(&x, 1).unwrap());
+    }
+
+    #[test]
+    fn bucket_padding_is_lossless_small() {
+        let be = small();
+        let elems = be.in_elems(1);
+        let x: Vec<f32> = (0..3 * elems).map(|i| ((i % 97) as f32) / 97.0 - 0.5).collect();
+        let batched = be.run_block(1, &x, 3).unwrap(); // pads to bucket 4
+        let out_elems = be.out_elems(1);
+        assert_eq!(batched.len(), 3 * out_elems);
+        for s in 0..3 {
+            let single = be.run_block(1, &x[s * elems..(s + 1) * elems], 1).unwrap();
+            assert_eq!(single, batched[s * out_elems..(s + 1) * out_elems].to_vec(), "sample {s}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let be = small();
+        assert!(be.run_block(1, &[0.0; 7], 1).is_err());
+        assert!(be.run_block(0, &[], 1).is_err());
+        assert!(be.run_block(10, &[], 1).is_err());
+        assert!(be.warmup(&[(0, 1)]).is_err());
+        assert!(be.warmup(&[(1, 0)]).is_err());
+        assert!(be.warmup(&[(1, 1), (9, 32)]).is_ok());
+    }
+
+    #[test]
+    fn rejects_profile_mismatch() {
+        let mut p = ModelProfile::mobilenet_v2(32, 10);
+        p.blocks[3].in_shape = vec![1, 2, 3];
+        assert!(SimBackend::from_profile(&p, &[1, 2], 7).is_err());
+        let p = ModelProfile::mobilenet_v2(32, 10);
+        assert!(SimBackend::from_profile(&p, &[], 7).is_err());
+        assert!(SimBackend::from_profile(&p, &[2, 4], 7).is_err());
+        assert!(SimBackend::from_profile(&p, &[1, 4, 2], 7).is_err());
+    }
+}

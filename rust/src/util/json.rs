@@ -10,8 +10,6 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -22,23 +20,35 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error, PartialEq)]
+// Hand-rolled Display/Error (no thiserror in the offline vendor set).
+#[derive(Debug, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid \\u escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
-    #[error("type error: expected {0}")]
     Type(&'static str),
-    #[error("missing key {0:?}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(pos) => write!(f, "unexpected end of input at byte {pos}"),
+            JsonError::Unexpected(c, pos) => {
+                write!(f, "unexpected character {c:?} at byte {pos}")
+            }
+            JsonError::BadNumber(pos) => write!(f, "invalid number at byte {pos}"),
+            JsonError::BadEscape(pos) => write!(f, "invalid \\u escape at byte {pos}"),
+            JsonError::Trailing(pos) => write!(f, "trailing garbage at byte {pos}"),
+            JsonError::Type(want) => write!(f, "type error: expected {want}"),
+            JsonError::Missing(key) => write!(f, "missing key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

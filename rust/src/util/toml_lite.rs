@@ -4,8 +4,7 @@
 //! full TOML crate is unavailable offline.
 
 use std::collections::BTreeMap;
-
-use thiserror::Error;
+use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
@@ -15,15 +14,25 @@ pub enum TomlValue {
     IntArray(Vec<usize>),
 }
 
-#[derive(Debug, Error, PartialEq)]
+// Hand-rolled Display/Error (no thiserror in the offline vendor set).
+#[derive(Debug, PartialEq)]
 pub enum TomlError {
-    #[error("line {0}: missing '='")]
     MissingEq(usize),
-    #[error("line {0}: bad value {1:?}")]
     BadValue(usize, String),
-    #[error("line {0}: duplicate key {1:?}")]
     Duplicate(usize, String),
 }
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TomlError::MissingEq(line) => write!(f, "line {line}: missing '='"),
+            TomlError::BadValue(line, val) => write!(f, "line {line}: bad value {val:?}"),
+            TomlError::Duplicate(line, key) => write!(f, "line {line}: duplicate key {key:?}"),
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
     let mut out = BTreeMap::new();

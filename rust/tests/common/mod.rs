@@ -6,10 +6,20 @@ use std::path::PathBuf;
 
 use jdob::algo::types::{PlanningContext, User};
 use jdob::energy::device::DeviceModel;
+use jdob::runtime::SimBackend;
 use jdob::util::rng::Rng;
 
 pub fn ctx() -> PlanningContext {
     PlanningContext::default_analytic()
+}
+
+/// The deterministic tier-1 execution substrate: a SimBackend over the
+/// default evaluation profile. Same seed everywhere, so every suite (and
+/// every run) sees bitwise-identical weights.
+pub fn sim_backend() -> SimBackend {
+    let c = ctx();
+    SimBackend::from_profile(&c.profile, &c.cfg.buckets, jdob::runtime::SIM_SEED)
+        .expect("default profile matches the sim graph")
 }
 
 /// Users with the given betas, homogeneous Table-I devices.

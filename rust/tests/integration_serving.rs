@@ -1,20 +1,27 @@
-//! Serving integration: the engine + server thread over real artifacts.
-//! Skips (with a notice) when artifacts are missing.
+//! Serving integration: the engine + server thread over the deterministic
+//! SimBackend — the full J-DOB serving path (group, plan, prefix, batch,
+//! tail, account) with zero external dependencies. Runs unconditionally in
+//! tier-1; with `--features pjrt` + artifacts the server transparently
+//! executes the AOT artifacts instead (same assertions).
 
 mod common;
 
 use std::time::Duration;
 
-use common::{artifacts_dir, artifacts_present, ctx};
+use common::{artifacts_dir, ctx, sim_backend};
 use jdob::algo::jdob::JDob;
 use jdob::algo::types::User;
 use jdob::coordinator::engine::ServingEngine;
 use jdob::coordinator::request::InferenceRequest;
 use jdob::coordinator::server::{start, WindowPolicy};
 use jdob::energy::device::DeviceModel;
-use jdob::runtime::ModelRuntime;
+use jdob::runtime::InferenceBackend;
 
-fn mk_requests(c: &jdob::algo::types::PlanningContext, m: usize, beta: f64) -> Vec<InferenceRequest> {
+fn mk_requests(
+    c: &jdob::algo::types::PlanningContext,
+    m: usize,
+    beta: f64,
+) -> Vec<InferenceRequest> {
     let dev = DeviceModel::from_config(&c.cfg);
     let deadline = User::deadline_from_beta(beta, &dev, c.tables.total_work());
     let elems: usize = c.profile.input_shape.iter().product();
@@ -31,12 +38,8 @@ fn mk_requests(c: &jdob::algo::types::PlanningContext, m: usize, beta: f64) -> V
 
 #[test]
 fn engine_serves_window_with_correct_accounting() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let c = ctx();
-    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let rt = sim_backend();
     let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
     let reqs = mk_requests(&c, 4, 30.25);
     let out = engine.serve_window(&reqs, 0.0).unwrap();
@@ -58,12 +61,8 @@ fn engine_serves_window_with_correct_accounting() {
 
 #[test]
 fn batched_logits_equal_individual_forwards() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let c = ctx();
-    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let rt = sim_backend();
     let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
     let reqs = mk_requests(&c, 3, 30.25);
     let out = engine.serve_window(&reqs, 0.0).unwrap();
@@ -80,12 +79,8 @@ fn batched_logits_equal_individual_forwards() {
 
 #[test]
 fn mixed_deadlines_split_into_groups() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let c = ctx();
-    let rt = ModelRuntime::new(&artifacts_dir()).unwrap();
+    let rt = sim_backend();
     let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
     let dev = DeviceModel::from_config(&c.cfg);
     let total = c.tables.total_work();
@@ -112,16 +107,28 @@ fn mixed_deadlines_split_into_groups() {
 }
 
 #[test]
+fn serving_is_deterministic() {
+    // Two engines over two fresh backends must produce identical logits —
+    // the property that makes every other suite reproducible.
+    let c = ctx();
+    let reqs = mk_requests(&c, 3, 30.25);
+    let run = || {
+        let rt = sim_backend();
+        let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
+        let out = engine.serve_window(&reqs, 0.0).unwrap();
+        out.responses.iter().map(|r| r.logits.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
 fn threaded_server_roundtrip() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
     let c = ctx();
     let policy = WindowPolicy {
         max_batch: 4,
         max_wait: Duration::from_millis(50),
     };
+    // artifacts_dir() may not exist — the server falls back to SimBackend.
     let (handle, join) = start(c.clone(), artifacts_dir(), "J-DOB", policy);
     let reqs = mk_requests(&c, 4, 30.25);
 

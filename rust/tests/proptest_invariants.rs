@@ -16,7 +16,7 @@ use jdob::algo::sweep::build_setup;
 use jdob::algo::validate::validate_plan;
 use jdob::util::rng::Rng;
 
-const CASES: u64 = 60;
+const CASES: u64 = 200;
 
 fn scenario(seed: u64) -> (jdob::algo::types::PlanningContext, Vec<jdob::algo::types::User>) {
     let c = ctx();
@@ -26,6 +26,69 @@ fn scenario(seed: u64) -> (jdob::algo::types::PlanningContext, Vec<jdob::algo::t
     let hi = lo + rng.gen_range(0.1, 26.0);
     let users = random_users(&c, m, (lo, hi), &mut rng);
     (c, users)
+}
+
+/// Fastpath parity: `JDob { fast: true }` (the alloc-free candidate
+/// pricing) and `JDob::reference()` must produce *identical* plans —
+/// partition, batch, offload set, per-user decisions — and energies within
+/// 1e-9 relative, across 200+ seeded scenarios and both idle and busy GPUs.
+/// This is the regression fence that lets perf PRs touch the hot path.
+#[test]
+fn prop_fastpath_matches_reference_plans() {
+    let mut compared = 0usize;
+    for seed in 0..CASES {
+        let (c, users) = scenario(seed ^ 0x00FA57);
+        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        for t_free in [0.0, min_deadline * 0.5] {
+            let fast = JDob::full().solve(&c, &users, t_free);
+            let reference = JDob::reference().solve(&c, &users, t_free);
+            match (fast, reference) {
+                (None, None) => {}
+                (Some(f), Some(r)) => {
+                    compared += 1;
+                    assert_eq!(f.partition, r.partition, "seed {seed} t_free {t_free}");
+                    assert_eq!(f.batch_size, r.batch_size, "seed {seed} t_free {t_free}");
+                    assert_eq!(f.offload_ids(), r.offload_ids(), "seed {seed} t_free {t_free}");
+                    let rel = (f.total_energy - r.total_energy).abs() / r.total_energy;
+                    assert!(
+                        rel < 1e-9,
+                        "seed {seed} t_free {t_free}: fast {} vs reference {}",
+                        f.total_energy,
+                        r.total_energy
+                    );
+                    assert!(
+                        (f.t_free_end - r.t_free_end).abs() <= r.t_free_end.abs() * 1e-9 + 1e-15,
+                        "seed {seed}: t_free_end {} vs {}",
+                        f.t_free_end,
+                        r.t_free_end
+                    );
+                    for (uf, ur) in f.users.iter().zip(&r.users) {
+                        assert_eq!(uf.id, ur.id, "seed {seed}");
+                        assert_eq!(uf.offloaded, ur.offloaded, "seed {seed} user {}", uf.id);
+                        for (a, b, what) in [
+                            (uf.f_dev, ur.f_dev, "f_dev"),
+                            (uf.finish_time, ur.finish_time, "finish_time"),
+                            (uf.energy_compute, ur.energy_compute, "energy_compute"),
+                            (uf.energy_tx, ur.energy_tx, "energy_tx"),
+                        ] {
+                            assert!(
+                                (a - b).abs() <= b.abs() * 1e-9 + 1e-15,
+                                "seed {seed} user {} {what}: {a} vs {b}",
+                                uf.id
+                            );
+                        }
+                    }
+                }
+                (f, r) => panic!(
+                    "seed {seed} t_free {t_free}: feasibility disagreement \
+                     (fast {} vs reference {})",
+                    f.is_some(),
+                    r.is_some()
+                ),
+            }
+        }
+    }
+    assert!(compared >= 200, "expected 200+ comparable scenarios, got {compared}");
 }
 
 #[test]
