@@ -1,0 +1,167 @@
+//! Server throughput: sequential leader (plan window k, then execute it,
+//! then plan k+1...) vs the pipelined scheduler (plan k+1 while k executes
+//! behind a bounded channel), across admission policies and fleet sizes.
+//!
+//! Both modes share the identical scheduler core and executor, replaying
+//! the same pre-stamped trace on a virtual clock — so the *only*
+//! difference measured is the plan/execute overlap.  Heterogeneous
+//! deadlines make OG grouping do real DP work per window, which is the
+//! planning cost the pipeline hides behind GPU execution.
+//!
+//! Run: `cargo bench --bench server_throughput`
+//! (set JDOB_BENCH_QUICK=1 to skip the largest fleet)
+
+use std::time::Instant;
+
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::{PlanningContext, User};
+use jdob::coordinator::engine::ServingEngine;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::energy::device::DeviceModel;
+use jdob::runtime::{SimBackend, SIM_SEED};
+use jdob::sched::admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+use jdob::sched::clock::VirtualClock;
+use jdob::sched::pipeline::run_pipelined;
+use jdob::sched::scheduler::{run_events, Arrival, Scheduler, SliceSource};
+use jdob::util::benchkit::header;
+use jdob::util::rng::Rng;
+
+fn backend(c: &PlanningContext) -> SimBackend {
+    SimBackend::from_profile(&c.profile, &c.cfg.buckets, SIM_SEED).expect("default profile")
+}
+
+/// `m` requests with heterogeneous deadlines (beta ~ U[2, 20]), arriving
+/// 1 ms apart — several admission windows under every policy.
+fn trace(c: &PlanningContext, m: usize, seed: u64) -> Vec<Arrival<InferenceRequest>> {
+    let dev = DeviceModel::from_config(&c.cfg);
+    let total = c.tables.total_work();
+    let elems: usize = c.profile.input_shape.iter().product();
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..m)
+        .map(|id| {
+            let beta = rng.gen_range(2.0, 20.0);
+            let deadline = User::deadline_from_beta(beta, &dev, total);
+            let user = User {
+                id,
+                deadline,
+                dev: dev.clone(),
+            };
+            let input: Vec<f32> = (0..elems)
+                .map(|i| ((i * 31 + id * 7) % 251) as f32 / 251.0 - 0.5)
+                .collect();
+            Arrival::with_payload(
+                user,
+                id as f64 * 1e-3,
+                InferenceRequest {
+                    user_id: id,
+                    input,
+                    deadline_s: deadline,
+                },
+            )
+        })
+        .collect()
+}
+
+/// Sequential leader: plan and execute each window on one thread.
+fn run_sequential(
+    c: &PlanningContext,
+    arrivals: Vec<Arrival<InferenceRequest>>,
+    policy: Box<dyn AdmissionPolicy>,
+) -> (f64, usize) {
+    let solver = JDob::full();
+    let rt = backend(c);
+    let engine = ServingEngine::executor(c.clone(), &rt);
+    let mut sched = Scheduler::new(c.clone(), &solver, policy);
+    let mut clock = VirtualClock::new();
+    let mut source = SliceSource::new(arrivals);
+    let mut served = 0usize;
+    let t0 = Instant::now();
+    run_events(&mut sched, &mut clock, &mut source, &mut |window, planned| {
+        let reqs: Vec<&InferenceRequest> = window.iter().map(|a| &a.payload).collect();
+        let out = engine.execute_window(&reqs, &planned).expect("executes");
+        served += out.responses.len();
+        true
+    });
+    (t0.elapsed().as_secs_f64(), served)
+}
+
+/// Pipelined scheduler: plan window k+1 while window k executes.
+fn run_pipeline(
+    c: &PlanningContext,
+    arrivals: Vec<Arrival<InferenceRequest>>,
+    policy: Box<dyn AdmissionPolicy>,
+    depth: usize,
+) -> (f64, usize) {
+    let solver = JDob::full();
+    let mut sched = Scheduler::new(c.clone(), &solver, policy);
+    let mut clock = VirtualClock::new();
+    let mut source = SliceSource::new(arrivals);
+    let exec_c = c.clone();
+    // construct the backend outside the timed region, exactly like the
+    // sequential variant — only scheduling + execution are compared
+    let rt = backend(&exec_c);
+    let t0 = Instant::now();
+    let served = run_pipelined(&mut sched, &mut clock, &mut source, depth, move |rx| {
+        let engine = ServingEngine::executor(exec_c, &rt);
+        let mut served = 0usize;
+        while let Ok(batch) = rx.recv() {
+            let reqs: Vec<&InferenceRequest> =
+                batch.window.iter().map(|a| &a.payload).collect();
+            let out = engine.execute_window(&reqs, &batch.planned).expect("executes");
+            served += out.responses.len();
+        }
+        served
+    });
+    (t0.elapsed().as_secs_f64(), served)
+}
+
+const POLICY_NAMES: [&str; 3] = ["size-bound", "time-bound", "earliest-slack"];
+
+fn policy_by_name(name: &str, max_batch: usize) -> Box<dyn AdmissionPolicy> {
+    match name {
+        "size-bound" => Box::new(SizeBound::new(max_batch)),
+        "time-bound" => Box::new(TimeBound::new(max_batch as f64 * 1e-3, max_batch)),
+        _ => Box::new(EarliestSlack::new(max_batch as f64 * 1e-3, max_batch, 0.02)),
+    }
+}
+
+fn main() {
+    let ctx = PlanningContext::default_analytic();
+    let quick = std::env::var("JDOB_BENCH_QUICK").is_ok();
+
+    header("sequential leader vs pipelined scheduler (SimBackend, windows of 16)");
+    let fleets: &[usize] = if quick { &[8, 64] } else { &[8, 64, 512] };
+    for &m in fleets {
+        let (t_seq, s_seq) = run_sequential(&ctx, trace(&ctx, m, 1), Box::new(SizeBound::new(16)));
+        let (t_pipe, s_pipe) = run_pipeline(&ctx, trace(&ctx, m, 1), Box::new(SizeBound::new(16)), 2);
+        assert_eq!(s_seq, m);
+        assert_eq!(s_pipe, m);
+        println!(
+            "M={m:>4}  sequential {:>8.1} req/s ({:>7.1} ms)   pipelined {:>8.1} req/s ({:>7.1} ms)   speedup {:.2}x",
+            s_seq as f64 / t_seq,
+            t_seq * 1e3,
+            s_pipe as f64 / t_pipe,
+            t_pipe * 1e3,
+            t_seq / t_pipe
+        );
+    }
+
+    header("admission policies at M = 64 (sequential vs pipelined)");
+    for name in POLICY_NAMES {
+        let (t_seq, _) = run_sequential(&ctx, trace(&ctx, 64, 2), policy_by_name(name, 16));
+        let (t_pipe, _) = run_pipeline(&ctx, trace(&ctx, 64, 2), policy_by_name(name, 16), 2);
+        println!(
+            "{name:>16}  sequential {:>8.1} req/s   pipelined {:>8.1} req/s   speedup {:.2}x",
+            64.0 / t_seq,
+            64.0 / t_pipe,
+            t_seq / t_pipe
+        );
+    }
+
+    header("pipeline depth at M = 64 (size-bound 16)");
+    for depth in [1usize, 2, 4] {
+        let (t, s) = run_pipeline(&ctx, trace(&ctx, 64, 3), Box::new(SizeBound::new(16)), depth);
+        assert_eq!(s, 64);
+        println!("depth {depth}: {:>8.1} req/s ({:>7.1} ms)", s as f64 / t, t * 1e3);
+    }
+}

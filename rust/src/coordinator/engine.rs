@@ -1,46 +1,54 @@
-//! The serving engine: one admission window end-to-end.
+//! The serving engine — the **executor stage** (L3) of the scheduler
+//! pipeline: it turns an already-planned window ([`PlannedWindow`], built
+//! by the L2 scheduler core in [`crate::sched`]) into executed inferences
+//! on any [`InferenceBackend`] and bills the ledger/metrics.
 //!
-//! Pipeline per window:
-//! 1. wrap requests into [`User`]s (deadline relative to window close);
-//! 2. OG grouping + J-DOB inner planning (the paper's full stack);
-//! 3. execute each group in GPU order on any [`InferenceBackend`]
-//!    (the default `SimBackend`, or PJRT with `--features pjrt`):
-//!    * local users — full model at b=1 (device stand-in); energy/latency
-//!      billed from the plan;
-//!    * offloaded users — prefix blocks at b=1 per user, activations
-//!      gathered into one batch tensor, edge tail executed at B_o;
-//! 4. validate against the plan's promises, fill the ledger and metrics.
+//! Execution per planned window ([`ServingEngine::execute_window`]):
+//! * grouped-plan users, group by group in GPU order:
+//!   - offloaded — prefix blocks at b=1 per user (device stand-in),
+//!     activations gathered into one batch tensor, edge tail at B_o;
+//!   - plan-local — full model at b=1; energy/latency billed from the plan;
+//! * fallback users (admitted but not GPU-eligible — e.g. their remaining
+//!   deadline did not clear the busy horizon — or left unplanned because
+//!   the grouping found no feasible plan) — full model at b=1, billed at
+//!   the deadline-optimal device frequency the scheduler chose;
+//! * per-group plans are re-validated against the paper's constraints and
+//!   recorded as [`GroupTelemetry`].
 //!
-//! The engine is synchronous and backend-agnostic;
-//! [`crate::coordinator::server`] wraps it in a threaded ingress loop.
+//! Planning does NOT happen here anymore: the scheduler owns admission,
+//! eligibility and the GPU-busy horizon.  [`ServingEngine::serve_window`]
+//! remains as the synchronous plan-then-execute convenience used by the
+//! CLI demo and the integration tests; the pipelined path is
+//! [`crate::coordinator::server`] over [`crate::sched::pipeline`].
 
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::algo::grouping::optimal_grouping;
 use crate::algo::types::{GroupSolver, PlanningContext, User};
 use crate::algo::validate::validate_plan;
 use crate::coordinator::ledger::EnergyLedger;
-use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::metrics::{GroupTelemetry, ServingMetrics};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::energy::device::DeviceModel;
 use crate::runtime::InferenceBackend;
+use crate::sched::scheduler::{plan_window, Arrival, PlannedWindow};
 
-/// Outcome of serving one window.
+/// Outcome of executing one window.
 #[derive(Debug)]
 pub struct ServeOutcome {
     pub responses: Vec<InferenceResponse>,
     pub ledger: EnergyLedger,
     pub metrics: ServingMetrics,
-    /// (group sizes, partition, batch size) per executed group — telemetry.
-    pub groups: Vec<(usize, usize, usize)>,
 }
 
 pub struct ServingEngine<'rt> {
     pub ctx: PlanningContext,
     pub runtime: &'rt dyn InferenceBackend,
-    pub solver: Box<dyn GroupSolver>,
+    /// Solver for the [`ServingEngine::serve_window`] plan-then-execute
+    /// compat path; `None` for execute-only engines (the pipelined
+    /// executor stage consumes already-planned windows and never plans).
+    pub solver: Option<Box<dyn GroupSolver>>,
 }
 
 impl<'rt> ServingEngine<'rt> {
@@ -52,56 +60,115 @@ impl<'rt> ServingEngine<'rt> {
         Self {
             ctx,
             runtime,
-            solver,
+            solver: Some(solver),
         }
     }
 
-    /// Serve one admission window of requests. `t_free` is the GPU-busy
-    /// horizon carried over from the previous window (virtual seconds).
+    /// Execute-only engine (no solver): for consumers of already-planned
+    /// windows — the executor stage of the serving pipeline.
+    pub fn executor(ctx: PlanningContext, runtime: &'rt dyn InferenceBackend) -> Self {
+        Self {
+            ctx,
+            runtime,
+            solver: None,
+        }
+    }
+
+    /// Synchronous plan-then-execute for one window: plans via the shared
+    /// scheduler core (window closing at t=0, GPU busy until `t_free`) and
+    /// executes immediately.  No overlap — the pipelined server is the
+    /// production path.
     pub fn serve_window(
         &self,
         requests: &[InferenceRequest],
         t_free: f64,
     ) -> Result<ServeOutcome> {
         ensure!(!requests.is_empty(), "empty window");
+        let solver = self
+            .solver
+            .as_deref()
+            .context("serve_window needs a solver — construct with ServingEngine::new")?;
         let dev = DeviceModel::from_config(&self.ctx.cfg);
-        let users: Vec<User> = requests
+        let window: Vec<Arrival> = requests
             .iter()
-            .map(|r| User {
-                id: r.user_id,
-                deadline: r.deadline_s,
-                dev: dev.clone(),
+            .map(|r| {
+                Arrival::new(
+                    User {
+                        id: r.user_id,
+                        deadline: r.deadline_s,
+                        dev: dev.clone(),
+                    },
+                    0.0,
+                )
             })
             .collect();
+        let planned = plan_window(&self.ctx, solver, &window, 0.0, t_free);
+        self.execute_window(requests, &planned)
+    }
 
-        let grouped = optimal_grouping(&self.ctx, &users, self.solver.as_ref(), t_free)
-            .context("no feasible grouped plan for this window")?;
+    /// Execute one planned window. `requests` must be in window order —
+    /// aligned one-to-one with `planned.outcomes`.  Generic over
+    /// [`Borrow`] so the executor stage can pass `&[&InferenceRequest]`
+    /// straight off the in-flight batch without cloning input tensors.
+    ///
+    /// [`Borrow`]: std::borrow::Borrow
+    pub fn execute_window<Q: std::borrow::Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+    ) -> Result<ServeOutcome> {
+        ensure!(
+            requests.len() == planned.outcomes.len(),
+            "window mismatch: {} requests vs {} outcomes",
+            requests.len(),
+            planned.outcomes.len()
+        );
+        for (r, oc) in requests.iter().zip(&planned.outcomes) {
+            ensure!(
+                r.borrow().user_id == oc.user_id,
+                "window order mismatch at user {}",
+                r.borrow().user_id
+            );
+        }
 
         let mut ledger = EnergyLedger::default();
         let mut metrics = ServingMetrics::default();
         let mut responses: Vec<Option<InferenceResponse>> = vec![None; requests.len()];
-        let mut groups = Vec::new();
-        // request index by user id (ids are unique within a window)
-        let by_id = |id: usize| requests.iter().position(|r| r.user_id == id).expect("id known");
 
-        for (member_ids, plan) in &grouped.groups {
+        // each group was planned against the previous group's GPU-free end
+        let mut t_free_check = planned.rel_t_free;
+        for (member_ids, plan) in planned.grouped.iter().flat_map(|g| &g.groups) {
             validate_plan(
                 &self.ctx,
-                &member_ids.iter().map(|&i| users[i].clone()).collect::<Vec<_>>(),
+                &member_ids
+                    .iter()
+                    .map(|&i| planned.eligible[i].clone())
+                    .collect::<Vec<_>>(),
                 plan,
-                // the plan was produced against the cascading t_free recorded inside
-                plan.t_free_end.min(f64::INFINITY),
+                t_free_check,
             )
             .ok(); // validation errors are asserted in tests; never fatal in prod
-            groups.push((member_ids.len(), plan.partition, plan.batch_size));
+            t_free_check = plan.t_free_end;
+            metrics.record_group(GroupTelemetry {
+                users: member_ids.len(),
+                partition: plan.partition,
+                batch_size: plan.batch_size,
+                // Plan.f_edge is NaN for all-local groups; record 0.0 so
+                // telemetry stays comparable (PartialEq) and queryable
+                f_edge_hz: if plan.batch_size > 0 { plan.f_edge } else { 0.0 },
+                edge_energy_j: plan.edge_energy,
+            });
 
             // ---- edge batch: gather offloaded users' prefix outputs ----
+            // Window (= request) indices come positionally through
+            // `eligible_pos`, never by user-id lookup — duplicate ids in a
+            // window cannot cross-wire inputs or billing.
             let n_tilde = plan.partition;
-            let offloaded: Vec<usize> = plan
-                .users
+            let offloaded: Vec<usize> = member_ids
                 .iter()
-                .filter(|u| u.offloaded)
-                .map(|u| by_id(u.id))
+                .zip(&plan.users)
+                .filter(|(_, up)| up.offloaded)
+                .map(|(&eidx, _)| planned.eligible_pos[eidx])
                 .collect();
 
             if !offloaded.is_empty() {
@@ -109,11 +176,12 @@ impl<'rt> ServingEngine<'rt> {
                 let elems = self.runtime.elems_at_cut(n_tilde);
                 let mut batch_input = Vec::with_capacity(offloaded.len() * elems);
                 for &ri in &offloaded {
+                    let input = &requests[ri].borrow().input;
                     let act = if n_tilde == 0 {
-                        requests[ri].input.clone()
+                        input.clone()
                     } else {
                         // device-side prefix at b=1 (phone stand-in)
-                        let mut a = requests[ri].input.clone();
+                        let mut a = input.clone();
                         for n in 1..=n_tilde {
                             a = self.runtime.run_block(n, &a, 1)?;
                         }
@@ -124,7 +192,8 @@ impl<'rt> ServingEngine<'rt> {
                 }
                 let logits_flat = self
                     .runtime
-                    .run_tail(n_tilde, &batch_input, offloaded.len())?;
+                    .run_tail(n_tilde, &batch_input, offloaded.len())
+                    .context("edge tail execution")?;
                 let wall = t0.elapsed().as_secs_f64();
                 let per = self.ctx.profile.num_classes;
                 metrics.batches += 1;
@@ -133,69 +202,92 @@ impl<'rt> ServingEngine<'rt> {
                 ledger.record_edge(plan.edge_energy);
 
                 for (k, &ri) in offloaded.iter().enumerate() {
-                    let up = plan
-                        .users
-                        .iter()
-                        .find(|u| u.id == requests[ri].user_id)
-                        .expect("planned");
-                    let met = up.finish_time <= requests[ri].deadline_s + 1e-9;
-                    ledger.record_request(up.energy_compute, up.energy_tx, met);
-                    metrics.modeled_latency.record_s(up.finish_time);
+                    let oc = &planned.outcomes[ri];
+                    ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
+                    metrics.modeled_latency.record_s(oc.latency_s);
                     metrics.wall_latency.record_s(wall);
                     responses[ri] = Some(InferenceResponse {
-                        user_id: requests[ri].user_id,
+                        user_id: oc.user_id,
                         logits: logits_flat[k * per..(k + 1) * per].to_vec(),
-                        modeled_latency_s: up.finish_time,
+                        modeled_latency_s: oc.latency_s,
                         wall_latency_s: wall,
-                        deadline_met: met,
+                        deadline_met: oc.deadline_met,
                         offloaded: true,
                         partition: n_tilde,
-                        device_energy_j: up.device_energy(),
+                        device_energy_j: oc.device_energy_j(),
                     });
                 }
             }
 
-            // ---- local users: full model at b=1 ----
-            for up in plan.users.iter().filter(|u| !u.offloaded) {
-                let ri = by_id(up.id);
-                let t0 = Instant::now();
-                let logits = self.runtime.run_full(&requests[ri].input, 1)?;
-                let wall = t0.elapsed().as_secs_f64();
-                let met = up.finish_time <= requests[ri].deadline_s + 1e-9;
-                ledger.record_request(up.energy_compute, up.energy_tx, met);
-                metrics.modeled_latency.record_s(up.finish_time);
-                metrics.wall_latency.record_s(wall);
-                metrics.local_samples += 1;
-                responses[ri] = Some(InferenceResponse {
-                    user_id: requests[ri].user_id,
-                    logits,
-                    modeled_latency_s: up.finish_time,
-                    wall_latency_s: wall,
-                    deadline_met: met,
-                    offloaded: false,
-                    partition: self.ctx.n(),
-                    device_energy_j: up.device_energy(),
-                });
+            // ---- plan-local users: full model at b=1 ----
+            for (&eidx, _) in member_ids
+                .iter()
+                .zip(&plan.users)
+                .filter(|(_, up)| !up.offloaded)
+            {
+                let ri = planned.eligible_pos[eidx];
+                let oc = &planned.outcomes[ri];
+                responses[ri] =
+                    Some(self.run_local(requests[ri].borrow(), oc, &mut ledger, &mut metrics)?);
             }
         }
 
+        // ---- fallback users (admitted, not GPU-eligible): local at the
+        // scheduler-chosen deadline-optimal frequency ----
+        for (ri, oc) in planned.outcomes.iter().enumerate() {
+            if responses[ri].is_some() {
+                continue;
+            }
+            debug_assert!(!oc.in_plan, "plan member without a response");
+            responses[ri] =
+                Some(self.run_local(requests[ri].borrow(), oc, &mut ledger, &mut metrics)?);
+        }
+
         metrics.requests = requests.len();
-        metrics.window_span_s = grouped.t_free_end.max(
-            responses
-                .iter()
-                .flatten()
-                .map(|r| r.modeled_latency_s)
-                .fold(0.0, f64::max),
-        );
+        // GPU component: busy time THIS window added beyond the carried-in
+        // horizon (carry-in was already billed to the windows that made it)
+        let gpu_span = (planned.t_free_abs - planned.close - planned.rel_t_free).max(0.0);
+        metrics.window_span_s = planned
+            .outcomes
+            .iter()
+            .map(|oc| oc.finish_abs - planned.close)
+            .fold(gpu_span, f64::max);
         let responses: Vec<InferenceResponse> = responses
             .into_iter()
-            .map(|r| r.expect("every request planned exactly once"))
+            .map(|r| r.expect("every request served exactly once"))
             .collect();
         Ok(ServeOutcome {
             responses,
             ledger,
             metrics,
-            groups,
+        })
+    }
+
+    /// Full-model b=1 execution for a locally-served user (plan-local or
+    /// fallback), billed from its modeled outcome.
+    fn run_local(
+        &self,
+        request: &InferenceRequest,
+        oc: &crate::sched::scheduler::UserOutcome,
+        ledger: &mut EnergyLedger,
+        metrics: &mut ServingMetrics,
+    ) -> Result<InferenceResponse> {
+        let t0 = Instant::now();
+        let logits = self.runtime.run_full(&request.input, 1)?;
+        let wall = t0.elapsed().as_secs_f64();
+        ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
+        metrics.modeled_latency.record_s(oc.latency_s);
+        metrics.wall_latency.record_s(wall);
+        metrics.local_samples += 1;
+        Ok(InferenceResponse {
+            user_id: oc.user_id,
+            logits,
+            modeled_latency_s: oc.latency_s,
+            wall_latency_s: wall,
+            deadline_met: oc.deadline_met,
+            offloaded: false,
+            partition: oc.partition,
+            device_energy_j: oc.device_energy_j(),
         })
     }
 }

@@ -49,6 +49,23 @@ impl LatencySummary {
     }
 }
 
+/// Telemetry of one executed group (one batch window on the GPU): the
+/// named replacement for the positional `(size, partition, batch)` tuple
+/// that used to ride on `ServeOutcome`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupTelemetry {
+    /// Users in the group (offloaded + plan-local).
+    pub users: usize,
+    /// Common partition point ñ the group was planned at.
+    pub partition: usize,
+    /// Edge batch size B_o (offloaded users).
+    pub batch_size: usize,
+    /// Planned edge GPU frequency (Hz); meaningful iff `batch_size > 0`.
+    pub f_edge_hz: f64,
+    /// Modeled edge energy of the group (J).
+    pub edge_energy_j: f64,
+}
+
 /// Serving metrics for one engine run.
 #[derive(Debug, Default, Clone)]
 pub struct ServingMetrics {
@@ -60,9 +77,27 @@ pub struct ServingMetrics {
     pub wall_latency: LatencySummary,
     pub edge_busy_s: f64,
     pub window_span_s: f64,
+    /// Per-group telemetry, in execution order.
+    pub groups: Vec<GroupTelemetry>,
 }
 
 impl ServingMetrics {
+    /// Record one planned/executed group.
+    pub fn record_group(&mut self, g: GroupTelemetry) {
+        self.groups.push(g);
+    }
+
+    /// Users covered by group plans (should equal `requests` minus any
+    /// local-fallback users).
+    pub fn grouped_users(&self) -> usize {
+        self.groups.iter().map(|g| g.users).sum()
+    }
+
+    /// Largest planned edge batch across groups.
+    pub fn max_batch_size(&self) -> usize {
+        self.groups.iter().map(|g| g.batch_size).max().unwrap_or(0)
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         if self.window_span_s <= 0.0 {
             0.0
@@ -131,5 +166,27 @@ mod tests {
             ..Default::default()
         };
         assert!((m.throughput_rps() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_telemetry_is_queryable() {
+        let mut m = ServingMetrics::default();
+        m.record_group(GroupTelemetry {
+            users: 3,
+            partition: 5,
+            batch_size: 2,
+            f_edge_hz: 1.2e9,
+            edge_energy_j: 0.01,
+        });
+        m.record_group(GroupTelemetry {
+            users: 1,
+            partition: 8, // all local: no edge batch
+            batch_size: 0,
+            f_edge_hz: 0.0,
+            edge_energy_j: 0.0,
+        });
+        assert_eq!(m.grouped_users(), 4);
+        assert_eq!(m.max_batch_size(), 2);
+        assert_eq!(m.groups[0].partition, 5);
     }
 }

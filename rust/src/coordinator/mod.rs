@@ -1,14 +1,19 @@
-//! The serving coordinator: turns plans into executed inferences.
+//! The serving coordinator (L3): transport and execution around the shared
+//! L2 scheduler core in [`crate::sched`].
 //!
 //! * [`request`] — request/response types.
 //! * [`ledger`] — energy & deadline accounting.
-//! * [`metrics`] — latency/throughput metrics registry.
-//! * [`engine`] — synchronous serving engine: admission window → OG
-//!   grouping → J-DOB plan → device-prefix / uplink / edge-batch execution
+//! * [`metrics`] — latency/throughput metrics registry, including per-group
+//!   [`metrics::GroupTelemetry`].
+//! * [`engine`] — the GPU **executor stage**: takes a `PlannedWindow` from
+//!   the scheduler and runs device-prefix / uplink / edge-batch execution
 //!   over any [`crate::runtime::InferenceBackend`].
 //! * [`server`] — threaded front (std::thread + mpsc; no tokio in the
-//!   offline vendor set): windowed batching, response delivery, backend
-//!   constructed on the leader thread.
+//!   offline vendor set): live ingress feeding the scheduler's **planner
+//!   stage**, pipelined into the executor so planning window *k+1*
+//!   overlaps executing window *k*.  Backend constructed on the executor
+//!   thread.
+//! * [`trace`] — ASCII Gantt reconstruction of planned timelines.
 //!
 //! The mobile devices and the radio are simulated (DESIGN.md
 //! §Hardware-Adaptation): device-side prefix computation physically runs on
@@ -24,5 +29,6 @@ pub mod request;
 pub mod server;
 pub mod trace;
 
-pub use engine::{ServingEngine, ServeOutcome};
+pub use engine::{ServeOutcome, ServingEngine};
+pub use metrics::GroupTelemetry;
 pub use request::{InferenceRequest, InferenceResponse};

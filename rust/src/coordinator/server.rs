@@ -1,29 +1,52 @@
-//! Threaded serving front: a leader thread owning the engine, fed by an
-//! mpsc ingress; requests are admitted in windows (size- or time-bounded)
-//! and answered through per-request reply channels.
+//! Threaded serving front, rebuilt on the shared scheduler core
+//! ([`crate::sched`]): an mpsc ingress feeds a **planner stage** running
+//! the event loop ([`crate::sched::scheduler::run_events`]) on a
+//! [`WallClock`], which hands planned windows through a bounded channel to
+//! a **GPU executor stage** ([`ServingEngine::execute_window`]) — so
+//! window *k+1* is admitted and planned (OG grouping + J-DOB) while window
+//! *k*'s batches execute on the backend.
 //!
-//! This is the L3 "leader" of the three-layer architecture. The execution
-//! substrate is any [`InferenceBackend`], constructed *on* the leader
-//! thread (PJRT client handles are not Send; the default `SimBackend`
-//! happens to be, but the factory design keeps both honest).  The offline
-//! vendor set has no tokio; std::thread + channels serve the same role
-//! with fewer moving parts at this concurrency level.
+//! Post-refactor layering (L1 algo / L2 scheduler / L3 transport — see
+//! `rust/src/sched/README.md`): this module is pure L3.  Admission
+//! policies, the GPU-busy horizon and all windowing live in the scheduler;
+//! the same core drives the virtual-time simulator, so the planner-side
+//! behavior here is the one `sim::online` tests exhaustively.
+//!
+//! The execution substrate is any [`InferenceBackend`], constructed *on*
+//! the executor thread (PJRT client handles are not Send; the default
+//! `SimBackend` happens to be, but the factory design keeps both honest).
+//! The offline vendor set has no tokio; std::thread + channels serve the
+//! same role with fewer moving parts at this concurrency level.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::algo::types::{GroupSolver, PlanningContext};
+use crate::algo::types::{GroupSolver, PlanningContext, User};
 use crate::coordinator::engine::ServingEngine;
 use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::energy::device::DeviceModel;
 use crate::runtime::{default_backend, InferenceBackend};
+use crate::sched::admission::{AdmissionPolicy, TimeBound};
+use crate::sched::clock::WallClock;
+use crate::sched::pipeline::{run_pipelined_gated, PlannedBatch};
+use crate::sched::scheduler::{Arrival, ArrivalSource, Scheduler, SourceEvent};
+
+/// How many planned windows may be in flight between the planner and the
+/// GPU executor before admission backpressure kicks in.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
 
 /// One enqueued request with its reply channel.
 pub struct Enqueued {
     pub request: InferenceRequest,
     pub reply: Sender<Result<InferenceResponse, String>>,
+    /// When the client submitted — the deadline anchor.  Stamped at
+    /// `ServerHandle::submit*`, not at planner dequeue, so ingress
+    /// queueing delay (e.g. executor backpressure) eats into the deadline
+    /// instead of silently extending it.
+    pub submitted_at: Instant,
 }
 
 /// Handle for submitting requests to a running server.
@@ -35,13 +58,7 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Submit a request and block until its response arrives.
     pub fn submit(&self, request: InferenceRequest) -> Result<InferenceResponse, String> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Enqueued {
-                request,
-                reply: reply_tx,
-            })
-            .map_err(|_| "server stopped".to_string())?;
+        let reply_rx = self.submit_async(request)?;
         reply_rx.recv().map_err(|_| "server dropped reply".to_string())?
     }
 
@@ -55,14 +72,16 @@ impl ServerHandle {
             .send(Enqueued {
                 request,
                 reply: reply_tx,
+                submitted_at: Instant::now(),
             })
             .map_err(|_| "server stopped".to_string())?;
         Ok(reply_rx)
     }
 }
 
-/// Windowing policy: close the admission window after `max_batch` requests
-/// or `max_wait` since the first request, whichever comes first.
+/// Legacy windowing knobs: close the admission window after `max_batch`
+/// requests or `max_wait` since the first request, whichever comes first.
+/// Sugar for [`TimeBound`] — the scheduler core owns the actual logic.
 #[derive(Debug, Clone)]
 pub struct WindowPolicy {
     pub max_batch: usize,
@@ -78,59 +97,169 @@ impl Default for WindowPolicy {
     }
 }
 
-/// The server loop: windowed admission around the sync engine.
-///
-/// The backend and every executable/buffer live exclusively on this thread
-/// (PJRT handles are not Send); only plain request/response data crosses
-/// the channel boundary.
-fn serve_loop(
-    ctx: PlanningContext,
-    make_backend: impl FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>>,
-    solver_name: &'static str,
-    policy: WindowPolicy,
-    rx: Receiver<Enqueued>,
-) -> anyhow::Result<EnergyLedger> {
-    let backend = make_backend(&ctx)?;
-    let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name));
-    let mut cumulative = EnergyLedger::default();
-    loop {
-        // wait for the first request of a window
-        let Ok(first) = rx.recv() else {
-            break; // all senders dropped: shut down
-        };
-        let mut window = vec![first];
-        let close_at = Instant::now() + policy.max_wait;
-        while window.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= close_at {
-                break;
-            }
-            match rx.recv_timeout(close_at - now) {
-                Ok(e) => window.push(e),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
+impl WindowPolicy {
+    /// The equivalent scheduler admission policy.
+    pub fn into_admission(self) -> Box<dyn AdmissionPolicy> {
+        Box::new(TimeBound::new(self.max_wait.as_secs_f64(), self.max_batch))
+    }
+}
 
-        let reqs: Vec<InferenceRequest> = window.iter().map(|e| e.request.clone()).collect();
-        match engine.serve_window(&reqs, 0.0) {
+/// Live ingress as an [`ArrivalSource`]: requests carry their *submit*
+/// time on the shared wall-clock epoch, so the scheduler sees the same
+/// (arrival, absolute deadline) shape the simulator replays and queueing
+/// delay counts against the deadline.
+struct IngressSource {
+    rx: Receiver<Enqueued>,
+    epoch: Instant,
+    dev: DeviceModel,
+    /// Last emitted arrival time: submit stamps from racing clients can be
+    /// microseconds out of channel order; clamp to keep `at` monotone.
+    last_at: f64,
+    /// One-slot peek buffer: a dequeued arrival stamped at/after the
+    /// requested close waits here for the next window instead of being
+    /// admitted into the wrong one.
+    pending: Option<Arrival<Enqueued>>,
+}
+
+impl IngressSource {
+    fn stamp(&mut self, e: Enqueued) -> Arrival<Enqueued> {
+        let at = e
+            .submitted_at
+            .saturating_duration_since(self.epoch)
+            .as_secs_f64()
+            .max(self.last_at);
+        self.last_at = at;
+        let user = User {
+            id: e.request.user_id,
+            deadline: e.request.deadline_s,
+            dev: self.dev.clone(),
+        };
+        Arrival::with_payload(user, at, e)
+    }
+}
+
+impl ArrivalSource<Enqueued> for IngressSource {
+    fn next_before(&mut self, t: f64) -> SourceEvent<Enqueued> {
+        // serve a previously-peeked arrival first
+        if let Some(a) = self.pending.take() {
+            if a.at < t {
+                return SourceEvent::Arrival(a);
+            }
+            self.pending = Some(a);
+            return SourceEvent::TimedOut;
+        }
+        let e = if !t.is_finite() {
+            match self.rx.recv() {
+                Ok(e) => e,
+                Err(_) => return SourceEvent::Closed,
+            }
+        } else {
+            let remaining = t - self.epoch.elapsed().as_secs_f64();
+            if remaining <= 0.0 {
+                // the close has passed on the wall clock, but arrivals
+                // *submitted* before it may still sit in the channel
+                // (planner was busy); drain them so window membership
+                // matches the simulated semantics of the same trace
+                match self.rx.try_recv() {
+                    Ok(e) => e,
+                    Err(mpsc::TryRecvError::Empty) => return SourceEvent::TimedOut,
+                    Err(mpsc::TryRecvError::Disconnected) => return SourceEvent::Closed,
+                }
+            } else {
+                match self.rx.recv_timeout(Duration::from_secs_f64(remaining)) {
+                    Ok(e) => e,
+                    Err(RecvTimeoutError::Timeout) => return SourceEvent::TimedOut,
+                    Err(RecvTimeoutError::Disconnected) => return SourceEvent::Closed,
+                }
+            }
+        };
+        let a = self.stamp(e);
+        if a.at < t {
+            SourceEvent::Arrival(a)
+        } else {
+            self.pending = Some(a);
+            SourceEvent::TimedOut
+        }
+    }
+}
+
+/// The planner stage: runs the scheduler event loop over the live ingress
+/// and pipelines planned windows into the executor stage.
+///
+/// Runs on [`run_pipelined_gated`]: the planner accepts no work until the
+/// executor has constructed its backend, so a failing backend factory
+/// fails the server fast (submits error with "server stopped") rather
+/// than parking clients behind a window that will never be served.
+fn planner_loop<F>(
+    ctx: PlanningContext,
+    make_backend: F,
+    solver_name: &'static str,
+    admission: Box<dyn AdmissionPolicy>,
+    depth: usize,
+    rx: Receiver<Enqueued>,
+    epoch: Instant,
+) -> anyhow::Result<EnergyLedger>
+where
+    F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send,
+{
+    let solver = solver_from_name(solver_name);
+    let mut sched = Scheduler::new(ctx.clone(), solver.as_ref(), admission);
+    // epoch was captured before the server handle existed, so no submit
+    // can ever be stamped before second 0 of this clock
+    let mut clock = WallClock::with_epoch(epoch);
+    let mut source = IngressSource {
+        rx,
+        epoch,
+        dev: DeviceModel::from_config(&ctx.cfg),
+        last_at: 0.0,
+        pending: None,
+    };
+    let (ready_tx, ready_rx) = mpsc::channel::<bool>();
+    run_pipelined_gated(&mut sched, &mut clock, &mut source, depth, ready_rx, move |batches| {
+        executor_loop(ctx, make_backend, ready_tx, batches)
+    })
+}
+
+/// The GPU executor stage: owns the backend (constructed on this thread,
+/// readiness signalled through `ready`) and serves every planned batch,
+/// replying per request.
+fn executor_loop<F>(
+    ctx: PlanningContext,
+    make_backend: F,
+    ready: Sender<bool>,
+    batches: Receiver<PlannedBatch<Enqueued>>,
+) -> anyhow::Result<EnergyLedger>
+where
+    F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>>,
+{
+    let backend = match make_backend(&ctx) {
+        Ok(b) => {
+            let _ = ready.send(true);
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(false);
+            return Err(e);
+        }
+    };
+    let engine = ServingEngine::executor(ctx, backend.as_ref());
+    let mut cumulative = EnergyLedger::default();
+    while let Ok(batch) = batches.recv() {
+        let requests: Vec<&InferenceRequest> =
+            batch.window.iter().map(|a| &a.payload.request).collect();
+        let result = engine.execute_window(&requests, &batch.planned);
+        drop(requests); // release the borrow of batch.window before routing replies
+        match result {
             Ok(out) => {
                 cumulative.merge(&out.ledger);
-                let mut by_id = std::collections::HashMap::new();
-                for r in out.responses {
-                    by_id.insert(r.user_id, r);
-                }
-                for e in window {
-                    let resp = by_id
-                        .remove(&e.request.user_id)
-                        .ok_or_else(|| "request not planned".to_string());
-                    let _ = e.reply.send(resp);
+                for (a, resp) in batch.window.into_iter().zip(out.responses) {
+                    let _ = a.payload.reply.send(Ok(resp));
                 }
             }
             Err(err) => {
-                let msg = format!("planning/execution failed: {err:#}");
-                for e in window {
-                    let _ = e.reply.send(Err(msg.clone()));
+                let msg = format!("execution failed: {err:#}");
+                for a in batch.window {
+                    let _ = a.payload.reply.send(Err(msg.clone()));
                 }
             }
         }
@@ -151,10 +280,33 @@ pub fn solver_from_name(name: &str) -> Box<dyn GroupSolver> {
     }
 }
 
-/// Start a server thread over an explicit backend factory (run on the
-/// leader thread, so non-Send backends like the PJRT runtime are fine).
-/// Returns a submit handle and the join handle that yields the cumulative
-/// energy ledger once every [`ServerHandle`] clone is dropped.
+/// Start the pipelined server with an explicit admission policy and
+/// pipeline depth.  Returns a submit handle and the join handle that
+/// yields the cumulative energy ledger once every [`ServerHandle`] clone
+/// is dropped and the pipeline has drained.
+pub fn start_with_admission<F>(
+    ctx: PlanningContext,
+    make_backend: F,
+    solver_name: &'static str,
+    admission: Box<dyn AdmissionPolicy>,
+    depth: usize,
+) -> (ServerHandle, JoinHandle<anyhow::Result<EnergyLedger>>)
+where
+    F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
+    // clock epoch precedes the handle: every submit stamp is >= epoch
+    let epoch = Instant::now();
+    let join = std::thread::Builder::new()
+        .name("jdob-planner".into())
+        .spawn(move || planner_loop(ctx, make_backend, solver_name, admission, depth, rx, epoch))
+        .expect("spawning planner thread");
+    (ServerHandle { tx }, join)
+}
+
+/// Start a server over an explicit backend factory (run on the executor
+/// thread, so non-Send backends like the PJRT runtime are fine) with the
+/// legacy [`WindowPolicy`] windowing.
 pub fn start_with_backend<F>(
     ctx: PlanningContext,
     make_backend: F,
@@ -164,16 +316,17 @@ pub fn start_with_backend<F>(
 where
     F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static,
 {
-    let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
-    let join = std::thread::Builder::new()
-        .name("jdob-leader".into())
-        .spawn(move || serve_loop(ctx, make_backend, solver_name, policy, rx))
-        .expect("spawning leader thread");
-    (ServerHandle { tx }, join)
+    start_with_admission(
+        ctx,
+        make_backend,
+        solver_name,
+        policy.into_admission(),
+        DEFAULT_PIPELINE_DEPTH,
+    )
 }
 
-/// Start a server thread on the build's default backend: the PJRT runtime
-/// over `artifacts_dir` when compiled with `--features pjrt` and artifacts
+/// Start a server on the build's default backend: the PJRT runtime over
+/// `artifacts_dir` when compiled with `--features pjrt` and artifacts
 /// exist, the deterministic `SimBackend` otherwise.
 pub fn start(
     ctx: PlanningContext,
@@ -206,5 +359,9 @@ mod tests {
         let p = WindowPolicy::default();
         assert!(p.max_batch >= 1);
         assert!(p.max_wait > Duration::ZERO);
+        let a = p.into_admission();
+        assert_eq!(a.name(), "time-bound");
+        assert!(a.is_full(32));
+        assert!(!a.is_full(31));
     }
 }

@@ -8,11 +8,19 @@
 //! (DVFS) to minimize total energy under hard per-user deadlines.
 //!
 //! Architecture (three layers, python never on the request path):
-//! * **L3 (this crate)** — planner ([`algo`]), outer grouping, serving
-//!   coordinator ([`coordinator`]), pluggable execution [`runtime`].
+//! * **L3 (this crate)** — planner ([`algo`]), outer grouping, the shared
+//!   event-driven scheduler core ([`sched`]: admission policies, virtual/
+//!   wall clocks, plan/execute pipelining), serving coordinator
+//!   ([`coordinator`]), pluggable execution [`runtime`].
 //! * **L2** — MobileNetV2 blocks in JAX (`python/compile/model.py`), lowered
 //!   once to HLO text artifacts.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`).
+//!
+//! Within L3 the serving stack layers again (see `rust/src/sched/README.md`):
+//! L1 algorithms ([`algo`]) / L2 scheduler ([`sched`]) / L3 transport &
+//! execution ([`coordinator`], [`runtime`]).  Both the virtual-time
+//! simulator ([`sim::online`]) and the live pipelined server
+//! ([`coordinator::server`]) run on the same [`sched::Scheduler`].
 //!
 //! ## Inference backends
 //!
@@ -42,6 +50,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;
 

@@ -1,0 +1,188 @@
+//! Admission policies: when does the currently-open window close?
+//!
+//! The event loop ([`crate::sched::scheduler::run_events`]) opens a window
+//! at the first arrival and keeps admitting until the policy says stop —
+//! either because the window is full ([`AdmissionPolicy::is_full`]) or
+//! because the close time ([`AdmissionPolicy::close_by`], recomputed after
+//! every admission) has been reached.  Policies are pure decision logic:
+//! they never touch the clock, the queue, or the planner, which is what
+//! makes them swappable between the virtual-time simulator and the live
+//! server.
+
+/// Decides when an open admission window closes.
+///
+/// `opened_at` is the arrival time of the window's first request;
+/// `earliest_deadline` is the minimum *absolute* deadline over everything
+/// admitted so far (the event loop maintains it as a running min, so
+/// admission stays O(1) per arrival).  Implementations must be monotone in
+/// the sense that adding an arrival never moves `close_by` later — the
+/// event loop relies on this to re-arm its timeout after each admission.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Absolute time by which the window must close. `f64::INFINITY` means
+    /// "no time bound — close on size or stream end only".
+    fn close_by(&self, opened_at: f64, earliest_deadline: f64) -> f64;
+
+    /// Close immediately once `admitted` requests are in the window?
+    fn is_full(&self, admitted: usize) -> bool;
+}
+
+/// Close after `max_batch` requests, with no time bound: maximizes batching
+/// at unbounded queueing delay. The classic throughput-over-latency corner.
+///
+/// **Live-server caveat:** with no time bound, a partially-filled window
+/// waits for the next arrival indefinitely — clients blocked in
+/// `ServerHandle::submit` are not served until `max_batch` more requests
+/// show up or every handle is dropped. This policy fits trace replay and
+/// throughput benches; front a live ingress with [`TimeBound`] or
+/// [`EarliestSlack`] unless a saturating request stream is guaranteed.
+#[derive(Debug, Clone)]
+pub struct SizeBound {
+    pub max_batch: usize,
+}
+
+impl SizeBound {
+    pub fn new(max_batch: usize) -> Self {
+        Self {
+            max_batch: max_batch.max(1),
+        }
+    }
+}
+
+impl AdmissionPolicy for SizeBound {
+    fn name(&self) -> &'static str {
+        "size-bound"
+    }
+
+    fn close_by(&self, _opened_at: f64, _earliest_deadline: f64) -> f64 {
+        f64::INFINITY
+    }
+
+    fn is_full(&self, admitted: usize) -> bool {
+        admitted >= self.max_batch
+    }
+}
+
+/// Close `max_wait_s` after the window opened, or at `max_batch` requests,
+/// whichever comes first — the policy of the paper-style fixed windowing
+/// (`run_online`'s `window_s`) and of the legacy server `WindowPolicy`.
+#[derive(Debug, Clone)]
+pub struct TimeBound {
+    pub max_wait_s: f64,
+    pub max_batch: usize,
+}
+
+impl TimeBound {
+    pub fn new(max_wait_s: f64, max_batch: usize) -> Self {
+        Self {
+            max_wait_s: max_wait_s.max(0.0),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Pure fixed windowing: time bound only, no batch cap.
+    pub fn unbounded(max_wait_s: f64) -> Self {
+        Self::new(max_wait_s, usize::MAX)
+    }
+}
+
+impl AdmissionPolicy for TimeBound {
+    fn name(&self) -> &'static str {
+        "time-bound"
+    }
+
+    fn close_by(&self, opened_at: f64, _earliest_deadline: f64) -> f64 {
+        opened_at + self.max_wait_s
+    }
+
+    fn is_full(&self, admitted: usize) -> bool {
+        admitted >= self.max_batch
+    }
+}
+
+/// Deadline-aware windowing: like [`TimeBound`], but the window also closes
+/// `guard_s` before the earliest absolute deadline currently admitted, so a
+/// tight request is never parked behind the full wait while its slack
+/// drains.  With loose deadlines it degenerates to `TimeBound` (full
+/// batching); with tight ones it approaches immediate service — the
+/// admission-level analogue of the planner's earliest-deadline-first peel.
+#[derive(Debug, Clone)]
+pub struct EarliestSlack {
+    pub max_wait_s: f64,
+    pub max_batch: usize,
+    /// Slack reserved for planning + service after the window closes (s).
+    pub guard_s: f64,
+}
+
+impl EarliestSlack {
+    pub fn new(max_wait_s: f64, max_batch: usize, guard_s: f64) -> Self {
+        Self {
+            max_wait_s: max_wait_s.max(0.0),
+            max_batch: max_batch.max(1),
+            guard_s: guard_s.max(0.0),
+        }
+    }
+}
+
+impl AdmissionPolicy for EarliestSlack {
+    fn name(&self) -> &'static str {
+        "earliest-slack"
+    }
+
+    fn close_by(&self, opened_at: f64, earliest_deadline: f64) -> f64 {
+        (earliest_deadline - self.guard_s)
+            .min(opened_at + self.max_wait_s)
+            .max(opened_at)
+    }
+
+    fn is_full(&self, admitted: usize) -> bool {
+        admitted >= self.max_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_bound_never_times_out() {
+        let p = SizeBound::new(4);
+        assert!(p.close_by(3.0, 5.0).is_infinite());
+        assert!(!p.is_full(3));
+        assert!(p.is_full(4));
+    }
+
+    #[test]
+    fn time_bound_closes_at_fixed_offset() {
+        let p = TimeBound::new(0.1, 8);
+        assert!((p.close_by(2.0, 4.0) - 2.1).abs() < 1e-12);
+        assert!(p.is_full(8));
+        assert!(!TimeBound::unbounded(0.1).is_full(1_000_000));
+    }
+
+    #[test]
+    fn earliest_slack_closes_before_tight_deadline() {
+        let p = EarliestSlack::new(0.5, 64, 0.1);
+        // loose deadlines: behaves like the time bound
+        assert!((p.close_by(1.0, 50.0) - 1.5).abs() < 1e-12);
+        // a tight deadline pulls the close earlier (2.0 - guard 0.1)
+        assert!((p.close_by(1.0, 2.0) - 1.9).abs() < 1e-12);
+        // but never before the window opened
+        assert!((p.close_by(1.0, 0.5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn close_by_is_monotone_under_admission() {
+        // a shrinking running-min deadline must never move the close later
+        let p = EarliestSlack::new(0.5, 64, 0.05);
+        let mut earliest = 10.0f64;
+        let mut last = p.close_by(0.0, earliest);
+        for d in [8.0, 3.0, 0.4, 7.0] {
+            earliest = earliest.min(d);
+            let c = p.close_by(0.0, earliest);
+            assert!(c <= last + 1e-12, "close moved later: {c} > {last}");
+            last = c;
+        }
+    }
+}

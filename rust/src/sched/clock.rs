@@ -1,0 +1,126 @@
+//! Time abstraction of the scheduler core: one event loop serves both the
+//! virtual-time simulator (clock jumps instantly to the next event) and the
+//! wall-time server (clock sleeps until the admission window closes).
+//!
+//! All times are `f64` seconds since the clock's epoch — the same unit the
+//! planner uses for deadlines and the GPU-busy horizon, so scheduler state
+//! never converts between time domains.
+
+use std::time::{Duration, Instant};
+
+/// A monotone clock in seconds-since-epoch.
+pub trait Clock: Send {
+    /// Seconds elapsed since the clock's epoch.
+    fn now(&self) -> f64;
+
+    /// Block (wall) or jump (virtual) until `t` seconds since epoch.
+    /// A `t` in the past or non-finite is a no-op.
+    fn wait_until(&mut self, t: f64);
+}
+
+/// Simulation clock: `wait_until` advances instantly, so a whole trace
+/// replays in microseconds while every admission decision sees the same
+/// timestamps a wall-clock run of the trace would.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        if t.is_finite() && t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Real-time clock over [`Instant`]: `now` is elapsed seconds since the
+/// epoch captured at construction, `wait_until` sleeps the remainder.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Share an epoch with another component (e.g. the ingress source that
+    /// stamps arrivals), so both sides agree on what second 0 means.
+    pub fn with_epoch(epoch: Instant) -> Self {
+        Self { epoch }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        if !t.is_finite() {
+            return;
+        }
+        let remaining = t - self.now();
+        if remaining > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(remaining));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_jumps_forward_only() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.wait_until(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.wait_until(0.5); // past: no-op
+        assert_eq!(c.now(), 1.5);
+        c.wait_until(f64::INFINITY); // non-finite: no-op
+        assert_eq!(c.now(), 1.5);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_sleeps() {
+        let mut c = WallClock::new();
+        let t0 = c.now();
+        c.wait_until(t0 + 0.01);
+        assert!(c.now() >= t0 + 0.01);
+        c.wait_until(-1.0); // past: returns immediately
+        c.wait_until(f64::NAN); // non-finite: returns immediately
+    }
+
+    #[test]
+    fn wall_clocks_share_epoch() {
+        let a = WallClock::new();
+        let b = WallClock::with_epoch(a.epoch());
+        assert!((a.now() - b.now()).abs() < 0.1);
+    }
+}

@@ -1,0 +1,32 @@
+//! The event-driven scheduler core (L2 of the serving stack): one
+//! implementation of admission, window planning and GPU-horizon carry-over
+//! shared by the virtual-time simulator and the live pipelined server.
+//!
+//! Layering (see `rust/src/sched/README.md` for the full map):
+//! * **L1 — algorithms** (`crate::algo`): stateless planning — J-DOB,
+//!   OG grouping, baselines.
+//! * **L2 — scheduler** (this module): [`clock`] abstracts time (virtual
+//!   vs wall), [`admission`] decides when windows close, [`scheduler`]
+//!   runs the event loop and owns the GPU-busy horizon `t_free`,
+//!   [`pipeline`] overlaps planning of window *k+1* with execution of
+//!   window *k* over a bounded channel.
+//! * **L3 — transport & execution** (`crate::coordinator`,
+//!   `crate::runtime`): ingress/reply channels and the inference backend.
+//!
+//! Consumers: [`crate::sim::online::run_online`] drives this core with a
+//! [`VirtualClock`] and a no-op executor; [`crate::coordinator::server`]
+//! drives it with a [`WallClock`], a live ingress source, and the serving
+//! engine as the executor stage.
+
+pub mod admission;
+pub mod clock;
+pub mod pipeline;
+pub mod scheduler;
+
+pub use admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use pipeline::{run_pipelined, run_pipelined_gated, PlannedBatch};
+pub use scheduler::{
+    plan_window, run_events, Arrival, ArrivalSource, OnlineStats, PlannedWindow, Scheduler,
+    SliceSource, SourceEvent, UserOutcome,
+};

@@ -1,0 +1,179 @@
+//! Plan/execute overlap: the planner stage runs the scheduler event loop on
+//! the calling thread while an executor stage consumes [`PlannedBatch`]es
+//! from a bounded channel on its own thread — so window *k+1* is admitted
+//! and planned (OG grouping + J-DOB) while window *k*'s batches execute on
+//! the inference backend.
+//!
+//! The channel bound is the pipeline depth: the planner can run at most
+//! `depth` windows ahead before backpressure stalls admission, which keeps
+//! the planned-against horizon honest (planning arbitrarily far ahead of a
+//! slow GPU would let modeled and actual `t_free` drift apart).
+//!
+//! The executor closure is constructed *inside* the spawned thread's scope,
+//! so non-`Send` backends (PJRT client handles) can be built there — the
+//! same factory discipline the sequential leader used.
+
+use std::sync::mpsc;
+
+use crate::sched::clock::Clock;
+use crate::sched::scheduler::{run_events, Arrival, ArrivalSource, PlannedWindow, Scheduler};
+
+/// One planned window in flight between the planner and executor stages.
+pub struct PlannedBatch<P> {
+    /// The admitted arrivals, in window order (payloads carry transport
+    /// state — reply channels, input tensors).
+    pub window: Vec<Arrival<P>>,
+    /// The plan; `outcomes` align with `window`.
+    pub planned: PlannedWindow,
+}
+
+/// Run the scheduler event loop with execution pipelined behind a bounded
+/// channel of `depth` windows.  `execute` runs on a dedicated executor
+/// thread and receives every planned batch in order; its return value is
+/// handed back once the source closes and all batches have drained.
+///
+/// If the executor hangs up early (channel dropped), the planner stops and
+/// undelivered payloads are dropped — reply channels error out rather than
+/// hang, and `execute`'s result (typically the error) is still returned.
+pub fn run_pipelined<P, R, X>(
+    sched: &mut Scheduler<'_>,
+    clock: &mut dyn Clock,
+    source: &mut dyn ArrivalSource<P>,
+    depth: usize,
+    execute: X,
+) -> R
+where
+    P: Send,
+    R: Send,
+    X: FnOnce(mpsc::Receiver<PlannedBatch<P>>) -> R + Send,
+{
+    // no setup to wait for: pre-signal the gate
+    let (ready_tx, ready_rx) = mpsc::channel();
+    let _ = ready_tx.send(true);
+    run_pipelined_gated(sched, clock, source, depth, ready_rx, execute)
+}
+
+/// [`run_pipelined`] with a readiness gate: the planner admits no work
+/// until the executor sends `true` on the gate (e.g. after constructing a
+/// non-`Send` backend on its own thread).  `false` — or a dropped sender —
+/// skips the event loop entirely, so a failed executor setup fails fast
+/// instead of parking clients behind a window that will never be served;
+/// `execute`'s result (typically the setup error) is still returned.
+pub fn run_pipelined_gated<P, R, X>(
+    sched: &mut Scheduler<'_>,
+    clock: &mut dyn Clock,
+    source: &mut dyn ArrivalSource<P>,
+    depth: usize,
+    ready: mpsc::Receiver<bool>,
+    execute: X,
+) -> R
+where
+    P: Send,
+    R: Send,
+    X: FnOnce(mpsc::Receiver<PlannedBatch<P>>) -> R + Send,
+{
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::sync_channel::<PlannedBatch<P>>(depth.max(1));
+        let executor = std::thread::Builder::new()
+            .name("jdob-executor".into())
+            .spawn_scoped(s, move || execute(rx))
+            .expect("spawning executor stage");
+        if ready.recv().unwrap_or(false) {
+            run_events(sched, clock, source, &mut |window, planned| {
+                tx.send(PlannedBatch { window, planned }).is_ok()
+            });
+        }
+        drop(tx); // planner done: close the pipeline so the executor drains
+        executor.join().expect("executor stage panicked")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::jdob::JDob;
+    use crate::algo::types::{PlanningContext, User};
+    use crate::energy::device::DeviceModel;
+    use crate::sched::admission::SizeBound;
+    use crate::sched::clock::VirtualClock;
+    use crate::sched::scheduler::SliceSource;
+
+    fn trace(c: &PlanningContext, n: usize) -> Vec<Arrival<usize>> {
+        let dev = DeviceModel::from_config(&c.cfg);
+        let total = c.tables.total_work();
+        (0..n)
+            .map(|id| {
+                let deadline = User::deadline_from_beta(25.0, &dev, total);
+                Arrival::with_payload(
+                    User {
+                        id,
+                        deadline,
+                        dev: dev.clone(),
+                    },
+                    id as f64 * 0.01,
+                    id, // payload: the id, to check delivery order
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batches_arrive_in_order_with_payloads_intact() {
+        let c = PlanningContext::default_analytic();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(2)));
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(trace(&c, 6));
+        let seen = run_pipelined(&mut sched, &mut clock, &mut source, 2, |rx| {
+            let mut seen = Vec::new();
+            while let Ok(b) = rx.recv() {
+                assert_eq!(b.window.len(), b.planned.outcomes.len());
+                for (a, oc) in b.window.iter().zip(&b.planned.outcomes) {
+                    assert_eq!(a.payload, oc.user_id);
+                }
+                seen.extend(b.window.iter().map(|a| a.payload));
+            }
+            seen
+        });
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(sched.stats().served, 6);
+        assert_eq!(sched.stats().windows, 3);
+    }
+
+    #[test]
+    fn gate_false_skips_planning_and_surfaces_executor_result() {
+        // executor setup failure: gate says false, the planner never runs,
+        // and the executor's (error) result still comes back
+        let c = PlanningContext::default_analytic();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(1)));
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(trace(&c, 4));
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let out = run_pipelined_gated(&mut sched, &mut clock, &mut source, 1, ready_rx, move |rx| {
+            let _ = ready_tx.send(false);
+            drop(rx);
+            "backend construction failed"
+        });
+        assert_eq!(out, "backend construction failed");
+        assert_eq!(sched.stats().windows, 0, "no window may be planned");
+    }
+
+    #[test]
+    fn planner_stops_when_executor_hangs_up() {
+        let c = PlanningContext::default_analytic();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(1)));
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(trace(&c, 8));
+        let consumed = run_pipelined(&mut sched, &mut clock, &mut source, 1, |rx| {
+            // consume one batch, then hang up
+            let first = rx.recv().is_ok();
+            drop(rx);
+            first
+        });
+        assert!(consumed);
+        // planner stopped early: strictly fewer than 8 windows planned
+        assert!(sched.stats().windows < 8, "{}", sched.stats().windows);
+    }
+}

@@ -1,0 +1,586 @@
+//! The event-driven scheduler core: a single implementation of admission,
+//! window planning, carry-over and accounting shared by the virtual-time
+//! simulator ([`crate::sim::online::run_online`]) and the live server
+//! ([`crate::coordinator::server`]).
+//!
+//! The moving parts:
+//! * [`Arrival`] — a timestamped request with an optional payload (the sim
+//!   carries `()`, the server carries the enqueued reply channel);
+//! * [`ArrivalSource`] — where arrivals come from (a pre-generated trace or
+//!   a live ingress channel);
+//! * [`Scheduler`] — planning state: the GPU-busy horizon `t_free` lives
+//!   *here*, not threaded through call sites, and every planned window
+//!   advances it monotonically;
+//! * [`run_events`] — the loop: wait for the first arrival, admit per the
+//!   [`AdmissionPolicy`], close, plan, hand the [`PlannedWindow`] to a sink
+//!   (accounting only in the sim; a bounded channel to the GPU executor in
+//!   the pipelined server).
+
+use std::collections::VecDeque;
+
+use crate::algo::grouping::{optimal_grouping, GroupedPlan};
+use crate::algo::types::{GroupSolver, PlanningContext, User, UserId};
+use crate::sched::admission::AdmissionPolicy;
+use crate::sched::clock::Clock;
+use crate::util::TIME_EPS;
+
+/// A timestamped request. `P` is the transport payload riding along with
+/// the scheduling metadata (reply channels, input tensors, ...); the
+/// scheduler itself only reads `user`, `at` and `absolute_deadline`.
+#[derive(Debug, Clone)]
+pub struct Arrival<P = ()> {
+    pub user: User,
+    /// Arrival time, seconds since the clock epoch.
+    pub at: f64,
+    /// Absolute deadline = `at` + the user's relative deadline.
+    pub absolute_deadline: f64,
+    pub payload: P,
+}
+
+impl Arrival<()> {
+    /// Payload-free arrival (simulation traces).
+    pub fn new(user: User, at: f64) -> Self {
+        let absolute_deadline = at + user.deadline;
+        Self {
+            user,
+            at,
+            absolute_deadline,
+            payload: (),
+        }
+    }
+}
+
+impl<P> Arrival<P> {
+    pub fn with_payload(user: User, at: f64, payload: P) -> Self {
+        let absolute_deadline = at + user.deadline;
+        Self {
+            user,
+            at,
+            absolute_deadline,
+            payload,
+        }
+    }
+}
+
+/// What an [`ArrivalSource`] yields.
+pub enum SourceEvent<P> {
+    Arrival(Arrival<P>),
+    /// No arrival strictly before the requested time.
+    TimedOut,
+    /// The stream has ended; no arrival will ever come.
+    Closed,
+}
+
+/// Produces arrivals in non-decreasing `at` order.
+pub trait ArrivalSource<P> {
+    /// Next arrival with `at < t` (pass `f64::INFINITY` to wait for the
+    /// next arrival unconditionally). Virtual sources return immediately;
+    /// wall sources block until the arrival, the timeout, or stream end.
+    fn next_before(&mut self, t: f64) -> SourceEvent<P>;
+}
+
+/// A pre-generated trace as an arrival source (virtual time).
+pub struct SliceSource<P> {
+    queue: VecDeque<Arrival<P>>,
+}
+
+impl<P> SliceSource<P> {
+    /// `arrivals` must be sorted by `at` (generators produce them sorted).
+    pub fn new(arrivals: Vec<Arrival<P>>) -> Self {
+        debug_assert!(
+            arrivals.windows(2).all(|w| w[0].at <= w[1].at),
+            "trace must be sorted by arrival time"
+        );
+        Self {
+            queue: arrivals.into(),
+        }
+    }
+}
+
+impl<P> ArrivalSource<P> for SliceSource<P> {
+    fn next_before(&mut self, t: f64) -> SourceEvent<P> {
+        match self.queue.front() {
+            None => SourceEvent::Closed,
+            Some(a) if a.at < t => SourceEvent::Arrival(self.queue.pop_front().expect("front")),
+            Some(_) => SourceEvent::TimedOut,
+        }
+    }
+}
+
+/// One user's modeled outcome within a planned window, in window order.
+#[derive(Debug, Clone)]
+pub struct UserOutcome {
+    pub user_id: UserId,
+    /// Covered by the grouped plan (false = served by the local fallback,
+    /// on-device at its deadline-optimal frequency, never touching the GPU).
+    pub in_plan: bool,
+    pub offloaded: bool,
+    /// Chosen device frequency (Hz).
+    pub f_dev: f64,
+    pub energy_compute_j: f64,
+    pub energy_tx_j: f64,
+    /// Absolute completion time (s since epoch).
+    pub finish_abs: f64,
+    /// Arrival-to-finish latency (s).
+    pub latency_s: f64,
+    pub deadline_met: bool,
+    /// Partition point used (N = all local).
+    pub partition: usize,
+}
+
+impl UserOutcome {
+    pub fn device_energy_j(&self) -> f64 {
+        self.energy_compute_j + self.energy_tx_j
+    }
+}
+
+/// The output of planning one admission window: everything the executor
+/// stage needs to run it, and everything accounting needs to bill it.
+#[derive(Debug, Clone)]
+pub struct PlannedWindow {
+    /// When the window closed (s since epoch); deadlines inside `eligible`
+    /// and all times inside `grouped` are relative to this instant.
+    pub close: f64,
+    /// GPU-busy horizon the plan was made against, relative to `close`.
+    pub rel_t_free: f64,
+    /// New absolute GPU-busy horizon after this window.
+    pub t_free_abs: f64,
+    /// The OG/J-DOB plan over `eligible` (group member indices point into
+    /// `eligible`); `None` when nobody was GPU-eligible.
+    pub grouped: Option<GroupedPlan>,
+    /// Users handed to the solver, deadlines relative to `close`.
+    pub eligible: Vec<User>,
+    /// Window position of each `eligible` entry — the positional bridge
+    /// between plan users and window slots, so duplicate user ids within a
+    /// window can never cross-wire billing or responses.
+    pub eligible_pos: Vec<usize>,
+    /// Per-request outcomes, aligned with the window's arrival order.
+    pub outcomes: Vec<UserOutcome>,
+    /// Total modeled energy of the window (plan + fallback + edge), J.
+    pub planned_energy_j: f64,
+}
+
+/// Plan one closed window against an explicit horizon (stateless; the
+/// stateful entry point is [`Scheduler::plan`]).
+///
+/// Admission semantics shared by sim and server:
+/// * deadlines become relative to `close`;
+/// * users whose remaining deadline clears the busy horizon are planned
+///   through OG grouping + the inner solver;
+/// * everyone else is served by the local fallback at the deadline-optimal
+///   device frequency.
+///
+/// The fallback also absorbs a *failed grouping* (`optimal_grouping`
+/// returning `None`, e.g. an IP-SSA inner solver defeated by the busy
+/// horizon): the window degrades to local service instead of erroring.
+/// Such degradation is never silent to callers — affected outcomes carry
+/// `in_plan: false` and any missed deadline reports `deadline_met: false`
+/// in both the response and the ledger.
+pub fn plan_window<P>(
+    ctx: &PlanningContext,
+    solver: &dyn GroupSolver,
+    window: &[Arrival<P>],
+    close: f64,
+    t_free_abs: f64,
+) -> PlannedWindow {
+    let rel_t_free = (t_free_abs - close).max(0.0);
+    let total_work = ctx.tables.total_work();
+
+    let mut eligible: Vec<User> = Vec::new();
+    let mut eligible_pos: Vec<usize> = Vec::new();
+    for (wi, a) in window.iter().enumerate() {
+        let rel_deadline = a.absolute_deadline - close;
+        if rel_deadline > rel_t_free && rel_deadline > 0.0 {
+            eligible.push(User {
+                id: a.user.id,
+                deadline: rel_deadline,
+                dev: a.user.dev.clone(),
+            });
+            eligible_pos.push(wi);
+        }
+    }
+
+    let grouped = if eligible.is_empty() {
+        None
+    } else {
+        optimal_grouping(ctx, &eligible, solver, rel_t_free)
+    };
+
+    let mut outcomes: Vec<Option<UserOutcome>> = vec![None; window.len()];
+    let mut planned_energy_j = 0.0;
+    let mut t_free_out = t_free_abs;
+
+    if let Some(gp) = &grouped {
+        planned_energy_j += gp.total_energy;
+        t_free_out = close + gp.t_free_end;
+        for (members, plan) in &gp.groups {
+            for (&eidx, up) in members.iter().zip(&plan.users) {
+                debug_assert_eq!(eligible[eidx].id, up.id, "plan order matches group order");
+                let wi = eligible_pos[eidx];
+                let a = &window[wi];
+                let finish_abs = close + up.finish_time;
+                outcomes[wi] = Some(UserOutcome {
+                    user_id: up.id,
+                    in_plan: true,
+                    offloaded: up.offloaded,
+                    f_dev: up.f_dev,
+                    energy_compute_j: up.energy_compute,
+                    energy_tx_j: up.energy_tx,
+                    finish_abs,
+                    latency_s: finish_abs - a.at,
+                    deadline_met: finish_abs <= a.absolute_deadline + TIME_EPS,
+                    // plan-local users run the full model on-device
+                    partition: if up.offloaded { plan.partition } else { ctx.n() },
+                });
+            }
+        }
+    }
+
+    // Local fallback for everyone not covered by the plan.
+    for (wi, a) in window.iter().enumerate() {
+        if outcomes[wi].is_some() {
+            continue;
+        }
+        let remaining = a.absolute_deadline - close;
+        let f = a
+            .user
+            .dev
+            .freq_for_deadline(total_work, remaining)
+            .unwrap_or(a.user.dev.f_max);
+        let finish_abs = close + a.user.dev.compute_latency(total_work, f);
+        let energy = a.user.dev.compute_energy(total_work, f);
+        planned_energy_j += energy;
+        outcomes[wi] = Some(UserOutcome {
+            user_id: a.user.id,
+            in_plan: false,
+            offloaded: false,
+            f_dev: f,
+            energy_compute_j: energy,
+            energy_tx_j: 0.0,
+            finish_abs,
+            latency_s: finish_abs - a.at,
+            deadline_met: finish_abs <= a.absolute_deadline + TIME_EPS,
+            partition: ctx.n(),
+        });
+    }
+
+    PlannedWindow {
+        close,
+        rel_t_free,
+        t_free_abs: t_free_out,
+        grouped,
+        eligible,
+        eligible_pos,
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| o.expect("every window member has an outcome"))
+            .collect(),
+        planned_energy_j,
+    }
+}
+
+/// Aggregate statistics of a scheduler run (one value per served request,
+/// whether it went through the GPU plan or the local fallback).
+#[derive(Debug, Default, Clone)]
+pub struct OnlineStats {
+    pub served: usize,
+    pub deadline_hits: usize,
+    pub total_energy_j: f64,
+    pub offloaded: usize,
+    pub windows: usize,
+    /// Mean arrival-to-finish modeled latency (s).
+    pub mean_latency_s: f64,
+}
+
+impl OnlineStats {
+    pub fn energy_per_user(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_energy_j / self.served as f64
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.served == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / self.served as f64
+        }
+    }
+}
+
+/// Planning state shared by every consumer of the scheduler core.
+///
+/// Owns the admission policy and — crucially — the GPU-busy horizon
+/// `t_free`, which previous implementations threaded through as a loose
+/// parameter in two divergent copies.  Monotonicity (`t_free` never moves
+/// backwards within a run) is an invariant enforced here and pinned by the
+/// scheduler property tests.
+pub struct Scheduler<'s> {
+    ctx: PlanningContext,
+    solver: &'s dyn GroupSolver,
+    policy: Box<dyn AdmissionPolicy>,
+    t_free: f64,
+    stats: OnlineStats,
+    latency_sum_s: f64,
+}
+
+impl<'s> Scheduler<'s> {
+    pub fn new(
+        ctx: PlanningContext,
+        solver: &'s dyn GroupSolver,
+        policy: Box<dyn AdmissionPolicy>,
+    ) -> Self {
+        Self {
+            ctx,
+            solver,
+            policy,
+            t_free: 0.0,
+            stats: OnlineStats::default(),
+            latency_sum_s: 0.0,
+        }
+    }
+
+    /// Current absolute GPU-busy horizon.
+    pub fn t_free(&self) -> f64 {
+        self.t_free
+    }
+
+    pub fn policy(&self) -> &dyn AdmissionPolicy {
+        self.policy.as_ref()
+    }
+
+    pub fn ctx(&self) -> &PlanningContext {
+        &self.ctx
+    }
+
+    pub fn stats(&self) -> &OnlineStats {
+        &self.stats
+    }
+
+    pub fn into_stats(self) -> OnlineStats {
+        self.stats
+    }
+
+    /// Plan one closed window, advancing `t_free` and the running stats.
+    pub fn plan<P>(&mut self, window: &[Arrival<P>], close: f64) -> PlannedWindow {
+        let planned = plan_window(&self.ctx, self.solver, window, close, self.t_free);
+        debug_assert!(
+            planned.t_free_abs >= self.t_free - TIME_EPS,
+            "t_free must be monotone: {} -> {}",
+            self.t_free,
+            planned.t_free_abs
+        );
+        self.t_free = planned.t_free_abs;
+        self.stats.windows += 1;
+        self.stats.total_energy_j += planned.planned_energy_j;
+        for oc in &planned.outcomes {
+            self.stats.served += 1;
+            self.stats.deadline_hits += oc.deadline_met as usize;
+            self.stats.offloaded += oc.offloaded as usize;
+            self.latency_sum_s += oc.latency_s;
+        }
+        if self.stats.served > 0 {
+            self.stats.mean_latency_s = self.latency_sum_s / self.stats.served as f64;
+        }
+        planned
+    }
+}
+
+/// The event loop: admit arrivals into windows per the scheduler's
+/// [`AdmissionPolicy`], close each window on the clock, plan it, and hand
+/// `(window, planned)` to `sink`.  Returns when the source closes or the
+/// sink returns `false` (e.g. the downstream executor hung up).
+///
+/// The same loop drives both time domains: with a [`VirtualClock`] and a
+/// [`SliceSource`] it replays a trace instantly; with a [`WallClock`] and a
+/// live ingress it is the planner stage of the serving pipeline.
+///
+/// [`VirtualClock`]: crate::sched::clock::VirtualClock
+/// [`WallClock`]: crate::sched::clock::WallClock
+pub fn run_events<P>(
+    sched: &mut Scheduler<'_>,
+    clock: &mut dyn Clock,
+    source: &mut dyn ArrivalSource<P>,
+    sink: &mut dyn FnMut(Vec<Arrival<P>>, PlannedWindow) -> bool,
+) {
+    loop {
+        // Wait (or jump) to the first arrival of the next window.
+        let first = match source.next_before(f64::INFINITY) {
+            SourceEvent::Arrival(a) => a,
+            _ => return,
+        };
+        clock.wait_until(first.at);
+        let opened_at = clock.now().max(first.at);
+        let mut earliest_deadline = first.absolute_deadline;
+        let mut window = vec![first];
+
+        // Admit until the policy closes the window or the stream ends.
+        let close = loop {
+            if sched.policy().is_full(window.len()) {
+                break clock.now();
+            }
+            let close_by = sched.policy().close_by(opened_at, earliest_deadline);
+            match source.next_before(close_by) {
+                SourceEvent::Arrival(a) => {
+                    earliest_deadline = earliest_deadline.min(a.absolute_deadline);
+                    window.push(a);
+                }
+                SourceEvent::TimedOut => break close_by,
+                // Stream over: no further arrival can ever be admitted, so
+                // waiting out the time bound only shrinks the admitted
+                // requests' remaining deadlines (and, on a wall clock,
+                // stalls shutdown). Close and plan immediately; the next
+                // outer iteration exits.
+                SourceEvent::Closed => break clock.now(),
+            }
+        };
+        // The window cannot close before its last admission.
+        let close = close.max(window.last().expect("non-empty window").at);
+        clock.wait_until(close);
+
+        let planned = sched.plan(&window, close);
+        if !sink(window, planned) {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::jdob::JDob;
+    use crate::energy::device::DeviceModel;
+    use crate::sched::admission::{SizeBound, TimeBound};
+    use crate::sched::clock::VirtualClock;
+
+    fn ctx() -> PlanningContext {
+        PlanningContext::default_analytic()
+    }
+
+    fn trace(c: &PlanningContext, betas_at: &[(f64, f64)]) -> Vec<Arrival> {
+        let dev = DeviceModel::from_config(&c.cfg);
+        let total = c.tables.total_work();
+        betas_at
+            .iter()
+            .enumerate()
+            .map(|(id, &(beta, at))| {
+                let deadline = User::deadline_from_beta(beta, &dev, total);
+                Arrival::new(
+                    User {
+                        id,
+                        deadline,
+                        dev: dev.clone(),
+                    },
+                    at,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_window_covers_every_member_once() {
+        let c = ctx();
+        let solver = JDob::full();
+        let arr = trace(&c, &[(20.0, 0.0), (25.0, 0.01), (0.5, 0.02)]);
+        let planned = plan_window(&c, &solver, &arr, 0.05, 0.0);
+        assert_eq!(planned.outcomes.len(), 3);
+        let mut ids: Vec<usize> = planned.outcomes.iter().map(|o| o.user_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2]);
+        // loose deadlines are planned; energies positive
+        assert!(planned.planned_energy_j > 0.0);
+        assert!(planned.t_free_abs >= planned.close);
+    }
+
+    #[test]
+    fn expired_deadline_goes_to_fallback_not_plan() {
+        let c = ctx();
+        let solver = JDob::full();
+        // second user's absolute deadline is already behind the close
+        let mut arr = trace(&c, &[(20.0, 0.0), (20.0, 0.0)]);
+        arr[1].absolute_deadline = 0.01;
+        let planned = plan_window(&c, &solver, &arr, 0.05, 0.0);
+        assert_eq!(planned.eligible.len(), 1);
+        let oc = planned.outcomes.iter().find(|o| o.user_id == 1).unwrap();
+        assert!(!oc.in_plan);
+        assert!(!oc.offloaded);
+        assert!(!oc.deadline_met, "expired deadline cannot be met");
+    }
+
+    #[test]
+    fn busy_horizon_is_scheduler_state_and_monotone() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(TimeBound::unbounded(0.05)));
+        let arr = trace(&c, &[(20.0, 0.0), (22.0, 0.001), (21.0, 0.2), (23.0, 0.21)]);
+        let mut t_prev = sched.t_free();
+        let p1 = sched.plan(&arr[..2], 0.05);
+        assert!(sched.t_free() >= t_prev);
+        assert_eq!(sched.t_free(), p1.t_free_abs);
+        t_prev = sched.t_free();
+        let p2 = sched.plan(&arr[2..], 0.25);
+        assert!(sched.t_free() >= t_prev);
+        assert!(p2.rel_t_free >= 0.0);
+        assert_eq!(sched.stats().served, 4);
+        assert_eq!(sched.stats().windows, 2);
+    }
+
+    #[test]
+    fn event_loop_time_bound_forms_fixed_windows() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(TimeBound::unbounded(0.1)));
+        let mut clock = VirtualClock::new();
+        // two bursts 0.5 s apart -> two windows
+        let arr = trace(&c, &[(20.0, 0.0), (21.0, 0.05), (22.0, 0.5), (23.0, 0.55)]);
+        let mut source = SliceSource::new(arr);
+        let mut windows = Vec::new();
+        run_events(&mut sched, &mut clock, &mut source, &mut |w, p| {
+            windows.push((w.len(), p.close));
+            true
+        });
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[0].0, 2);
+        assert!((windows[0].1 - 0.1).abs() < 1e-12);
+        assert_eq!(windows[1].0, 2);
+        // the stream ends inside window 2, so it closes at its last
+        // admission (0.55) instead of waiting out the time bound (0.6)
+        assert!((windows[1].1 - 0.55).abs() < 1e-12);
+        assert_eq!(sched.stats().served, 4);
+    }
+
+    #[test]
+    fn event_loop_size_bound_closes_on_count() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(2)));
+        let mut clock = VirtualClock::new();
+        let arr = trace(&c, &[(20.0, 0.0), (21.0, 1.0), (22.0, 2.0)]);
+        let mut source = SliceSource::new(arr);
+        let mut sizes = Vec::new();
+        run_events(&mut sched, &mut clock, &mut source, &mut |w, _| {
+            sizes.push(w.len());
+            true
+        });
+        // full window of 2, then the tail request when the stream closes
+        assert_eq!(sizes, vec![2, 1]);
+    }
+
+    #[test]
+    fn event_loop_stops_when_sink_declines() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(1)));
+        let mut clock = VirtualClock::new();
+        let arr = trace(&c, &[(20.0, 0.0), (21.0, 1.0), (22.0, 2.0)]);
+        let mut source = SliceSource::new(arr);
+        let mut n = 0;
+        run_events(&mut sched, &mut clock, &mut source, &mut |_, _| {
+            n += 1;
+            false
+        });
+        assert_eq!(n, 1);
+    }
+}

@@ -1,8 +1,11 @@
 //! Scenario generation and pure-planning experiment drivers (the paper's
-//! evaluation is planning-level: energy of the chosen strategies).
+//! evaluation is planning-level: energy of the chosen strategies).  The
+//! online simulator ([`online`]) drives the shared scheduler core
+//! ([`crate::sched`]) in virtual time.
 
 pub mod experiments;
 pub mod online;
 pub mod scenario;
 
+pub use online::{poisson_arrivals, run_online, run_online_with_policy, OnlineStats};
 pub use scenario::{identical_deadline_users, uniform_beta_users};

@@ -13,9 +13,10 @@ use jdob::algo::jdob::JDob;
 use jdob::algo::types::User;
 use jdob::coordinator::engine::ServingEngine;
 use jdob::coordinator::request::InferenceRequest;
-use jdob::coordinator::server::{start, WindowPolicy};
+use jdob::coordinator::server::{start, start_with_admission, WindowPolicy};
 use jdob::energy::device::DeviceModel;
-use jdob::runtime::InferenceBackend;
+use jdob::runtime::{default_backend, InferenceBackend};
+use jdob::sched::admission::EarliestSlack;
 
 fn mk_requests(
     c: &jdob::algo::types::PlanningContext,
@@ -101,9 +102,15 @@ fn mixed_deadlines_split_into_groups() {
     for r in &out.responses {
         assert!(r.deadline_met, "user {}", r.user_id);
     }
-    // telemetry covers every request exactly once
-    let covered: usize = out.groups.iter().map(|(sz, _, _)| sz).sum();
-    assert_eq!(covered, 4);
+    // group telemetry covers every request exactly once and is queryable
+    assert_eq!(out.metrics.grouped_users(), 4);
+    for g in &out.metrics.groups {
+        assert!(g.users >= 1);
+        assert!(g.batch_size <= g.users);
+        if g.batch_size > 0 {
+            assert!(g.f_edge_hz > 0.0, "offloading group without an edge frequency");
+        }
+    }
 }
 
 #[test]
@@ -151,4 +158,41 @@ fn threaded_server_roundtrip() {
     let ledger = join.join().expect("leader joins").expect("leader ok");
     assert_eq!(ledger.requests, 4);
     assert!((ledger.hit_rate() - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn pipelined_server_with_earliest_slack_policy() {
+    // The scheduler-core server with a deadline-aware admission policy:
+    // several waves of requests, every one answered, ledger consistent.
+    let c = ctx();
+    let (handle, join) = start_with_admission(
+        c.clone(),
+        |c| default_backend(&c.profile, &c.cfg.buckets, None),
+        "J-DOB",
+        Box::new(EarliestSlack::new(0.05, 4, 0.01)),
+        2, // plan window k+1 while window k executes
+    );
+    let mut served = 0;
+    for wave in 0..3 {
+        let reqs = mk_requests(&c, 4, 30.25);
+        let rxs: Vec<_> = reqs
+            .into_iter()
+            .map(|r| handle.submit_async(r).expect("submit"))
+            .collect();
+        for rx in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(300))
+                .expect("response within timeout")
+                .expect("served ok");
+            assert!(resp.logits.iter().all(|x| x.is_finite()), "wave {wave}");
+            served += 1;
+        }
+    }
+    drop(handle);
+    let ledger = join.join().expect("planner joins").expect("planner ok");
+    assert_eq!(ledger.requests, served);
+    assert_eq!(served, 12);
+    // loose deadlines: no misses even with the busy horizon carried
+    // across pipelined windows
+    assert!((ledger.hit_rate() - 1.0).abs() < 1e-12, "{}", ledger.hit_rate());
 }

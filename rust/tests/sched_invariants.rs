@@ -1,0 +1,266 @@
+//! Property-based invariants of the event-driven scheduler core, plus the
+//! sim/server parity proof.
+//!
+//! Same idiom as `proptest_invariants.rs` (the offline vendor set has no
+//! proptest): explicit seeded generator loops, failing seed printed on
+//! assertion, fully deterministic.
+//!
+//! Invariants pinned here:
+//! * every arrival is admitted into exactly one window;
+//! * no user whose absolute deadline has expired at window close is ever
+//!   admitted into the GPU plan (expired users go to the local fallback);
+//! * the carried GPU-busy horizon `t_free` is monotone non-decreasing
+//!   within a run;
+//! * the virtual-clock simulator (`run_online`) and the pipelined
+//!   planner/executor produce *identical plans* for the same trace and
+//!   policy on `SimBackend`.
+
+mod common;
+
+use common::ctx;
+use jdob::algo::jdob::JDob;
+use jdob::coordinator::engine::ServingEngine;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::sched::admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+use jdob::sched::clock::VirtualClock;
+use jdob::sched::pipeline::run_pipelined;
+use jdob::sched::scheduler::{run_events, Arrival, Scheduler, SliceSource};
+use jdob::sim::online::{poisson_arrivals, run_online};
+use jdob::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+/// A random trace and a random admission policy for one seeded case.
+fn scenario(seed: u64) -> (Vec<Arrival>, Box<dyn AdmissionPolicy>) {
+    let c = ctx();
+    let mut rng = Rng::seed_from_u64(seed);
+    let rate = rng.gen_range(10.0, 80.0);
+    let horizon = rng.gen_range(0.5, 2.5);
+    // betas from tight (deadline pressure, fallbacks) to loose (batching)
+    let lo = rng.gen_range(0.05, 4.0);
+    let hi = lo + rng.gen_range(0.1, 25.0);
+    let arr = poisson_arrivals(&c, rate, horizon, (lo, hi), &mut rng).expect("valid args");
+    let policy: Box<dyn AdmissionPolicy> = match rng.gen_index(3) {
+        0 => Box::new(TimeBound::new(rng.gen_range(0.005, 0.2), 1 + rng.gen_index(32))),
+        1 => Box::new(SizeBound::new(1 + rng.gen_index(16))),
+        _ => Box::new(EarliestSlack::new(
+            rng.gen_range(0.005, 0.2),
+            1 + rng.gen_index(32),
+            rng.gen_range(0.0, 0.05),
+        )),
+    };
+    (arr, policy)
+}
+
+#[test]
+fn prop_every_arrival_admitted_exactly_once() {
+    for seed in 0..CASES {
+        let c = ctx();
+        let (arr, policy) = scenario(seed);
+        let n = arr.len();
+        let expected: Vec<usize> = arr.iter().map(|a| a.user.id).collect();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, policy);
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(arr);
+        let mut admitted: Vec<usize> = Vec::new();
+        run_events(&mut sched, &mut clock, &mut source, &mut |w, p| {
+            assert_eq!(w.len(), p.outcomes.len(), "seed {seed}");
+            admitted.extend(w.iter().map(|a| a.user.id));
+            true
+        });
+        admitted.sort_unstable();
+        let mut want = expected;
+        want.sort_unstable();
+        assert_eq!(admitted, want, "seed {seed}: admission must be a bijection");
+        assert_eq!(sched.stats().served, n, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_no_expired_deadline_enters_the_plan() {
+    for seed in 0..CASES {
+        let c = ctx();
+        let (arr, policy) = scenario(seed ^ 0xE0_15);
+        let deadline_of: std::collections::HashMap<usize, f64> =
+            arr.iter().map(|a| (a.user.id, a.absolute_deadline)).collect();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, policy);
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(arr);
+        run_events(&mut sched, &mut clock, &mut source, &mut |_, p| {
+            for u in &p.eligible {
+                let abs = deadline_of[&u.id];
+                assert!(
+                    abs > p.close,
+                    "seed {seed}: user {} admitted to the plan at close {} after \
+                     its absolute deadline {abs} expired",
+                    u.id,
+                    p.close
+                );
+                // and the planned-against deadline is exactly the remainder
+                assert!(
+                    (u.deadline - (abs - p.close)).abs() < 1e-9,
+                    "seed {seed}: relative deadline mismatch"
+                );
+                // eligibility premise: the remainder clears the busy horizon
+                assert!(
+                    u.deadline > p.rel_t_free,
+                    "seed {seed}: user {} planned behind the busy horizon",
+                    u.id
+                );
+            }
+            // expired users exist only as fallback outcomes and are misses
+            for oc in &p.outcomes {
+                if deadline_of[&oc.user_id] <= p.close {
+                    assert!(!oc.in_plan, "seed {seed}: expired user {} in plan", oc.user_id);
+                    assert!(!oc.deadline_met, "seed {seed}");
+                }
+            }
+            true
+        });
+    }
+}
+
+#[test]
+fn prop_t_free_monotone_within_a_run() {
+    for seed in 0..CASES {
+        let c = ctx();
+        let (arr, policy) = scenario(seed ^ 0x7F_EE);
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, policy);
+        let mut clock = VirtualClock::new();
+        let mut source = SliceSource::new(arr);
+        let mut last = sched.t_free();
+        run_events(&mut sched, &mut clock, &mut source, &mut |_, p| {
+            assert!(
+                p.t_free_abs >= last - 1e-9,
+                "seed {seed}: t_free went backwards: {last} -> {}",
+                p.t_free_abs
+            );
+            assert!(
+                p.rel_t_free >= 0.0 && p.rel_t_free.is_finite(),
+                "seed {seed}: bad rel_t_free {}",
+                p.rel_t_free
+            );
+            last = p.t_free_abs;
+            true
+        });
+        assert!((sched.t_free() - last).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+/// Fingerprint of one planned window, for plan-identity comparison.
+#[derive(Debug, PartialEq)]
+struct WindowPrint {
+    close_ns: i64,
+    groups: Vec<(Vec<usize>, usize, usize)>, // (member ids, partition, B_o)
+    energy_ns: i64, // planned energy in nano-J, rounded
+}
+
+fn fingerprint(p: &jdob::sched::scheduler::PlannedWindow) -> WindowPrint {
+    WindowPrint {
+        close_ns: (p.close * 1e9).round() as i64,
+        groups: p
+            .grouped
+            .iter()
+            .flat_map(|g| &g.groups)
+            .map(|(members, plan)| {
+                (
+                    members.iter().map(|&i| p.eligible[i].id).collect(),
+                    plan.partition,
+                    plan.batch_size,
+                )
+            })
+            .collect(),
+        energy_ns: (p.planned_energy_j * 1e9).round() as i64,
+    }
+}
+
+#[test]
+fn parity_virtual_sim_and_pipelined_server_plans_identical() {
+    let c = ctx();
+    let mut rng = Rng::seed_from_u64(4242);
+    let trace = poisson_arrivals(&c, 25.0, 1.2, (10.0, 25.0), &mut rng).expect("valid args");
+    let n = trace.len();
+    assert!(n >= 10, "want a multi-window trace, got {n}");
+    let window_s = 0.08;
+    let solver = JDob::full();
+
+    // (a) the planning-only simulator
+    let stats = run_online(&c, &trace, &solver, window_s);
+    assert_eq!(stats.served, n);
+
+    // (b) the same trace through the event loop, collecting fingerprints
+    let mut sched = Scheduler::new(c.clone(), &solver, Box::new(TimeBound::unbounded(window_s)));
+    let mut clock = VirtualClock::new();
+    let mut source = SliceSource::new(trace.clone());
+    let mut sim_prints: Vec<WindowPrint> = Vec::new();
+    run_events(&mut sched, &mut clock, &mut source, &mut |_, p| {
+        sim_prints.push(fingerprint(&p));
+        true
+    });
+    assert_eq!(sim_prints.len(), stats.windows);
+    assert!(
+        (sched.stats().total_energy_j - stats.total_energy_j).abs()
+            < 1e-12 * stats.total_energy_j.max(1.0),
+        "run_online is exactly the event loop"
+    );
+
+    // (c) the pipelined planner/executor over the same trace on SimBackend:
+    // identical window formation, identical plans, real execution
+    let elems: usize = c.profile.input_shape.iter().product();
+    let exec_trace: Vec<Arrival<InferenceRequest>> = trace
+        .iter()
+        .map(|a| Arrival::with_payload(
+            a.user.clone(),
+            a.at,
+            InferenceRequest {
+                user_id: a.user.id,
+                input: (0..elems)
+                    .map(|i| ((i * 13 + a.user.id * 7) % 251) as f32 / 251.0 - 0.5)
+                    .collect(),
+                deadline_s: a.user.deadline,
+            },
+        ))
+        .collect();
+    let mut sched2 = Scheduler::new(c.clone(), &solver, Box::new(TimeBound::unbounded(window_s)));
+    let mut clock2 = VirtualClock::new();
+    let mut source2 = SliceSource::new(exec_trace);
+    let exec_c = c.clone();
+    let (server_prints, ledger) =
+        run_pipelined(&mut sched2, &mut clock2, &mut source2, 2, move |rx| {
+            let backend = common::sim_backend();
+            let engine = ServingEngine::executor(exec_c, &backend);
+            let mut prints = Vec::new();
+            let mut ledger = jdob::coordinator::ledger::EnergyLedger::default();
+            while let Ok(batch) = rx.recv() {
+                prints.push(fingerprint(&batch.planned));
+                let reqs: Vec<&InferenceRequest> =
+                    batch.window.iter().map(|a| &a.payload).collect();
+                let out = engine.execute_window(&reqs, &batch.planned).expect("executes");
+                assert_eq!(out.responses.len(), batch.window.len());
+                for r in &out.responses {
+                    assert!(r.logits.iter().all(|x| x.is_finite()));
+                }
+                ledger.merge(&out.ledger);
+            }
+            (prints, ledger)
+        });
+
+    assert_eq!(
+        sim_prints, server_prints,
+        "virtual-clock sim and pipelined server must produce identical plans"
+    );
+    assert_eq!(ledger.requests, n);
+    assert_eq!(sched2.stats().served, n);
+    // executed billing agrees with the simulated accounting
+    assert!(
+        (ledger.total_j() - stats.total_energy_j).abs()
+            < 1e-9 * stats.total_energy_j.max(1.0),
+        "executed ledger {} vs simulated energy {}",
+        ledger.total_j(),
+        stats.total_energy_j
+    );
+    assert_eq!(ledger.deadline_hits, stats.deadline_hits);
+}
