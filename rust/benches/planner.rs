@@ -1,15 +1,24 @@
 //! Planner micro-benchmarks: J-DOB solve latency vs M (the O(k·N·M log M)
-//! claim), OG grouping cost, and baseline comparisons.
+//! claim), OG grouping cost (workspace-memoized vs the reference DP, with
+//! inner-solve invocation counts), and baseline comparisons.
+//!
 //! Run: `cargo bench --bench planner`
+//! (set JDOB_BENCH_FULL=1 to include the M = 512 end-to-end OG point —
+//! the DP is O(M²) groups, so that leg takes tens of seconds per plan)
+//!
+//! Writes `BENCH_planner.json` (ns/solve and inner-solve counts per M) so
+//! follow-up PRs have a machine-readable perf baseline to diff against.
 
 use std::time::Duration;
 
 use jdob::algo::baselines::{IpSsa, LocalComputing};
-use jdob::algo::grouping::optimal_grouping;
+use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal_grouping_ws};
 use jdob::algo::jdob::JDob;
 use jdob::algo::types::PlanningContext;
+use jdob::algo::{CountingSolver, PlannerWorkspace};
 use jdob::sim::scenario::{identical_deadline_users, uniform_beta_users};
 use jdob::util::benchkit::{bench, black_box, header};
+use jdob::util::json::Json;
 use jdob::util::rng::Rng;
 
 fn main() {
@@ -74,6 +83,111 @@ fn main() {
     });
     println!("{}", r.report());
 
+    header("OG end-to-end: workspace-memoized vs reference DP (beta ~ U[0,10], busy GPU)");
+    let full = std::env::var("JDOB_BENCH_FULL").is_ok();
+    let og_sizes: &[usize] = if full { &[8, 32, 128, 512] } else { &[8, 32, 128] };
+    if !full {
+        println!("(M = 512 skipped; set JDOB_BENCH_FULL=1 to include it)");
+    }
+    let solver = JDob::full();
+    let mut og_rows: Vec<Json> = Vec::new();
+    for &m in og_sizes {
+        let mut rng = Rng::seed_from_u64(2024 + m as u64);
+        let users = uniform_beta_users(&ctx, m, (0.0, 10.0), &mut rng);
+        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let t0 = min_d * 0.4;
+
+        // counted run (one plan each way); the reference leg — timed *and*
+        // counted — is minutes per plan beyond M = 128, so it is skipped
+        // there and the JSON carries nulls.
+        let mut ws = PlannerWorkspace::new(&ctx, &users);
+        let memo = optimal_grouping_ws(&ctx, &mut ws, &solver, t0).expect("feasible");
+        let sweeps = ws.stats.group_sweeps;
+        let calls = if m <= 128 {
+            let counting = CountingSolver::new(&solver);
+            let reference =
+                optimal_grouping_reference(&ctx, &users, &counting, t0).expect("feasible");
+            let rel =
+                (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
+            assert!(rel < 1e-12);
+            Some(counting.calls())
+        } else {
+            None
+        };
+
+        // timed runs
+        let r_ws = bench(&format!("og_workspace_m{m}"), 1, budget, 200, || {
+            black_box(optimal_grouping(&ctx, &users, &solver, t0));
+        });
+        println!("{}", r_ws.report());
+        let r_ref = if m <= 128 {
+            let r = bench(&format!("og_reference_m{m}"), 1, budget, 200, || {
+                black_box(optimal_grouping_reference(&ctx, &users, &solver, t0));
+            });
+            println!("{}", r.report());
+            Some(r)
+        } else {
+            println!("og_reference_m{m}: skipped (reference DP is minutes at this size)");
+            None
+        };
+        match calls {
+            Some(calls) => println!(
+                "  inner solves: reference {calls} invocations vs workspace {sweeps} sweeps \
+                 ({:.2}x fewer)",
+                calls as f64 / sweeps as f64
+            ),
+            None => println!("  inner solves: workspace {sweeps} sweeps (reference not counted)"),
+        }
+        og_rows.push(Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("ns_per_plan_ws", Json::Num(r_ws.mean.as_nanos() as f64)),
+            (
+                "ns_per_plan_ref",
+                r_ref
+                    .map(|r| Json::Num(r.mean.as_nanos() as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "ref_solver_calls",
+                calls.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null),
+            ),
+            ("ws_group_sweeps", Json::Num(sweeps as f64)),
+            (
+                "invocation_ratio",
+                calls
+                    .map(|c| Json::Num(c as f64 / sweeps as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    header("horizon re-planning at M = 32 (one window, 4 GPU horizons, shared workspace)");
+    let mut rng = Rng::seed_from_u64(77);
+    let users = uniform_beta_users(&ctx, 32, (0.0, 10.0), &mut rng);
+    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let horizons: Vec<f64> = [0.0, 0.2, 0.4, 0.6].iter().map(|f| min_d * f).collect();
+    let mut ws = PlannerWorkspace::new(&ctx, &users);
+    let mut ref_calls = 0u64;
+    for &t0 in &horizons {
+        optimal_grouping_ws(&ctx, &mut ws, &solver, t0).expect("feasible");
+        let counting = CountingSolver::new(&solver);
+        optimal_grouping_reference(&ctx, &users, &counting, t0).expect("feasible");
+        ref_calls += counting.calls();
+    }
+    let replan_ratio = ref_calls as f64 / ws.stats.group_sweeps as f64;
+    println!(
+        "4 horizons: reference {ref_calls} inner-solve invocations vs workspace {} sweeps \
+         ({replan_ratio:.2}x fewer; cache hits {})",
+        ws.stats.group_sweeps, ws.stats.cache_hits
+    );
+    let horizon_json = Json::obj(vec![
+        ("m", Json::Num(32.0)),
+        ("horizons", Json::Num(horizons.len() as f64)),
+        ("ref_solver_calls", Json::Num(ref_calls as f64)),
+        ("ws_group_sweeps", Json::Num(ws.stats.group_sweeps as f64)),
+        ("invocation_ratio", Json::Num(replan_ratio)),
+    ]);
+
     header("OG grouping (different deadlines, beta ~ U[0,10])");
     for m in [5usize, 10, 20] {
         let mut rng = Rng::seed_from_u64(1);
@@ -82,5 +196,31 @@ fn main() {
             black_box(optimal_grouping(&ctx, &users, &JDob::full(), 0.0));
         });
         println!("{}", r.report());
+    }
+
+    // machine-readable summary for trajectory comparisons across PRs
+    let solve_rows: Vec<Json> = per_m
+        .iter()
+        .map(|&(m, secs)| {
+            Json::obj(vec![
+                ("m", Json::Num(m as f64)),
+                ("ns_per_solve", Json::Num(secs * 1e9)),
+            ])
+        })
+        .collect();
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("planner".into())),
+        ("solve", Json::Arr(solve_rows)),
+        ("og", Json::Arr(og_rows)),
+        ("horizon_replan", horizon_json),
+        (
+            "fastpath_speedup_m20",
+            Json::Num(r_ref.mean.as_secs_f64() / r_fast.mean.as_secs_f64()),
+        ),
+    ]);
+    let path = "BENCH_planner.json";
+    match std::fs::write(path, format!("{summary}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

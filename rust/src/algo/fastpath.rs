@@ -10,77 +10,227 @@
 //!
 //! Measured effect (see EXPERIMENTS.md §Perf): ~6-9x fewer ns/solve at
 //! M = 20 with zero behavioural change.
+//!
+//! ## LC-infeasible users
+//!
+//! A user whose deadline is below its device's minimum full-model latency
+//! has no feasible *local* assignment (`freq_for_deadline` returns `None`).
+//! Such a user does **not** invalidate a whole partition point: candidates
+//! that *offload* the user can still be feasible (and are, whenever the
+//! edge is fast enough).  [`UserTables`] therefore records per-user LC
+//! feasibility and [`candidate_quote`] rejects exactly the candidates that
+//! would keep an LC-infeasible user local — mirroring what the reference
+//! path (`solve_fixed` per candidate) has always done.  An earlier version
+//! discarded the entire partition via an `?` early-out; the
+//! `lc_infeasible_user_cannot_mask_offload_candidates` integration test
+//! pins the fixed behaviour.
+//!
+//! ## Parallel partition sweep
+//!
+//! For large groups, [`solve_fast`] evaluates the N partition points on
+//! scoped threads (`std::thread::scope`, no extra dependencies).  Each
+//! partition's sweep is independent and the merge scans results in
+//! partition order with a strict `<`, so the outcome is bit-identical to
+//! the sequential loop.  Groups below [`PAR_THRESHOLD`] users stay
+//! single-threaded — thread spawn overhead dominates for small sweeps.
 
 use crate::algo::closed_form::solve_fixed;
 use crate::algo::sweep::{build_setup, SweepSetup};
 use crate::algo::types::{Plan, PlanningContext, User};
 use crate::util::{clamp, TIME_EPS};
 
-/// Per-(user, partition-point) scalars needed to price a candidate.
-struct UserTables {
-    /// O_ñ / R_m for the current ñ, in `order` order.
-    o_over_r: Vec<f64>,
-    /// ζ_m · g · v_ñ (device cycles of the prefix), in `order` order.
-    cycles: Vec<f64>,
-    /// κ_m · q · v_ñ (energy coefficient: e_cp = coef · f²), in `order` order.
-    e_coef: Vec<f64>,
-    /// Uplink energy at ñ, in `order` order.
-    e_tx: Vec<f64>,
-    /// f_min / f_max per user, in `order` order.
-    f_min: Vec<f64>,
-    f_max: Vec<f64>,
-    /// Suffix sums of each user's all-local (LC) energy, in `order` order:
-    /// lc_suffix[i] = Σ_{j >= i} LC_j;  local users of candidate i pay
-    /// lc_total - lc_suffix[i].
-    lc_suffix: Vec<f64>,
-    lc_total: f64,
+/// Group size from which [`solve_fast`] fans the partition sweep out to
+/// scoped threads.  Below this, per-partition work is a few microseconds
+/// and spawning threads costs more than it saves.
+pub const PAR_THRESHOLD: usize = 64;
+
+/// One row of [`UserTables`]: the per-(user, ñ) scalars of a peel-order
+/// position.  `lc: None` marks a user with no feasible local assignment.
+pub(crate) struct UserRow {
+    pub o_over_r: f64,
+    pub cycles: f64,
+    pub e_coef: f64,
+    pub e_tx: f64,
+    pub f_min: f64,
+    pub f_max: f64,
+    pub lc: Option<f64>,
 }
 
-fn build_user_tables(
+impl UserRow {
+    /// The *single* definition of the per-(user, ñ) pricing scalars —
+    /// `v` = prefix work v_ñ, `o_bits` = O_ñ, `v_total` = v_N.  Both the
+    /// direct table build below and the workspace's per-window SoA cache
+    /// go through this, so the two sources are bit-identical by
+    /// construction.
+    pub(crate) fn compute(u: &User, v: f64, o_bits: f64, v_total: f64) -> Self {
+        Self {
+            o_over_r: o_bits / u.dev.rate_bps,
+            cycles: u.dev.zeta * u.dev.g * v,
+            e_coef: u.dev.kappa * u.dev.q * v,
+            e_tx: u.dev.tx_energy(o_bits),
+            f_min: u.dev.f_min,
+            f_max: u.dev.f_max,
+            // LC energy at the user's deadline-optimal frequency; None if
+            // even f_max misses the deadline (the user must offload).
+            lc: u
+                .dev
+                .freq_for_deadline(v_total, u.deadline)
+                .map(|f| u.dev.compute_energy(v_total, f)),
+        }
+    }
+}
+
+/// Per-(user, partition-point) scalars needed to price a candidate, in
+/// peel (`setup.order`) order.  Built either directly from the users
+/// ([`build_user_tables`]) or by copying cached rows out of a
+/// [`crate::algo::workspace::PlannerWorkspace`]; both fill the same
+/// expressions, so the two sources are bit-identical.
+pub(crate) struct UserTables {
+    /// O_ñ / R_m for the current ñ.
+    pub o_over_r: Vec<f64>,
+    /// ζ_m · g · v_ñ (device cycles of the prefix).
+    pub cycles: Vec<f64>,
+    /// κ_m · q · v_ñ (energy coefficient: e_cp = coef · f²).
+    pub e_coef: Vec<f64>,
+    /// Uplink energy at ñ.
+    pub e_tx: Vec<f64>,
+    /// f_min / f_max per user.
+    pub f_min: Vec<f64>,
+    pub f_max: Vec<f64>,
+    /// LC energy per user at its deadline-optimal frequency; 0.0 where the
+    /// user has no feasible local frequency (see `lc_bad`).
+    lc: Vec<f64>,
+    lc_bad: Vec<bool>,
+    /// Suffix sums of LC energies: lc_suffix[i] = Σ_{j >= i} LC_j; local
+    /// users of candidate i pay lc_total - lc_suffix[i].  LC-infeasible
+    /// users contribute 0.0 to both sides, so the subtraction stays exact
+    /// for candidates that offload them.
+    pub lc_suffix: Vec<f64>,
+    pub lc_total: f64,
+    /// lc_bad_prefix[i] = number of LC-infeasible users among order[0..i].
+    /// Invariant: a candidate at î is local-feasible iff
+    /// lc_bad_prefix[î] == 0 — an LC-infeasible user may only appear in
+    /// the offloaded suffix.
+    lc_bad_prefix: Vec<u32>,
+}
+
+impl UserTables {
+    pub(crate) fn new() -> Self {
+        Self {
+            o_over_r: Vec::new(),
+            cycles: Vec::new(),
+            e_coef: Vec::new(),
+            e_tx: Vec::new(),
+            f_min: Vec::new(),
+            f_max: Vec::new(),
+            lc: Vec::new(),
+            lc_bad: Vec::new(),
+            lc_suffix: Vec::new(),
+            lc_total: 0.0,
+            lc_bad_prefix: Vec::new(),
+        }
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.o_over_r.clear();
+        self.cycles.clear();
+        self.e_coef.clear();
+        self.e_tx.clear();
+        self.f_min.clear();
+        self.f_max.clear();
+        self.lc.clear();
+        self.lc_bad.clear();
+        self.lc_suffix.clear();
+        self.lc_total = 0.0;
+        self.lc_bad_prefix.clear();
+    }
+
+    pub(crate) fn push(&mut self, row: UserRow) {
+        self.o_over_r.push(row.o_over_r);
+        self.cycles.push(row.cycles);
+        self.e_coef.push(row.e_coef);
+        self.e_tx.push(row.e_tx);
+        self.f_min.push(row.f_min);
+        self.f_max.push(row.f_max);
+        self.lc.push(row.lc.unwrap_or(0.0));
+        self.lc_bad.push(row.lc.is_none());
+    }
+
+    /// Compute the suffix sums and infeasibility prefix counts after all
+    /// rows were pushed.
+    pub(crate) fn finish(&mut self) {
+        let b = self.lc.len();
+        self.lc_suffix.clear();
+        self.lc_suffix.resize(b + 1, 0.0);
+        for i in (0..b).rev() {
+            self.lc_suffix[i] = self.lc_suffix[i + 1] + self.lc[i];
+        }
+        self.lc_total = self.lc_suffix[0];
+        self.lc_bad_prefix.clear();
+        self.lc_bad_prefix.push(0);
+        let mut bad = 0u32;
+        for &is_bad in &self.lc_bad {
+            bad += is_bad as u32;
+            self.lc_bad_prefix.push(bad);
+        }
+    }
+
+    /// True iff no local member of candidate î is LC-infeasible.
+    #[inline]
+    pub(crate) fn locals_feasible(&self, i_hat: usize) -> bool {
+        self.lc_bad_prefix[i_hat] == 0
+    }
+}
+
+pub(crate) fn build_user_tables(
     ctx: &PlanningContext,
     users: &[User],
     setup: &SweepSetup,
     n_tilde: usize,
-) -> Option<UserTables> {
-    let b = users.len();
+) -> UserTables {
+    let mut t = UserTables::new();
+    fill_user_tables(ctx, users, setup, n_tilde, &mut t);
+    t
+}
+
+/// Fill `t` (cleared first) for `users` in `setup.order`.
+pub(crate) fn fill_user_tables(
+    ctx: &PlanningContext,
+    users: &[User],
+    setup: &SweepSetup,
+    n_tilde: usize,
+    t: &mut UserTables,
+) {
     let v = ctx.tables.prefix_work(n_tilde);
     let o_bits = ctx.tables.o(n_tilde);
     let v_total = ctx.tables.total_work();
-
-    let mut t = UserTables {
-        o_over_r: Vec::with_capacity(b),
-        cycles: Vec::with_capacity(b),
-        e_coef: Vec::with_capacity(b),
-        e_tx: Vec::with_capacity(b),
-        f_min: Vec::with_capacity(b),
-        f_max: Vec::with_capacity(b),
-        lc_suffix: vec![0.0; b + 1],
-        lc_total: 0.0,
-    };
-    let mut lc = Vec::with_capacity(b);
+    t.clear();
     for &idx in &setup.order {
-        let u = &users[idx];
-        t.o_over_r.push(o_bits / u.dev.rate_bps);
-        t.cycles.push(u.dev.zeta * u.dev.g * v);
-        t.e_coef.push(u.dev.kappa * u.dev.q * v);
-        t.e_tx.push(u.dev.tx_energy(o_bits));
-        t.f_min.push(u.dev.f_min);
-        t.f_max.push(u.dev.f_max);
-        // LC energy at the user's deadline-optimal frequency
-        let f = u.dev.freq_for_deadline(v_total, u.deadline)?;
-        lc.push(u.dev.compute_energy(v_total, f));
+        t.push(UserRow::compute(&users[idx], v, o_bits, v_total));
     }
-    for i in (0..b).rev() {
-        t.lc_suffix[i] = t.lc_suffix[i + 1] + lc[i];
-    }
-    t.lc_total = t.lc_suffix[0];
-    Some(t)
+    t.finish();
 }
 
-/// Energy of candidate (suffix starting at î, f_e), or None if infeasible.
-/// Mirrors `solve_fixed` exactly, without constructing a Plan.
+/// Energy-only evaluation of one candidate: everything the DP and the
+/// sweep need that does not require materializing a [`Plan`].
+pub(crate) struct CandidateQuote {
+    /// Candidate energy, summed in pricing order (edge term first, then
+    /// the local users' LC block, then the offloaded suffix).
+    pub energy: f64,
+    /// Latest device-side arrival of the offloaded suffix (t_free-
+    /// independent; Eq. 22's max term).
+    pub max_arrival: f64,
+    /// φ_ñ(B_o) / f_e — the GPU tail occupation of this candidate.
+    pub phi_over_fe: f64,
+}
+
+/// Quote of candidate (suffix starting at î, f_e), or None if infeasible.
+/// Mirrors `solve_fixed` exactly, without constructing a Plan.  The only
+/// t_free-dependent step is the Eq. 6 pre-check `t_free + φ/f_e ≤ l_o`;
+/// pass `f64::NEG_INFINITY` to price a candidate unconditionally (the
+/// workspace cache does, re-validating Eq. 6 per query).
 #[inline]
-fn candidate_energy(
+pub(crate) fn candidate_quote(
     ctx: &PlanningContext,
     setup: &SweepSetup,
     tables: &UserTables,
@@ -88,7 +238,7 @@ fn candidate_energy(
     i_hat: usize,
     f_e: f64,
     t_free: f64,
-) -> Option<f64> {
+) -> Option<CandidateQuote> {
     let b = setup.order.len();
     let b_o = b - i_hat;
     let l_o = setup.suffix_min_deadline[i_hat];
@@ -99,19 +249,25 @@ fn candidate_energy(
     if t_free + phi_over_fe > l_o + TIME_EPS {
         return None;
     }
+    // An LC-infeasible user kept local kills only this candidate (module
+    // docs: it must not mask candidates that offload the user).
+    if !tables.locals_feasible(i_hat) {
+        return None;
+    }
 
     let mut energy = ctx.edge.psi(n_tilde, b_o) * f_e * f_e;
     // local users: everyone before the suffix
     energy += tables.lc_total - tables.lc_suffix[i_hat];
 
+    let mut max_arrival: f64 = 0.0;
     for i in i_hat..b {
         let budget = l_o - tables.o_over_r[i] - phi_over_fe;
         let cycles = tables.cycles[i];
-        let f_m = if cycles == 0.0 {
+        let (f_m, arrival) = if cycles == 0.0 {
             if budget < -TIME_EPS {
                 return None;
             }
-            tables.f_min[i]
+            (tables.f_min[i], tables.o_over_r[i])
         } else {
             if budget <= 0.0 {
                 return None;
@@ -120,16 +276,21 @@ fn candidate_energy(
             if cap > tables.f_max[i] * (1.0 + 1e-12) {
                 return None;
             }
-            clamp(cap.max(tables.f_min[i]), tables.f_min[i], tables.f_max[i])
+            let f_m = clamp(cap.max(tables.f_min[i]), tables.f_min[i], tables.f_max[i]);
+            (f_m, cycles / f_m + tables.o_over_r[i])
         };
         // arrival feasibility at the clamped frequency
-        let arrival = if cycles == 0.0 { tables.o_over_r[i] } else { cycles / f_m + tables.o_over_r[i] };
         if arrival + phi_over_fe > l_o + TIME_EPS {
             return None;
         }
+        max_arrival = max_arrival.max(arrival);
         energy += tables.e_coef[i] * f_m * f_m + tables.e_tx[i];
     }
-    Some(energy)
+    Some(CandidateQuote {
+        energy,
+        max_arrival,
+        phi_over_fe,
+    })
 }
 
 /// Winner of one partition point's sweep, energy-only.
@@ -150,7 +311,7 @@ pub fn sweep_fast(
     t_free: f64,
     fixed_edge_freq: bool,
 ) -> Option<FastCandidate> {
-    let tables = build_user_tables(ctx, users, setup, n_tilde)?;
+    let tables = build_user_tables(ctx, users, setup, n_tilde);
     let b = users.len();
     let f_max = ctx.edge.f_max();
     let f_min = ctx.edge.f_min();
@@ -166,13 +327,13 @@ pub fn sweep_fast(
         if i_hat >= b {
             break;
         }
-        if let Some(energy) = candidate_energy(ctx, setup, &tables, n_tilde, i_hat, f_e, t_free) {
-            if best.as_ref().map_or(true, |c| energy < c.energy) {
+        if let Some(q) = candidate_quote(ctx, setup, &tables, n_tilde, i_hat, f_e, t_free) {
+            if best.as_ref().map_or(true, |c| q.energy < c.energy) {
                 best = Some(FastCandidate {
                     n_tilde,
                     i_hat,
                     f_e,
-                    energy,
+                    energy: q.energy,
                 });
             }
         }
@@ -197,6 +358,23 @@ pub fn solve_fast(
     binary: bool,
     label: &str,
 ) -> Option<Plan> {
+    solve_fast_with(ctx, users, t_free, edge_dvfs, binary, label, PAR_THRESHOLD)
+}
+
+/// [`solve_fast`] with an explicit parallelism threshold (groups of at
+/// least `par_threshold` users sweep partitions on scoped threads).  The
+/// parallel and sequential paths are bit-identical; the threshold is a
+/// parameter so tests can force either.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_fast_with(
+    ctx: &PlanningContext,
+    users: &[User],
+    t_free: f64,
+    edge_dvfs: bool,
+    binary: bool,
+    label: &str,
+    par_threshold: usize,
+) -> Option<Plan> {
     if users.is_empty() {
         return None;
     }
@@ -206,11 +384,44 @@ pub fn solve_fast(
     }
     let n = ctx.n();
 
-    let mut best: Option<(FastCandidate, SweepSetup)> = None;
     let partitions: Vec<usize> = if binary { vec![0] } else { (0..n).collect() };
-    for n_tilde in partitions {
+    let sweep_one = |n_tilde: usize| -> Option<(FastCandidate, SweepSetup)> {
         let setup = build_setup(ctx, users, n_tilde);
-        if let Some(cand) = sweep_fast(ctx, users, n_tilde, &setup, t_free, !edge_dvfs) {
+        sweep_fast(ctx, users, n_tilde, &setup, t_free, !edge_dvfs).map(|c| (c, setup))
+    };
+
+    let workers = if users.len() >= par_threshold && partitions.len() > 1 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(partitions.len())
+    } else {
+        1
+    };
+    // Per-partition winners, in partition order (parallel or not).
+    let per_partition: Vec<Option<(FastCandidate, SweepSetup)>> = if workers > 1 {
+        let chunk = (partitions.len() + workers - 1) / workers;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = partitions
+                .chunks(chunk)
+                .map(|part| {
+                    s.spawn(move || part.iter().map(|&nt| sweep_one(nt)).collect::<Vec<_>>())
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("partition sweep worker"))
+                .collect()
+        })
+    } else {
+        partitions.iter().map(|&nt| sweep_one(nt)).collect()
+    };
+
+    // Merge in partition order with a strict `<`: identical tie-breaking to
+    // the sequential loop (first partition wins exact ties).
+    let mut best: Option<(FastCandidate, SweepSetup)> = None;
+    for entry in per_partition {
+        if let Some((cand, setup)) = entry {
             if best.as_ref().map_or(true, |(c, _)| cand.energy < c.energy) {
                 best = Some((cand, setup));
             }
@@ -312,6 +523,30 @@ mod tests {
                     }
                     (None, None) => {}
                     _ => panic!("feasibility disagreement"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_partition_sweep_is_bit_identical() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(0x9A12);
+        for trial in 0..5 {
+            let users = random_users(&c, 40, &mut rng);
+            for t_free in [0.0, users[0].deadline * 0.3] {
+                let seq = solve_fast_with(&c, &users, t_free, true, false, "s", usize::MAX);
+                let par = solve_fast_with(&c, &users, t_free, true, false, "s", 1);
+                match (&seq, &par) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.total_energy.to_bits(), b.total_energy.to_bits(), "{trial}");
+                        assert_eq!(a.partition, b.partition, "{trial}");
+                        assert_eq!(a.batch_size, b.batch_size, "{trial}");
+                        assert_eq!(a.offload_ids(), b.offload_ids(), "{trial}");
+                        assert_eq!(a.t_free_end.to_bits(), b.t_free_end.to_bits(), "{trial}");
+                    }
+                    (None, None) => {}
+                    _ => panic!("trial {trial}: feasibility disagreement"),
                 }
             }
         }

@@ -8,8 +8,23 @@
 //! (instead of only the min-energy state) matters because a cheaper prefix
 //! that parks the GPU busy for longer can starve later tight-deadline
 //! groups — the exhaustive checker in the tests exercises exactly that.
+//!
+//! Two result-identical execution paths share this DP:
+//!
+//! * the **memoized workspace path** ([`optimal_grouping_ws`] with a
+//!   fast-path [`JDob`] inner solver): each group `[j..i)` runs its
+//!   candidate sweep at most once per [`PlannerWorkspace`] and every
+//!   Pareto state re-validates the cached frontier in O(k); DP states
+//!   carry a [`GroupChoice`] descriptor instead of a full [`Plan`], and
+//!   plans are materialized only for the winning chain;
+//! * the **generic path** ([`optimal_grouping_reference`], also the route
+//!   for non-J-DOB solvers): one inner `solve` per (group, Pareto state),
+//!   exactly the pre-workspace behaviour — kept as the regression fence
+//!   and the baseline for the inner-solve counters.
 
+use crate::algo::jdob::JDob;
 use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
+use crate::algo::workspace::{GroupChoice, PlannerWorkspace};
 use crate::util::TIME_EPS;
 
 /// A complete multi-group strategy.
@@ -29,21 +44,55 @@ impl GroupedPlan {
     }
 }
 
-#[derive(Clone)]
-struct DpState {
-    energy: f64,
-    t_free: f64,
-    /// (start index of the last group, plan for it, predecessor state idx)
-    back: Option<(usize, Plan, usize)>,
-}
-
 /// OG: optimal contiguous grouping over deadline-sorted users.
 ///
 /// `solver` is the inner per-group algorithm (J-DOB or any benchmark).
 /// Returns None iff some user can't be served by any grouping (does not
 /// happen for paper-conforming inputs: singleton groups of LC-feasible
 /// users always work with J-DOB/LC; IP-SSA may fail only via t_free).
+///
+/// Builds a throwaway [`PlannerWorkspace`]; hot-path callers that re-plan
+/// the same window (or also need the sorted view) should build one
+/// workspace and call [`optimal_grouping_ws`].
 pub fn optimal_grouping(
+    ctx: &PlanningContext,
+    users: &[User],
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    if users.is_empty() {
+        return None;
+    }
+    let mut ws = PlannerWorkspace::new(ctx, users);
+    optimal_grouping_ws(ctx, &mut ws, solver, t_free0)
+}
+
+/// [`optimal_grouping`] over a caller-owned workspace.  Fast-path J-DOB
+/// solvers take the memoized route; everything else runs the generic
+/// per-(group, state) DP on the workspace's shared sorted view (no
+/// additional `User` copies either way).
+pub fn optimal_grouping_ws(
+    ctx: &PlanningContext,
+    ws: &mut PlannerWorkspace,
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    if ws.is_empty() {
+        return None;
+    }
+    if let Some(jdob) = solver.as_jdob() {
+        if jdob.fast {
+            return optimal_grouping_memo(ctx, ws, jdob, t_free0);
+        }
+    }
+    optimal_grouping_generic(ctx, ws.sorted(), ws.order(), solver, t_free0)
+}
+
+/// The pre-workspace OG path: one inner `solve` per (group, Pareto state),
+/// no caching.  Kept public as the cross-check baseline — the memoized
+/// path must be plan-identical to this on every input (pinned by
+/// `prop_memoized_og_plan_identity`).
+pub fn optimal_grouping_reference(
     ctx: &PlanningContext,
     users: &[User],
     solver: &dyn GroupSolver,
@@ -56,6 +105,117 @@ pub fn optimal_grouping(
     let mut order: Vec<usize> = (0..m).collect();
     order.sort_by(|&a, &b| users[a].deadline.partial_cmp(&users[b].deadline).expect("finite"));
     let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
+    optimal_grouping_generic(ctx, &sorted, &order, solver, t_free0)
+}
+
+/// Memoized DP: states carry (energy, t_free, choice descriptor); the
+/// workspace answers each (group, state) query from its cached candidate
+/// frontier and full plans are materialized only for the winning chain.
+fn optimal_grouping_memo(
+    ctx: &PlanningContext,
+    ws: &mut PlannerWorkspace,
+    jdob: &JDob,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    #[derive(Clone, Copy)]
+    struct MState {
+        energy: f64,
+        t_free: f64,
+        /// (start index of the last group, predecessor state idx, choice)
+        back: Option<(usize, usize, GroupChoice)>,
+    }
+
+    let m = ws.len();
+    let mut frontier: Vec<Vec<MState>> = vec![Vec::new(); m + 1];
+    frontier[0].push(MState {
+        energy: 0.0,
+        t_free: t_free0,
+        back: None,
+    });
+
+    for i in 1..=m {
+        let mut states: Vec<MState> = Vec::new();
+        for j in 0..i {
+            for (sidx, st) in frontier[j].iter().enumerate() {
+                if let Some(sol) = ws.solve_group(ctx, jdob, j, i, st.t_free) {
+                    states.push(MState {
+                        energy: st.energy + sol.energy,
+                        t_free: sol.t_free_end,
+                        back: Some((j, sidx, sol.choice)),
+                    });
+                }
+            }
+        }
+        frontier[i] = pareto_prune_by(states, |s| (s.energy, s.t_free));
+        if frontier[i].is_empty() {
+            return None;
+        }
+    }
+
+    // best final state by energy
+    let (best_idx, _) = frontier[m]
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.energy.partial_cmp(&b.energy).expect("finite"))?;
+    let total_energy = frontier[m][best_idx].energy;
+    let t_free_end = frontier[m][best_idx].t_free;
+
+    // reconstruct the chain, then materialize forward against each group's
+    // incoming horizon (the predecessor state's t_free)
+    let mut chain: Vec<(usize, usize, GroupChoice, f64)> = Vec::new();
+    let mut i = m;
+    let mut sidx = best_idx;
+    while i > 0 {
+        let (j, prev_sidx, choice) =
+            frontier[i][sidx].back.expect("non-initial state has back-pointer");
+        chain.push((j, i, choice, frontier[j][prev_sidx].t_free));
+        i = j;
+        sidx = prev_sidx;
+    }
+    chain.reverse();
+
+    let mut groups: Vec<(Vec<usize>, Plan)> = Vec::with_capacity(chain.len());
+    for (j, i, choice, t_in) in chain {
+        match ws.materialize(ctx, jdob, j, i, choice, t_in) {
+            Some(plan) => groups.push((ws.order()[j..i].to_vec(), plan)),
+            // Unreachable by construction (the choice was validated at this
+            // exact horizon); degrade to the uncached path rather than
+            // panic on a serving thread.
+            None => {
+                debug_assert!(false, "cached choice failed to materialize");
+                return optimal_grouping_generic(ctx, ws.sorted(), ws.order(), jdob, t_free0);
+            }
+        }
+    }
+    Some(GroupedPlan {
+        groups,
+        total_energy,
+        t_free_end,
+    })
+}
+
+#[derive(Clone)]
+struct DpState {
+    energy: f64,
+    t_free: f64,
+    /// (start index of the last group, plan for it, predecessor state idx)
+    back: Option<(usize, Plan, usize)>,
+}
+
+/// The generic DP over a pre-sorted view: one `solver.solve` per
+/// (group, Pareto state).  States own their group's plan (moved in, never
+/// cloned); reconstruction takes the winning chain's plans back out.
+fn optimal_grouping_generic(
+    ctx: &PlanningContext,
+    sorted: &[User],
+    order: &[usize],
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    let m = sorted.len();
+    if m == 0 {
+        return None;
+    }
 
     // frontier[i] = Pareto states covering the first i sorted users.
     let mut frontier: Vec<Vec<DpState>> = vec![Vec::new(); m + 1];
@@ -79,7 +239,7 @@ pub fn optimal_grouping(
                 }
             }
         }
-        frontier[i] = pareto_prune(states);
+        frontier[i] = pareto_prune_by(states, |s| (s.energy, s.t_free));
         if frontier[i].is_empty() {
             return None;
         }
@@ -90,21 +250,23 @@ pub fn optimal_grouping(
         .iter()
         .enumerate()
         .min_by(|(_, a), (_, b)| a.energy.partial_cmp(&b.energy).expect("finite"))?;
+    let total_energy = frontier[m][best_idx].energy;
+    let t_free_end = frontier[m][best_idx].t_free;
 
-    // reconstruct groups
+    // reconstruct groups, moving each winning plan out of its state
     let mut groups_rev: Vec<(Vec<usize>, Plan)> = Vec::new();
     let mut i = m;
     let mut sidx = best_idx;
     while i > 0 {
-        let st = &frontier[i][sidx];
-        let (j, plan, prev_sidx) = st.back.clone().expect("non-initial state has back-pointer");
+        let (j, plan, prev_sidx) = frontier[i][sidx]
+            .back
+            .take()
+            .expect("non-initial state has back-pointer");
         groups_rev.push((order[j..i].to_vec(), plan));
         i = j;
         sidx = prev_sidx;
     }
     groups_rev.reverse();
-    let total_energy = frontier[m][best_idx].energy;
-    let t_free_end = frontier[m][best_idx].t_free;
     Some(GroupedPlan {
         groups: groups_rev,
         total_energy,
@@ -113,18 +275,19 @@ pub fn optimal_grouping(
 }
 
 /// Keep only non-dominated (energy, t_free) states (both lower = better).
-fn pareto_prune(mut states: Vec<DpState>) -> Vec<DpState> {
+fn pareto_prune_by<T>(mut states: Vec<T>, key: impl Fn(&T) -> (f64, f64)) -> Vec<T> {
     states.sort_by(|a, b| {
-        a.energy
-            .partial_cmp(&b.energy)
+        let (ea, ta) = key(a);
+        let (eb, tb) = key(b);
+        ea.partial_cmp(&eb)
             .expect("finite")
-            .then(a.t_free.partial_cmp(&b.t_free).expect("finite"))
+            .then(ta.partial_cmp(&tb).expect("finite"))
     });
-    let mut out: Vec<DpState> = Vec::new();
+    let mut out: Vec<T> = Vec::new();
     let mut best_tfree = f64::INFINITY;
     for s in states {
-        if s.t_free < best_tfree - TIME_EPS {
-            best_tfree = s.t_free;
+        if key(&s).1 < best_tfree - TIME_EPS {
+            best_tfree = key(&s).1;
             out.push(s);
         }
     }
@@ -139,14 +302,27 @@ pub fn exhaustive_grouping(
     solver: &dyn GroupSolver,
     t_free0: f64,
 ) -> Option<GroupedPlan> {
-    let m = users.len();
+    if users.is_empty() {
+        return None;
+    }
+    let ws = PlannerWorkspace::new(ctx, users);
+    exhaustive_grouping_ws(ctx, &ws, solver, t_free0)
+}
+
+/// [`exhaustive_grouping`] over a caller-owned workspace's sorted view.
+pub fn exhaustive_grouping_ws(
+    ctx: &PlanningContext,
+    ws: &PlannerWorkspace,
+    solver: &dyn GroupSolver,
+    t_free0: f64,
+) -> Option<GroupedPlan> {
+    let m = ws.len();
     assert!(m <= 12, "exhaustive grouping is exponential");
     if m == 0 {
         return None;
     }
-    let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| users[a].deadline.partial_cmp(&users[b].deadline).expect("finite"));
-    let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
+    let sorted = ws.sorted();
+    let order = ws.order();
 
     let mut best: Option<GroupedPlan> = None;
     // bitmask over the m-1 possible cut points
@@ -225,6 +401,30 @@ mod tests {
             let ex = exhaustive_grouping(&c, &users, &solver, 0.0).unwrap();
             let gap = (dp.total_energy - ex.total_energy).abs() / ex.total_energy;
             assert!(gap < 1e-9, "betas {betas:?}: dp {} ex {}", dp.total_energy, ex.total_energy);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_reference_path() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut rng = Rng::seed_from_u64(4242);
+        for trial in 0..6 {
+            let betas: Vec<f64> = (0..7).map(|_| rng.gen_range(0.3, 12.0)).collect();
+            let users = users_beta(&betas, &c);
+            let t0 = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min)
+                * if trial % 2 == 0 { 0.0 } else { 0.5 };
+            let memo = optimal_grouping(&c, &users, &solver, t0).unwrap();
+            let reference = optimal_grouping_reference(&c, &users, &solver, t0).unwrap();
+            assert_eq!(memo.groups.len(), reference.groups.len(), "trial {trial}");
+            for ((gm, pm), (gr, pr)) in memo.groups.iter().zip(&reference.groups) {
+                assert_eq!(gm, gr, "trial {trial}: group membership");
+                assert_eq!(pm.partition, pr.partition, "trial {trial}");
+                assert_eq!(pm.batch_size, pr.batch_size, "trial {trial}");
+                assert_eq!(pm.offload_ids(), pr.offload_ids(), "trial {trial}");
+            }
+            let rel = (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
+            assert!(rel < 1e-12, "trial {trial}: {} vs {}", memo.total_energy, reference.total_energy);
         }
     }
 

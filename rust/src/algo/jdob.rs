@@ -145,6 +145,10 @@ impl GroupSolver for JDob {
     fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
         JDob::solve(self, ctx, users, t_free)
     }
+
+    fn as_jdob(&self) -> Option<&JDob> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -9,6 +9,9 @@
 //! * [`baselines`] — LC, IP-SSA, J-DOB w/o edge DVFS, J-DOB binary.
 //! * [`bruteforce`] — exhaustive optimum for small M (validation).
 //! * [`grouping`] — OG outer dynamic program (different deadlines).
+//! * [`workspace`] — per-window planner workspace: shared deadline sort,
+//!   per-(user, ñ) tables, memoized group-candidate frontiers and the
+//!   inner-solve counters (the OG hot-path accelerator).
 //! * [`validate`] — independent feasibility checker for any plan.
 
 pub mod baselines;
@@ -20,6 +23,8 @@ pub mod jdob;
 pub mod sweep;
 pub mod types;
 pub mod validate;
+pub mod workspace;
 
 pub use jdob::JDob;
 pub use types::{GroupSolver, Plan, PlanningContext, User, UserId};
+pub use workspace::{CountingSolver, PlannerWorkspace};

@@ -54,6 +54,24 @@ pub enum PeelOrder {
     GammaDescending,
 }
 
+/// The slack-ascending peel comparator: ascending δ = T − γ, ties broken
+/// by descending γ (the paper's order).  This is the *single* definition
+/// of the peel order — [`build_setup_from_gammas`] and the workspace's
+/// peel-order reconstruction both sort with it, so the cached and direct
+/// paths can never diverge on ordering.
+pub(crate) fn slack_ascending_cmp(
+    users: &[User],
+    g: &[f64],
+    i: usize,
+    j: usize,
+) -> std::cmp::Ordering {
+    let di = users[i].deadline - g[i];
+    let dj = users[j].deadline - g[j];
+    di.partial_cmp(&dj)
+        .expect("finite slack")
+        .then(g[j].partial_cmp(&g[i]).expect("finite gamma"))
+}
+
 /// Build the peel order and threshold sequence (Alg. 1 lines 4-6).
 pub fn build_setup(ctx: &PlanningContext, users: &[User], n_tilde: usize) -> SweepSetup {
     build_setup_ordered(ctx, users, n_tilde, PeelOrder::SlackAscending)
@@ -66,19 +84,29 @@ pub fn build_setup_ordered(
     n_tilde: usize,
     ord: PeelOrder,
 ) -> SweepSetup {
-    let b = users.len();
     let g: Vec<f64> = users.iter().map(|u| gamma(ctx, u, n_tilde)).collect();
+    build_setup_from_gammas(ctx, users, n_tilde, &g, ord)
+}
+
+/// [`build_setup_ordered`] over precomputed γ values (`g[i]` = γ of
+/// `users[i]` at `n_tilde`).  This is the entry point used by
+/// [`crate::algo::workspace::PlannerWorkspace`], which computes all M·N
+/// γ values exactly once per window; passing them here is bit-identical to
+/// recomputing them, since the workspace uses the same [`gamma`] closed
+/// form.
+pub fn build_setup_from_gammas(
+    ctx: &PlanningContext,
+    users: &[User],
+    n_tilde: usize,
+    g: &[f64],
+    ord: PeelOrder,
+) -> SweepSetup {
+    let b = users.len();
+    debug_assert_eq!(b, g.len());
     let mut order: Vec<usize> = (0..b).collect();
     match ord {
         PeelOrder::SlackAscending => {
-            // ascending slack; ties broken by descending gamma (paper order)
-            order.sort_by(|&i, &j| {
-                let di = users[i].deadline - g[i];
-                let dj = users[j].deadline - g[j];
-                di.partial_cmp(&dj)
-                    .expect("finite slack")
-                    .then(g[j].partial_cmp(&g[i]).expect("finite gamma"))
-            });
+            order.sort_by(|&i, &j| slack_ascending_cmp(users, g, i, j));
         }
         PeelOrder::GammaDescending => {
             order.sort_by(|&i, &j| g[j].partial_cmp(&g[i]).expect("finite gamma"));

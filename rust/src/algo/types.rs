@@ -132,6 +132,16 @@ impl PlanningContext {
 pub trait GroupSolver: Send + Sync {
     fn name(&self) -> &'static str;
     fn solve(&self, ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan>;
+
+    /// Downcast hook for the OG dynamic program: a fast-path J-DOB solver
+    /// lets the DP memoize inner solves through the per-window
+    /// [`crate::algo::workspace::PlannerWorkspace`] (candidate pricing is
+    /// t_free-independent there).  Every other solver — including wrappers
+    /// that want the uncached baseline — keeps the default `None` and runs
+    /// one `solve` per (group, Pareto state).
+    fn as_jdob(&self) -> Option<&crate::algo::jdob::JDob> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -18,8 +18,9 @@
 
 use std::collections::VecDeque;
 
-use crate::algo::grouping::{optimal_grouping, GroupedPlan};
+use crate::algo::grouping::{optimal_grouping_ws, GroupedPlan};
 use crate::algo::types::{GroupSolver, PlanningContext, User, UserId};
+use crate::algo::workspace::PlannerWorkspace;
 use crate::sched::admission::AdmissionPolicy;
 use crate::sched::clock::Clock;
 use crate::util::TIME_EPS;
@@ -203,7 +204,11 @@ pub fn plan_window<P>(
     let grouped = if eligible.is_empty() {
         None
     } else {
-        optimal_grouping(ctx, &eligible, solver, rel_t_free)
+        // One workspace per window: the deadline sort, the per-(user, ñ)
+        // tables and every group's candidate frontier are computed once
+        // here and shared across all of the OG DP's inner solves.
+        let mut ws = PlannerWorkspace::new(ctx, &eligible);
+        optimal_grouping_ws(ctx, &mut ws, solver, rel_t_free)
     };
 
     let mut outcomes: Vec<Option<UserOutcome>> = vec![None; window.len()];

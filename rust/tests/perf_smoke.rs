@@ -1,0 +1,70 @@
+//! Release-mode planner perf guard.  Ignored by default so `cargo test -q`
+//! stays deterministic-time; CI runs it explicitly:
+//!
+//! ```sh
+//! cargo test --release --test perf_smoke -- --ignored
+//! ```
+//!
+//! Two fences against gross planner regressions, without nightly criterion
+//! comparisons:
+//! * a *counted* fence — the workspace DP must issue ≥5x fewer inner-solve
+//!   invocations than the reference DP on the M = 32 horizon-replan
+//!   workload (counts are machine-independent, so this cannot flake on
+//!   slow runners);
+//! * a *timed* fence with a very generous ceiling — a memoized M = 32
+//!   window plan takes ~1-5 ms in release; budgeting 250 ms only trips on
+//!   order-of-magnitude regressions (e.g. the memoization silently
+//!   disabled), not on CI noise.
+
+mod common;
+
+use std::time::Instant;
+
+use common::{ctx, random_users};
+use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal_grouping_ws};
+use jdob::algo::jdob::JDob;
+use jdob::algo::{CountingSolver, PlannerWorkspace};
+use jdob::util::rng::Rng;
+
+#[test]
+#[ignore = "release-mode perf smoke; CI runs it via --ignored"]
+fn perf_smoke_planner_m32() {
+    let c = ctx();
+    let solver = JDob::full();
+    let mut rng = Rng::seed_from_u64(0x50CE);
+    let users = random_users(&c, 32, (0.0, 10.0), &mut rng);
+    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+
+    // counted fence: horizon-replan workload (one window, 4 horizons)
+    let mut ws = PlannerWorkspace::new(&c, &users);
+    let mut ref_calls = 0u64;
+    for frac in [0.0, 0.2, 0.4, 0.6] {
+        let t0 = min_d * frac;
+        optimal_grouping_ws(&c, &mut ws, &solver, t0).expect("feasible");
+        let counting = CountingSolver::new(&solver);
+        optimal_grouping_reference(&c, &users, &counting, t0).expect("feasible");
+        ref_calls += counting.calls();
+    }
+    let ratio = ref_calls as f64 / ws.stats.group_sweeps as f64;
+    assert!(
+        ratio >= 5.0,
+        "inner-solve reduction regressed: {ref_calls} reference invocations vs {} sweeps \
+         = {ratio:.2}x",
+        ws.stats.group_sweeps
+    );
+
+    // timed fence: gross wall-clock guard on the memoized single plan
+    let t0 = min_d * 0.4;
+    optimal_grouping(&c, &users, &solver, t0).expect("warmup");
+    let reps = 5;
+    let start = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(optimal_grouping(&c, &users, &solver, t0));
+    }
+    let per_plan = start.elapsed().as_secs_f64() / reps as f64;
+    assert!(
+        per_plan < 0.25,
+        "memoized M=32 plan took {:.1} ms (expected single-digit ms in release)",
+        per_plan * 1e3
+    );
+}

@@ -10,9 +10,10 @@ mod common;
 use common::{ctx, random_users};
 use jdob::algo::baselines::{IpSsa, LocalComputing};
 use jdob::algo::closed_form::solve_fixed;
-use jdob::algo::grouping::optimal_grouping;
+use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference};
 use jdob::algo::jdob::JDob;
 use jdob::algo::sweep::build_setup;
+use jdob::algo::types::User;
 use jdob::algo::validate::validate_plan;
 use jdob::util::rng::Rng;
 
@@ -89,6 +90,91 @@ fn prop_fastpath_matches_reference_plans() {
         }
     }
     assert!(compared >= 200, "expected 200+ comparable scenarios, got {compared}");
+}
+
+/// Memoized-workspace OG parity: `optimal_grouping` (which routes fast
+/// J-DOB solvers through the per-window workspace + group-candidate cache)
+/// must produce *identical* grouped plans — per-group membership,
+/// partition, offload set, batch, edge frequency — to the reference
+/// per-(group, state) DP, across 200+ seeded scenarios including busy-GPU
+/// horizons and mixed-deadline groups.  This is the regression fence for
+/// the t_free-independent candidate caching.
+#[test]
+fn prop_memoized_og_plan_identity() {
+    let mut compared = 0usize;
+    for seed in 0..CASES {
+        let (c, users) = scenario(seed ^ 0x06D1_1111);
+        let solver = JDob::full();
+        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        for t_free in [0.0, min_deadline * 0.5] {
+            let memo = optimal_grouping(&c, &users, &solver, t_free);
+            let reference = optimal_grouping_reference(&c, &users, &solver, t_free);
+            match (memo, reference) {
+                (None, None) => {}
+                (Some(m), Some(r)) => {
+                    compared += 1;
+                    assert_eq!(
+                        m.groups.len(),
+                        r.groups.len(),
+                        "seed {seed} t_free {t_free}: group count"
+                    );
+                    for (gi, ((gm, pm), (gr, pr))) in
+                        m.groups.iter().zip(&r.groups).enumerate()
+                    {
+                        assert_eq!(gm, gr, "seed {seed} t_free {t_free}: members of group {gi}");
+                        assert_eq!(pm.partition, pr.partition, "seed {seed} group {gi}");
+                        assert_eq!(pm.batch_size, pr.batch_size, "seed {seed} group {gi}");
+                        assert_eq!(pm.offload_ids(), pr.offload_ids(), "seed {seed} group {gi}");
+                        let rel = (pm.total_energy - pr.total_energy).abs() / pr.total_energy;
+                        assert!(rel < 1e-12, "seed {seed} group {gi} energy");
+                    }
+                    let rel = (m.total_energy - r.total_energy).abs() / r.total_energy;
+                    assert!(
+                        rel < 1e-12,
+                        "seed {seed} t_free {t_free}: {} vs {}",
+                        m.total_energy,
+                        r.total_energy
+                    );
+                    assert!(
+                        (m.t_free_end - r.t_free_end).abs()
+                            <= r.t_free_end.abs() * 1e-12 + 1e-15,
+                        "seed {seed} t_free {t_free}: t_free_end"
+                    );
+                }
+                (m, r) => panic!(
+                    "seed {seed} t_free {t_free}: feasibility disagreement \
+                     (memoized {} vs reference {})",
+                    m.is_some(),
+                    r.is_some()
+                ),
+            }
+        }
+    }
+    assert!(compared >= 200, "expected 200+ comparable scenarios, got {compared}");
+}
+
+/// Cached-candidate re-validation soundness: every group plan the memoized
+/// DP emits validates against the independent checker at its cascaded
+/// horizon — a cached candidate admitted at the wrong t_free would trip
+/// the Eq. 6 / deadline re-derivation here.
+#[test]
+fn prop_memoized_groups_validate() {
+    for seed in 0..CASES {
+        let (c, users) = scenario(seed ^ 0x0A11_DA7E);
+        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        for t_free in [0.0, min_deadline * 0.5] {
+            let Some(gp) = optimal_grouping(&c, &users, &JDob::full(), t_free) else {
+                continue;
+            };
+            let mut horizon = t_free;
+            for (members, plan) in &gp.groups {
+                let group: Vec<User> = members.iter().map(|&i| users[i].clone()).collect();
+                validate_plan(&c, &group, plan, horizon)
+                    .unwrap_or_else(|e| panic!("seed {seed} t_free {t_free}: {e}"));
+                horizon = plan.t_free_end;
+            }
+        }
+    }
 }
 
 #[test]

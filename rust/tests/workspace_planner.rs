@@ -1,0 +1,192 @@
+//! Workspace-memoized OG planner: plan identity vs the reference DP,
+//! inner-solve counter reduction, re-validation soundness, and the
+//! LC-infeasible masking regression (fastpath `build_user_tables`).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{ctx, random_users};
+use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal_grouping_ws, GroupedPlan};
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::{PlanningContext, User};
+use jdob::algo::validate::validate_plan;
+use jdob::algo::{CountingSolver, PlannerWorkspace};
+use jdob::config::SystemConfig;
+use jdob::energy::device::DeviceModel;
+use jdob::energy::edge::AnalyticEdge;
+use jdob::model::ModelProfile;
+use jdob::util::rng::Rng;
+
+fn assert_plan_identical(memo: &GroupedPlan, reference: &GroupedPlan, what: &str) {
+    assert_eq!(memo.groups.len(), reference.groups.len(), "{what}: group count");
+    for (gi, ((gm, pm), (gr, pr))) in memo.groups.iter().zip(&reference.groups).enumerate() {
+        assert_eq!(gm, gr, "{what}: membership of group {gi}");
+        assert_eq!(pm.partition, pr.partition, "{what}: partition of group {gi}");
+        assert_eq!(pm.batch_size, pr.batch_size, "{what}: batch of group {gi}");
+        assert_eq!(pm.offload_ids(), pr.offload_ids(), "{what}: offload set of group {gi}");
+        if pm.batch_size > 0 {
+            assert_eq!(pm.f_edge, pr.f_edge, "{what}: f_e of group {gi}");
+        }
+        let rel = (pm.total_energy - pr.total_energy).abs() / pr.total_energy;
+        assert!(rel < 1e-12, "{what}: group {gi} energy {} vs {}", pm.total_energy, pr.total_energy);
+    }
+    let rel = (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
+    assert!(rel < 1e-12, "{what}: total {} vs {}", memo.total_energy, reference.total_energy);
+    let dt = (memo.t_free_end - reference.t_free_end).abs();
+    assert!(dt <= reference.t_free_end.abs() * 1e-12 + 1e-15, "{what}: t_free_end");
+}
+
+/// The acceptance counter: a 32-user window re-planned across 4 GPU-busy
+/// horizons (the "incremental window planner" workload — speculative
+/// close-time evaluation / horizon drain).  The workspace path must issue
+/// at least 5x fewer inner-solve invocations (full candidate sweeps) than
+/// the reference DP doing the same four plans, while staying
+/// plan-identical at every horizon.
+#[test]
+fn inner_solve_invocations_reduced_5x_at_m32() {
+    let c = ctx();
+    let solver = JDob::full();
+    let mut total_calls = 0u64;
+    let mut total_sweeps = 0u64;
+    for seed in [11u64, 22, 33] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let users = random_users(&c, 32, (0.0, 10.0), &mut rng);
+        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let mut ws = PlannerWorkspace::new(&c, &users);
+        for frac in [0.0, 0.2, 0.4, 0.6] {
+            let t0 = min_d * frac;
+            let memo = optimal_grouping_ws(&c, &mut ws, &solver, t0).expect("feasible");
+            let counting = CountingSolver::new(&solver);
+            let reference =
+                optimal_grouping_reference(&c, &users, &counting, t0).expect("feasible");
+            total_calls += counting.calls();
+            assert_plan_identical(&memo, &reference, &format!("seed {seed} frac {frac}"));
+        }
+        total_sweeps += ws.stats.group_sweeps;
+        // within one workspace, each of the M(M+1)/2 groups sweeps at most once
+        assert!(ws.stats.group_sweeps <= (32 * 33 / 2) as u64, "seed {seed}");
+    }
+    let ratio = total_calls as f64 / total_sweeps as f64;
+    assert!(
+        ratio >= 5.0,
+        "inner-solve reduction below target: {total_calls} reference invocations vs \
+         {total_sweeps} workspace sweeps = {ratio:.2}x"
+    );
+}
+
+/// Cached-candidate re-validation soundness: every group plan the memoized
+/// DP emits must pass the independent feasibility checker at its group's
+/// cascaded GPU horizon — a cached candidate must never smuggle in a plan
+/// `validate_plan` rejects.
+#[test]
+fn memoized_groups_always_validate_under_cascade() {
+    let c = ctx();
+    let solver = JDob::full();
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(0xCA5CADE ^ seed);
+        let m = 4 + rng.gen_index(16);
+        let users = random_users(&c, m, (0.0, 12.0), &mut rng);
+        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        for frac in [0.0, 0.5] {
+            let t0 = min_d * frac;
+            let Some(gp) = optimal_grouping(&c, &users, &solver, t0) else {
+                continue;
+            };
+            let mut t_free = t0;
+            for (members, plan) in &gp.groups {
+                let group: Vec<User> = members.iter().map(|&i| users[i].clone()).collect();
+                validate_plan(&c, &group, plan, t_free)
+                    .unwrap_or_else(|e| panic!("seed {seed} frac {frac}: {e}"));
+                t_free = plan.t_free_end;
+            }
+        }
+    }
+}
+
+/// A fast-edge context (alpha = 4: edge inference 4x faster than local at
+/// max frequencies), where offloading can rescue users whose deadline is
+/// below their device's minimum local latency.
+fn fast_edge_ctx() -> PlanningContext {
+    let cfg = SystemConfig {
+        alpha: 4.0,
+        ..SystemConfig::default()
+    };
+    let profile = ModelProfile::default_eval();
+    let edge = Arc::new(AnalyticEdge::from_config(&cfg, &profile));
+    PlanningContext::new(cfg, profile, edge)
+}
+
+/// Regression for the fastpath `build_user_tables` early-out: an
+/// LC-infeasible user (no feasible local frequency) must not discard whole
+/// partition points — candidates that *offload* the user remain valid, and
+/// the fast path must agree with the reference path that evaluates every
+/// candidate through `solve_fixed`.
+#[test]
+fn lc_infeasible_user_cannot_mask_offload_candidates() {
+    let c = fast_edge_ctx();
+    let total = c.tables.total_work();
+    let dev = DeviceModel::from_config(&c.cfg);
+    let min_local = dev.min_latency(total);
+    // deadline below the minimum local latency: LC infeasible, but the
+    // 4x-faster edge can still serve it (upload ~9 ms + tail ~11 ms < 21 ms)
+    let tight = User {
+        id: 0,
+        deadline: min_local * 0.7,
+        dev: dev.clone(),
+    };
+    assert!(
+        tight.dev.freq_for_deadline(total, tight.deadline).is_none(),
+        "scenario must make the user LC-infeasible"
+    );
+    let loose = User {
+        id: 1,
+        deadline: User::deadline_from_beta(5.0, &dev, total),
+        dev,
+    };
+
+    for users in [vec![tight.clone()], vec![tight.clone(), loose.clone()]] {
+        let fast = JDob::full().solve(&c, &users, 0.0);
+        let slow = JDob::reference().solve(&c, &users, 0.0);
+        let fast = fast.unwrap_or_else(|| {
+            panic!("fast path found no plan for {} users (masking bug)", users.len())
+        });
+        let slow = slow.expect("reference path must rescue the user by offloading");
+        assert_eq!(fast.partition, slow.partition);
+        assert_eq!(fast.offload_ids(), slow.offload_ids());
+        let rel = (fast.total_energy - slow.total_energy).abs() / slow.total_energy;
+        assert!(rel < 1e-9, "fast {} vs reference {}", fast.total_energy, slow.total_energy);
+        assert!(
+            fast.users.iter().any(|u| u.id == 0 && u.offloaded),
+            "the LC-infeasible user must be offloaded"
+        );
+        validate_plan(&c, &users, &fast, 0.0).unwrap();
+        // the grouped planner must rescue it too (memoized and reference)
+        let memo = optimal_grouping(&c, &users, &JDob::full(), 0.0).expect("grouping rescues");
+        let reference =
+            optimal_grouping_reference(&c, &users, &JDob::full(), 0.0).expect("grouping rescues");
+        assert_plan_identical(&memo, &reference, "fast-edge grouping");
+    }
+}
+
+/// Reusing one workspace across horizons must be pure: results equal a
+/// fresh workspace (and the plain entry point) at every horizon.
+#[test]
+fn workspace_reuse_across_horizons_is_pure() {
+    let c = ctx();
+    let solver = JDob::full();
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    let users = random_users(&c, 12, (0.0, 8.0), &mut rng);
+    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let mut warm = PlannerWorkspace::new(&c, &users);
+    for frac in [0.6, 0.0, 0.3, 0.6, 0.0] {
+        let t0 = min_d * frac;
+        let warm_plan = optimal_grouping_ws(&c, &mut warm, &solver, t0).expect("feasible");
+        let fresh_plan = optimal_grouping(&c, &users, &solver, t0).expect("feasible");
+        assert_plan_identical(&warm_plan, &fresh_plan, &format!("frac {frac}"));
+    }
+    assert!(
+        warm.stats.cache_hits > 0,
+        "repeated horizons must hit the group cache"
+    );
+}
