@@ -15,24 +15,78 @@
 //! * per-group plans are re-validated against the paper's constraints and
 //!   recorded as [`GroupTelemetry`].
 //!
+//! ## Recovery states
+//!
+//! Execution no longer assumes every call lands exactly as planned. Each
+//! request moves through a small state machine, always ending terminal:
+//!
+//! ```text
+//! Planned ──ok──────────────────────────────► Served
+//!    │ transient fault (bounded retries,
+//!    │ virtual backoff billed to the GPU clock)
+//!    ├──retry ok───────────────────────────► Degraded (served, retried)
+//!    │ hang (virtual timeout) / retries exhausted / permanent fault
+//!    ├──remainder replanned (≤ max_replans,
+//!    │  at the fault-corrected horizon)─────► Degraded (served off-plan)
+//!    ├──local fallback──────────────────────► Degraded (served on-device)
+//!    └──local fallback also fails───────────► Failed  (recorded, never
+//!                                                      panicked)
+//! ```
+//!
+//! All fault time is **virtual** (see [`crate::runtime::chaos`]): hangs
+//! and retry backoff advance a virtual GPU clock, and successful-but-slow
+//! batches drain their [`ExecSkew`] so the window's *actual* completion —
+//! [`ServeOutcome::actual_t_free_abs`] — can flow back to the scheduler
+//! ([`crate::sched::scheduler::ExecFeedback`]) and correct `t_free`.
+//! Deadlines a plan promised but skewed execution missed are re-billed as
+//! misses (`exec_deadline_misses`) — degradation is never silent.
+//!
 //! Planning does NOT happen here anymore: the scheduler owns admission,
 //! eligibility and the GPU-busy horizon.  [`ServingEngine::serve_window`]
 //! remains as the synchronous plan-then-execute convenience used by the
 //! CLI demo and the integration tests; the pipelined path is
 //! [`crate::coordinator::server`] over [`crate::sched::pipeline`].
+//!
+//! [`ExecSkew`]: crate::runtime::ExecSkew
 
+use std::borrow::Borrow;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::algo::types::{GroupSolver, PlanningContext, User};
+use crate::algo::types::{GroupSolver, Plan, PlanningContext, User};
 use crate::algo::validate::validate_plan;
 use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::metrics::{GroupTelemetry, ServingMetrics};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse};
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestOutcome};
 use crate::energy::device::DeviceModel;
+use crate::runtime::chaos::{fault_class, FaultClass};
 use crate::runtime::InferenceBackend;
-use crate::sched::scheduler::{plan_window, Arrival, PlannedWindow};
+use crate::sched::scheduler::{plan_window, Arrival, PlannedWindow, UserOutcome};
+use crate::util::TIME_EPS;
+
+/// Bounded-recovery knobs for [`ServingEngine::execute_window`].
+#[derive(Debug, Clone)]
+pub struct RecoveryPolicy {
+    /// Transient-failure retries allowed per edge batch (and per local
+    /// execution) before degrading.
+    pub max_retries: usize,
+    /// Virtual backoff billed to the GPU clock per retry (s).
+    pub retry_backoff_s: f64,
+    /// Remainder replans allowed per window after an unrecoverable group
+    /// failure; 0 degrades straight to the local fallback.
+    pub max_replans: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            retry_backoff_s: 1e-3,
+            max_replans: 1,
+        }
+    }
+}
 
 /// Outcome of executing one window.
 #[derive(Debug)]
@@ -40,15 +94,33 @@ pub struct ServeOutcome {
     pub responses: Vec<InferenceResponse>,
     pub ledger: EnergyLedger,
     pub metrics: ServingMetrics,
+    /// Absolute GPU-free time after *actual* execution: equals
+    /// `planned.t_free_abs` when everything ran as planned, later when
+    /// faults skewed or stalled the window. Feed it back to the scheduler
+    /// (via `ExecFeedback` / `Scheduler::observe_completion`) so the next
+    /// window plans against reality instead of the stale model.
+    pub actual_t_free_abs: f64,
+}
+
+/// Per-window execution state threaded through the recovery paths.
+struct WindowExec {
+    ledger: EnergyLedger,
+    metrics: ServingMetrics,
+    responses: Vec<Option<InferenceResponse>>,
+    /// Virtual absolute GPU-free time so far (advanced by successful
+    /// batches, drained skew, retry backoff and hang timeouts).
+    gpu_free_abs: f64,
 }
 
 pub struct ServingEngine<'rt> {
     pub ctx: PlanningContext,
     pub runtime: &'rt dyn InferenceBackend,
     /// Solver for the [`ServingEngine::serve_window`] plan-then-execute
-    /// compat path; `None` for execute-only engines (the pipelined
-    /// executor stage consumes already-planned windows and never plans).
+    /// compat path *and* for remainder replans after a degraded group;
+    /// `None` for execute-only engines, which then degrade straight to
+    /// the local fallback.
     pub solver: Option<Box<dyn GroupSolver>>,
+    pub recovery: RecoveryPolicy,
 }
 
 impl<'rt> ServingEngine<'rt> {
@@ -61,28 +133,33 @@ impl<'rt> ServingEngine<'rt> {
             ctx,
             runtime,
             solver: Some(solver),
+            recovery: RecoveryPolicy::default(),
         }
     }
 
     /// Execute-only engine (no solver): for consumers of already-planned
-    /// windows — the executor stage of the serving pipeline.
+    /// windows — the executor stage of the serving pipeline. Without a
+    /// solver, degraded remainders fall back to local computing directly.
     pub fn executor(ctx: PlanningContext, runtime: &'rt dyn InferenceBackend) -> Self {
         Self {
             ctx,
             runtime,
             solver: None,
+            recovery: RecoveryPolicy::default(),
         }
+    }
+
+    /// Override the recovery policy (builder style).
+    pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> Self {
+        self.recovery = recovery;
+        self
     }
 
     /// Synchronous plan-then-execute for one window: plans via the shared
     /// scheduler core (window closing at t=0, GPU busy until `t_free`) and
     /// executes immediately.  No overlap — the pipelined server is the
     /// production path.
-    pub fn serve_window(
-        &self,
-        requests: &[InferenceRequest],
-        t_free: f64,
-    ) -> Result<ServeOutcome> {
+    pub fn serve_window(&self, requests: &[InferenceRequest], t_free: f64) -> Result<ServeOutcome> {
         ensure!(!requests.is_empty(), "empty window");
         let solver = self
             .solver
@@ -111,8 +188,11 @@ impl<'rt> ServingEngine<'rt> {
     /// [`Borrow`] so the executor stage can pass `&[&InferenceRequest]`
     /// straight off the in-flight batch without cloning input tensors.
     ///
-    /// [`Borrow`]: std::borrow::Borrow
-    pub fn execute_window<Q: std::borrow::Borrow<InferenceRequest>>(
+    /// Never panics on execution faults and never drops a request: every
+    /// slot gets a terminal [`RequestOutcome`] (see the module docs for
+    /// the recovery state machine). `Err` is reserved for contract
+    /// violations (misaligned window).
+    pub fn execute_window<Q: Borrow<InferenceRequest>>(
         &self,
         requests: &[Q],
         planned: &PlannedWindow,
@@ -131,163 +211,490 @@ impl<'rt> ServingEngine<'rt> {
             );
         }
 
-        let mut ledger = EnergyLedger::default();
-        let mut metrics = ServingMetrics::default();
-        let mut responses: Vec<Option<InferenceResponse>> = vec![None; requests.len()];
+        // skew left over from a previous (degraded) window must not leak
+        let _ = self.runtime.drain_skew();
+        let mut st = WindowExec {
+            ledger: EnergyLedger::default(),
+            metrics: ServingMetrics::default(),
+            responses: vec![None; requests.len()],
+            gpu_free_abs: planned.close + planned.rel_t_free,
+        };
+        let slots: Vec<usize> = (0..requests.len()).collect();
+        self.execute_planned(requests, planned, &slots, &mut st, self.recovery.max_replans);
 
-        // each group was planned against the previous group's GPU-free end
-        let mut t_free_check = planned.rel_t_free;
-        for (member_ids, plan) in planned.grouped.iter().flat_map(|g| &g.groups) {
-            validate_plan(
-                &self.ctx,
-                &member_ids
-                    .iter()
-                    .map(|&i| planned.eligible[i].clone())
-                    .collect::<Vec<_>>(),
-                plan,
-                t_free_check,
-            )
-            .ok(); // validation errors are asserted in tests; never fatal in prod
-            t_free_check = plan.t_free_end;
-            metrics.record_group(GroupTelemetry {
-                users: member_ids.len(),
-                partition: plan.partition,
-                batch_size: plan.batch_size,
-                // Plan.f_edge is NaN for all-local groups; record 0.0 so
-                // telemetry stays comparable (PartialEq) and queryable
-                f_edge_hz: if plan.batch_size > 0 { plan.f_edge } else { 0.0 },
-                edge_energy_j: plan.edge_energy,
-            });
-
-            // ---- edge batch: gather offloaded users' prefix outputs ----
-            // Window (= request) indices come positionally through
-            // `eligible_pos`, never by user-id lookup — duplicate ids in a
-            // window cannot cross-wire inputs or billing.
-            let n_tilde = plan.partition;
-            let offloaded: Vec<usize> = member_ids
-                .iter()
-                .zip(&plan.users)
-                .filter(|(_, up)| up.offloaded)
-                .map(|(&eidx, _)| planned.eligible_pos[eidx])
-                .collect();
-
-            if !offloaded.is_empty() {
-                let t0 = Instant::now();
-                let elems = self.runtime.elems_at_cut(n_tilde);
-                let mut batch_input = Vec::with_capacity(offloaded.len() * elems);
-                for &ri in &offloaded {
-                    let input = &requests[ri].borrow().input;
-                    let act = if n_tilde == 0 {
-                        input.clone()
-                    } else {
-                        // device-side prefix at b=1 (phone stand-in)
-                        let mut a = input.clone();
-                        for n in 1..=n_tilde {
-                            a = self.runtime.run_block(n, &a, 1)?;
-                        }
-                        a
-                    };
-                    ensure!(act.len() == elems, "activation size mismatch at cut {n_tilde}");
-                    batch_input.extend_from_slice(&act);
-                }
-                let logits_flat = self
-                    .runtime
-                    .run_tail(n_tilde, &batch_input, offloaded.len())
-                    .context("edge tail execution")?;
-                let wall = t0.elapsed().as_secs_f64();
-                let per = self.ctx.profile.num_classes;
-                metrics.batches += 1;
-                metrics.batched_samples += offloaded.len();
-                metrics.edge_busy_s += wall;
-                ledger.record_edge(plan.edge_energy);
-
-                for (k, &ri) in offloaded.iter().enumerate() {
-                    let oc = &planned.outcomes[ri];
-                    ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
-                    metrics.modeled_latency.record_s(oc.latency_s);
-                    metrics.wall_latency.record_s(wall);
-                    responses[ri] = Some(InferenceResponse {
-                        user_id: oc.user_id,
-                        logits: logits_flat[k * per..(k + 1) * per].to_vec(),
-                        modeled_latency_s: oc.latency_s,
-                        wall_latency_s: wall,
-                        deadline_met: oc.deadline_met,
-                        offloaded: true,
-                        partition: n_tilde,
-                        device_energy_j: oc.device_energy_j(),
-                    });
-                }
-            }
-
-            // ---- plan-local users: full model at b=1 ----
-            for (&eidx, _) in member_ids
-                .iter()
-                .zip(&plan.users)
-                .filter(|(_, up)| !up.offloaded)
-            {
-                let ri = planned.eligible_pos[eidx];
+        // terminal-outcome safety net: every recovery path above serves
+        // every slot, but a request must never be dropped even if that
+        // invariant breaks — record a Failed outcome instead of panicking
+        // (this replaces the old `expect("every request served")`).
+        for ri in 0..requests.len() {
+            if st.responses[ri].is_none() {
                 let oc = &planned.outcomes[ri];
-                responses[ri] =
-                    Some(self.run_local(requests[ri].borrow(), oc, &mut ledger, &mut metrics)?);
+                let msg = "no execution path produced a result".to_string();
+                st.metrics.failed_requests += 1;
+                st.metrics.fault_log.push(format!("user {}: {msg}", oc.user_id));
+                st.ledger.record_request(0.0, 0.0, false);
+                st.responses[ri] = Some(InferenceResponse {
+                    user_id: oc.user_id,
+                    logits: Vec::new(),
+                    modeled_latency_s: oc.latency_s,
+                    wall_latency_s: 0.0,
+                    deadline_met: false,
+                    offloaded: false,
+                    partition: oc.partition,
+                    device_energy_j: 0.0,
+                    outcome: RequestOutcome::Failed(msg),
+                });
             }
         }
 
-        // ---- fallback users (admitted, not GPU-eligible): local at the
-        // scheduler-chosen deadline-optimal frequency ----
-        for (ri, oc) in planned.outcomes.iter().enumerate() {
-            if responses[ri].is_some() {
-                continue;
-            }
-            debug_assert!(!oc.in_plan, "plan member without a response");
-            responses[ri] =
-                Some(self.run_local(requests[ri].borrow(), oc, &mut ledger, &mut metrics)?);
-        }
-
-        metrics.requests = requests.len();
+        st.metrics.requests = requests.len();
         // GPU component: busy time THIS window added beyond the carried-in
-        // horizon (carry-in was already billed to the windows that made it)
-        let gpu_span = (planned.t_free_abs - planned.close - planned.rel_t_free).max(0.0);
-        metrics.window_span_s = planned
+        // horizon (carry-in was already billed to the windows that made
+        // it), measured on the fault-corrected virtual clock.
+        let gpu_span = (st.gpu_free_abs - planned.close - planned.rel_t_free).max(0.0);
+        st.metrics.window_span_s = planned
             .outcomes
             .iter()
             .map(|oc| oc.finish_abs - planned.close)
             .fold(gpu_span, f64::max);
-        let responses: Vec<InferenceResponse> = responses
+        let responses: Vec<InferenceResponse> = st
+            .responses
             .into_iter()
-            .map(|r| r.expect("every request served exactly once"))
+            .map(|r| r.expect("slot filled by the safety net above"))
             .collect();
         Ok(ServeOutcome {
             responses,
-            ledger,
-            metrics,
+            ledger: st.ledger,
+            metrics: st.metrics,
+            actual_t_free_abs: st.gpu_free_abs,
         })
     }
 
-    /// Full-model b=1 execution for a locally-served user (plan-local or
-    /// fallback), billed from its modeled outcome.
+    /// Execute the grouped part of a plan, then serve everyone still
+    /// unserved locally. `slots[wi]` maps window position `wi` of
+    /// `planned` to the response slot in the *top-level* window (identity
+    /// at depth 0; a sub-map during remainder replans).
+    fn execute_planned<Q: Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+        slots: &[usize],
+        st: &mut WindowExec,
+        replans_left: usize,
+    ) {
+        let mut failure: Option<anyhow::Error> = None;
+        if let Some(gp) = &planned.grouped {
+            // each group was planned against the previous group's GPU-free end
+            let mut t_free_check = planned.rel_t_free;
+            for (member_ids, plan) in &gp.groups {
+                validate_plan(
+                    &self.ctx,
+                    &member_ids
+                        .iter()
+                        .map(|&i| planned.eligible[i].clone())
+                        .collect::<Vec<_>>(),
+                    plan,
+                    t_free_check,
+                )
+                .ok(); // validation errors are asserted in tests; never fatal in prod
+                let planned_span = (plan.t_free_end - t_free_check).max(0.0);
+                t_free_check = plan.t_free_end;
+
+                // Window (= request) indices come positionally through
+                // `eligible_pos`, never by user-id lookup — duplicate ids in
+                // a window cannot cross-wire inputs or billing.
+                let offloaded: Vec<(usize, usize)> = member_ids
+                    .iter()
+                    .zip(&plan.users)
+                    .filter(|(_, up)| up.offloaded)
+                    .map(|(&eidx, _)| (planned.eligible_pos[eidx], eidx))
+                    .collect();
+
+                if offloaded.is_empty() {
+                    // all-local group: no edge batch, only cascade bookkeeping
+                    st.gpu_free_abs = st.gpu_free_abs.max(planned.close + plan.t_free_end);
+                    st.metrics.record_group(Self::telemetry(plan, member_ids.len(), 0));
+                    continue;
+                }
+
+                match self.run_edge_batch(
+                    requests,
+                    planned,
+                    slots,
+                    plan,
+                    planned_span,
+                    &offloaded,
+                    st,
+                ) {
+                    Ok(retries) => {
+                        st.metrics.record_group(Self::telemetry(plan, member_ids.len(), retries));
+                    }
+                    Err(cause) => {
+                        // this group is lost; everything planned behind it
+                        // degrades through the remainder path
+                        failure = Some(cause);
+                        break;
+                    }
+                }
+            }
+        }
+
+        if let Some(cause) = failure {
+            self.degrade_remainder(requests, planned, slots, st, replans_left, cause);
+        }
+
+        // Local service for every slot without a response yet: plan-local
+        // members, scheduler fallbacks, and — when replanning was
+        // unavailable or exhausted — degraded offload members.
+        for (wi, oc) in planned.outcomes.iter().enumerate() {
+            let slot = slots[wi];
+            if st.responses[slot].is_some() {
+                continue;
+            }
+            let resp = if oc.in_plan && oc.offloaded {
+                // a planned offload member only reaches the local path
+                // through degradation: re-bill as deadline-optimal local
+                // service anchored at the fault-detection time, not as the
+                // offload that never happened
+                let corrected = self.degraded_outcome(planned, wi, st.gpu_free_abs);
+                self.run_local(requests[slot].borrow(), &corrected, true, st)
+            } else {
+                self.run_local(requests[slot].borrow(), oc, false, st)
+            };
+            st.responses[slot] = Some(resp);
+        }
+    }
+
+    fn telemetry(plan: &Plan, users: usize, retries: usize) -> GroupTelemetry {
+        GroupTelemetry {
+            users,
+            partition: plan.partition,
+            batch_size: plan.batch_size,
+            // Plan.f_edge is NaN for all-local groups; record 0.0 so
+            // telemetry stays comparable (PartialEq) and queryable
+            f_edge_hz: if plan.batch_size > 0 { plan.f_edge } else { 0.0 },
+            edge_energy_j: plan.edge_energy,
+            retries,
+        }
+    }
+
+    /// One group's edge batch with bounded transient retries. Returns the
+    /// retries burned on success; the terminal error otherwise, with all
+    /// virtual fault time (spikes, backoff, hang timeouts) already billed
+    /// to `st.gpu_free_abs`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_edge_batch<Q: Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+        slots: &[usize],
+        plan: &Plan,
+        planned_span: f64,
+        offloaded: &[(usize, usize)],
+        st: &mut WindowExec,
+    ) -> Result<usize> {
+        let mut attempt = 0usize;
+        loop {
+            match self.try_edge_batch(
+                requests,
+                planned,
+                slots,
+                plan,
+                planned_span,
+                offloaded,
+                attempt,
+                st,
+            ) {
+                Ok(()) => return Ok(attempt),
+                Err(e) => {
+                    // the failed attempt's spikes still elapsed on the GPU
+                    let wasted = self.runtime.drain_skew();
+                    st.gpu_free_abs += wasted.extra_s;
+                    match fault_class(&e) {
+                        FaultClass::Transient if attempt < self.recovery.max_retries => {
+                            attempt += 1;
+                            st.metrics.retries += 1;
+                            st.gpu_free_abs += self.recovery.retry_backoff_s;
+                        }
+                        FaultClass::Hang { lost_s } => {
+                            // abandoned at the virtual timeout — never
+                            // blocks for real, never retried
+                            st.gpu_free_abs += lost_s;
+                            return Err(e);
+                        }
+                        _ => return Err(e),
+                    }
+                }
+            }
+        }
+    }
+
+    /// One attempt at a group's edge batch: prefix at b=1 per offloaded
+    /// user, batched tail, then billing with the actual (skew-corrected)
+    /// completion. Billing only happens on success — a failed attempt
+    /// leaves ledger/metrics/responses untouched for the retry.
+    #[allow(clippy::too_many_arguments)]
+    fn try_edge_batch<Q: Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+        slots: &[usize],
+        plan: &Plan,
+        planned_span: f64,
+        offloaded: &[(usize, usize)],
+        attempt: usize,
+        st: &mut WindowExec,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let n_tilde = plan.partition;
+        let elems = self.runtime.elems_at_cut(n_tilde);
+        let mut batch_input = Vec::with_capacity(offloaded.len() * elems);
+        for &(wi, _) in offloaded {
+            let input = &requests[slots[wi]].borrow().input;
+            let act = if n_tilde == 0 {
+                input.clone()
+            } else {
+                // device-side prefix at b=1 (phone stand-in)
+                let mut a = input.clone();
+                for n in 1..=n_tilde {
+                    a = self.runtime.run_block(n, &a, 1)?;
+                }
+                a
+            };
+            ensure!(act.len() == elems, "activation size mismatch at cut {n_tilde}");
+            batch_input.extend_from_slice(&act);
+        }
+        let logits_flat = self
+            .runtime
+            .run_tail(n_tilde, &batch_input, offloaded.len())
+            .context("edge tail execution")?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        // success: fold the accrued skew into the actual GPU horizon
+        let skew = self.runtime.drain_skew();
+        let planned_end_abs = planned.close + plan.t_free_end;
+        st.gpu_free_abs = if skew.is_identity() {
+            // exact planning expression — keeps zero-fault bit-transparency
+            st.gpu_free_abs.max(planned_end_abs)
+        } else {
+            (st.gpu_free_abs + skew.apply(planned_span)).max(planned_end_abs)
+        };
+        // how far the batch finished behind its plan
+        let slip = (st.gpu_free_abs - planned_end_abs).max(0.0);
+
+        let per = self.ctx.profile.num_classes;
+        st.metrics.batches += 1;
+        st.metrics.batched_samples += offloaded.len();
+        st.metrics.edge_busy_s += wall;
+        st.ledger.record_edge(plan.edge_energy);
+
+        for (k, &(wi, eidx)) in offloaded.iter().enumerate() {
+            let oc = &planned.outcomes[wi];
+            let mut met = oc.deadline_met;
+            let mut latency = oc.latency_s;
+            let mut demoted = false;
+            if slip > TIME_EPS {
+                latency += slip;
+                let abs_deadline = planned.close + planned.eligible[eidx].deadline;
+                if met && oc.finish_abs + slip > abs_deadline + TIME_EPS {
+                    // the plan promised this deadline; actual execution
+                    // broke the promise — report it, never silently
+                    met = false;
+                    demoted = true;
+                    st.metrics.exec_deadline_misses += 1;
+                }
+            }
+            st.ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, met);
+            st.metrics.modeled_latency.record_s(latency);
+            st.metrics.wall_latency.record_s(wall);
+            st.responses[slots[wi]] = Some(InferenceResponse {
+                user_id: oc.user_id,
+                logits: logits_flat[k * per..(k + 1) * per].to_vec(),
+                modeled_latency_s: latency,
+                wall_latency_s: wall,
+                deadline_met: met,
+                offloaded: true,
+                partition: n_tilde,
+                device_energy_j: oc.device_energy_j(),
+                outcome: if attempt > 0 || demoted {
+                    RequestOutcome::Degraded
+                } else {
+                    RequestOutcome::Served
+                },
+            });
+        }
+        Ok(())
+    }
+
+    /// A group failed unrecoverably: every eligible member not yet served
+    /// degrades. With a solver and replan budget, the remainder is
+    /// re-planned as a fresh window closing at the fault-corrected
+    /// horizon; otherwise the local loop in `execute_planned` absorbs it.
+    fn degrade_remainder<Q: Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+        slots: &[usize],
+        st: &mut WindowExec,
+        replans_left: usize,
+        cause: anyhow::Error,
+    ) {
+        st.metrics.fault_log.push(format!("group execution degraded: {cause:#}"));
+        let rem: Vec<usize> = (0..planned.eligible.len())
+            .filter(|&eidx| st.responses[slots[planned.eligible_pos[eidx]]].is_none())
+            .collect();
+        st.metrics.degraded_requests += rem.len();
+        if rem.is_empty() {
+            return;
+        }
+        let solver = if replans_left > 0 {
+            self.solver.as_deref()
+        } else {
+            None
+        };
+        let Some(solver) = solver else { return };
+
+        // The remainder becomes a fresh window closing now: original
+        // arrival instants and *absolute* deadlines are preserved, so the
+        // replan sees exactly the time each user has left.
+        let close2 = st.gpu_free_abs.max(planned.close);
+        let arrivals: Vec<Arrival> = rem
+            .iter()
+            .map(|&eidx| {
+                let oc = &planned.outcomes[planned.eligible_pos[eidx]];
+                let u = &planned.eligible[eidx];
+                let at = oc.finish_abs - oc.latency_s; // original arrival
+                let abs_deadline = planned.close + u.deadline;
+                Arrival::new(
+                    User {
+                        id: u.id,
+                        deadline: abs_deadline - at,
+                        dev: u.dev.clone(),
+                    },
+                    at,
+                )
+            })
+            .collect();
+        st.metrics.replans += 1;
+        let replanned = plan_window(&self.ctx, solver, &arrivals, close2, close2);
+        let slots2: Vec<usize> = rem
+            .iter()
+            .map(|&eidx| slots[planned.eligible_pos[eidx]])
+            .collect();
+        self.execute_planned(requests, &replanned, &slots2, st, replans_left - 1);
+    }
+
+    /// Deadline-optimal local outcome for a degraded offload member,
+    /// anchored at the fault-detection time `now_abs` instead of the
+    /// offload finish that never happened.
+    fn degraded_outcome(&self, planned: &PlannedWindow, wi: usize, now_abs: f64) -> UserOutcome {
+        let oc = &planned.outcomes[wi];
+        let Some(eidx) = planned.eligible_pos.iter().position(|&p| p == wi) else {
+            // offloaded ⇒ eligible, so this is unreachable; degrade
+            // against the plan's own promise rather than panic
+            return oc.clone();
+        };
+        let u = &planned.eligible[eidx];
+        let abs_deadline = planned.close + u.deadline;
+        let total = self.ctx.tables.total_work();
+        let start = now_abs.max(planned.close);
+        let remaining = abs_deadline - start;
+        let f = u.dev.freq_for_deadline(total, remaining).unwrap_or(u.dev.f_max);
+        let finish_abs = start + u.dev.compute_latency(total, f);
+        let at = oc.finish_abs - oc.latency_s;
+        UserOutcome {
+            user_id: oc.user_id,
+            in_plan: false,
+            offloaded: false,
+            f_dev: f,
+            energy_compute_j: u.dev.compute_energy(total, f),
+            energy_tx_j: 0.0,
+            finish_abs,
+            latency_s: finish_abs - at,
+            deadline_met: finish_abs <= abs_deadline + TIME_EPS,
+            partition: self.ctx.n(),
+        }
+    }
+
+    /// Full-model b=1 execution for a locally-served user (plan-local,
+    /// fallback, or degraded), billed from its modeled outcome, with
+    /// bounded transient retries. Infallible: an unrecoverable error
+    /// becomes a terminal [`RequestOutcome::Failed`] response.
     fn run_local(
         &self,
         request: &InferenceRequest,
-        oc: &crate::sched::scheduler::UserOutcome,
-        ledger: &mut EnergyLedger,
-        metrics: &mut ServingMetrics,
-    ) -> Result<InferenceResponse> {
+        oc: &UserOutcome,
+        degraded: bool,
+        st: &mut WindowExec,
+    ) -> InferenceResponse {
         let t0 = Instant::now();
-        let logits = self.runtime.run_full(&request.input, 1)?;
+        let mut attempt = 0usize;
+        let mut fail: Option<anyhow::Error> = None;
+        let logits = loop {
+            match self.runtime.run_full(&request.input, 1) {
+                Ok(l) => break Some(l),
+                Err(e) => {
+                    if matches!(fault_class(&e), FaultClass::Transient)
+                        && attempt < self.recovery.max_retries
+                    {
+                        attempt += 1;
+                        st.metrics.retries += 1;
+                        continue;
+                    }
+                    fail = Some(e);
+                    break None;
+                }
+            }
+        };
+        // local execution is the device stand-in sharing the backend:
+        // injected skew here is device-side noise, never GPU time — drop it
+        let _ = self.runtime.drain_skew();
         let wall = t0.elapsed().as_secs_f64();
-        ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
-        metrics.modeled_latency.record_s(oc.latency_s);
-        metrics.wall_latency.record_s(wall);
-        metrics.local_samples += 1;
-        Ok(InferenceResponse {
-            user_id: oc.user_id,
-            logits,
-            modeled_latency_s: oc.latency_s,
-            wall_latency_s: wall,
-            deadline_met: oc.deadline_met,
-            offloaded: false,
-            partition: oc.partition,
-            device_energy_j: oc.device_energy_j(),
-        })
+        match logits {
+            Some(logits) => {
+                st.ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
+                st.metrics.modeled_latency.record_s(oc.latency_s);
+                st.metrics.wall_latency.record_s(wall);
+                st.metrics.local_samples += 1;
+                InferenceResponse {
+                    user_id: oc.user_id,
+                    logits,
+                    modeled_latency_s: oc.latency_s,
+                    wall_latency_s: wall,
+                    deadline_met: oc.deadline_met,
+                    offloaded: false,
+                    partition: oc.partition,
+                    device_energy_j: oc.device_energy_j(),
+                    outcome: if degraded || attempt > 0 {
+                        RequestOutcome::Degraded
+                    } else {
+                        RequestOutcome::Served
+                    },
+                }
+            }
+            None => {
+                let msg = fail
+                    .map(|e| format!("{e:#}"))
+                    .unwrap_or_else(|| "unknown execution failure".into());
+                st.metrics
+                    .fault_log
+                    .push(format!("user {}: local execution failed: {msg}", oc.user_id));
+                st.metrics.failed_requests += 1;
+                st.metrics.wall_latency.record_s(wall);
+                // nothing useful was computed; bill the request as a miss
+                st.ledger.record_request(0.0, 0.0, false);
+                InferenceResponse {
+                    user_id: oc.user_id,
+                    logits: Vec::new(),
+                    modeled_latency_s: oc.latency_s,
+                    wall_latency_s: wall,
+                    deadline_met: false,
+                    offloaded: false,
+                    partition: oc.partition,
+                    device_energy_j: 0.0,
+                    outcome: RequestOutcome::Failed(msg),
+                }
+            }
+        }
     }
 }

@@ -27,7 +27,8 @@ impl LatencySummary {
             return 0.0;
         }
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        // total order: a stray NaN sample must not panic the serving path
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((v.len() - 1) as f64 * q).round() as usize;
         v[idx]
     }
@@ -64,6 +65,9 @@ pub struct GroupTelemetry {
     pub f_edge_hz: f64,
     /// Modeled edge energy of the group (J).
     pub edge_energy_j: f64,
+    /// Transient-failure retries this group's edge batch burned before
+    /// succeeding (0 on the nominal path).
+    pub retries: usize,
 }
 
 /// Serving metrics for one engine run.
@@ -79,6 +83,20 @@ pub struct ServingMetrics {
     pub window_span_s: f64,
     /// Per-group telemetry, in execution order.
     pub groups: Vec<GroupTelemetry>,
+    /// Transient-failure retries spent during execution (edge + local).
+    pub retries: usize,
+    /// Requests rerouted off their planned path by an execution fault
+    /// (served via remainder replan or local fallback).
+    pub degraded_requests: usize,
+    /// Remainder replans triggered by unrecoverable group failures.
+    pub replans: usize,
+    /// Deadlines the *plan* promised but actual (skewed) execution missed.
+    pub exec_deadline_misses: usize,
+    /// Requests with a terminal `Failed` outcome (no result produced).
+    pub failed_requests: usize,
+    /// Human-readable causes of degradations/failures, in occurrence
+    /// order. Empty on the nominal path.
+    pub fault_log: Vec<String>,
 }
 
 impl ServingMetrics {
@@ -115,7 +133,7 @@ impl ServingMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} mean_batch={:.2} local={} \
              modeled p50/p95/max = {:.1}/{:.1}/{:.1} ms, wall p50/p95/max = {:.1}/{:.1}/{:.1} ms, \
              edge busy {:.1} ms, throughput {:.1} req/s",
@@ -131,7 +149,20 @@ impl ServingMetrics {
             self.wall_latency.max() * 1e3,
             self.edge_busy_s * 1e3,
             self.throughput_rps(),
-        )
+        );
+        if self.retries + self.degraded_requests + self.replans + self.failed_requests > 0
+            || self.exec_deadline_misses > 0
+        {
+            s.push_str(&format!(
+                " | recovery: retries={} degraded={} replans={} exec_misses={} failed={}",
+                self.retries,
+                self.degraded_requests,
+                self.replans,
+                self.exec_deadline_misses,
+                self.failed_requests,
+            ));
+        }
+        s
     }
 }
 
@@ -177,6 +208,7 @@ mod tests {
             batch_size: 2,
             f_edge_hz: 1.2e9,
             edge_energy_j: 0.01,
+            retries: 0,
         });
         m.record_group(GroupTelemetry {
             users: 1,
@@ -184,9 +216,33 @@ mod tests {
             batch_size: 0,
             f_edge_hz: 0.0,
             edge_energy_j: 0.0,
+            retries: 0,
         });
         assert_eq!(m.grouped_users(), 4);
         assert_eq!(m.max_batch_size(), 2);
         assert_eq!(m.groups[0].partition, 5);
+    }
+
+    #[test]
+    fn quantile_survives_nan_samples() {
+        let mut s = LatencySummary::default();
+        s.record_s(0.010);
+        s.record_s(f64::NAN);
+        s.record_s(0.020);
+        // must not panic; NaN sorts to the end under total order
+        let _ = (s.p50(), s.p95());
+    }
+
+    #[test]
+    fn report_includes_recovery_counters_only_off_nominal() {
+        let m = ServingMetrics::default();
+        assert!(!m.report().contains("recovery"));
+        let m = ServingMetrics {
+            retries: 2,
+            degraded_requests: 1,
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(r.contains("retries=2") && r.contains("degraded=1"), "{r}");
     }
 }

@@ -7,7 +7,9 @@
 //!   [`metrics::GroupTelemetry`].
 //! * [`engine`] — the GPU **executor stage**: takes a `PlannedWindow` from
 //!   the scheduler and runs device-prefix / uplink / edge-batch execution
-//!   over any [`crate::runtime::InferenceBackend`].
+//!   over any [`crate::runtime::InferenceBackend`], with bounded-recovery
+//!   degradation (retry → replan → local fallback → recorded failure)
+//!   when execution faults strike.
 //! * [`server`] — threaded front (std::thread + mpsc; no tokio in the
 //!   offline vendor set): live ingress feeding the scheduler's **planner
 //!   stage**, pipelined into the executor so planning window *k+1*
@@ -29,6 +31,6 @@ pub mod request;
 pub mod server;
 pub mod trace;
 
-pub use engine::{ServeOutcome, ServingEngine};
+pub use engine::{RecoveryPolicy, ServeOutcome, ServingEngine};
 pub use metrics::GroupTelemetry;
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceRequest, InferenceResponse, RequestOutcome};

@@ -12,6 +12,37 @@ pub struct InferenceRequest {
     pub deadline_s: f64,
 }
 
+/// Terminal disposition of a request after execution. Every admitted
+/// request ends in exactly one of these — the recovery path in
+/// [`crate::coordinator::engine`] guarantees no request is dropped or
+/// panicked away, only downgraded with its outcome recorded.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum RequestOutcome {
+    /// Executed exactly as planned.
+    #[default]
+    Served,
+    /// Executed, but not on the planned path: an execution fault forced a
+    /// retry, a remainder replan, or the local fallback.
+    Degraded,
+    /// Could not be served at all; `logits` is empty, `deadline_met` is
+    /// false, and the cause is carried here (and in the metrics fault log).
+    Failed(String),
+}
+
+impl RequestOutcome {
+    pub fn is_served(&self) -> bool {
+        matches!(self, RequestOutcome::Served)
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, RequestOutcome::Degraded)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, RequestOutcome::Failed(_))
+    }
+}
+
 /// The served result with its accounting.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
@@ -30,6 +61,8 @@ pub struct InferenceResponse {
     pub partition: usize,
     /// Modeled device energy (compute + tx), J.
     pub device_energy_j: f64,
+    /// Terminal disposition: served as planned, degraded, or failed.
+    pub outcome: RequestOutcome,
 }
 
 impl InferenceResponse {
@@ -37,7 +70,8 @@ impl InferenceResponse {
         self.logits
             .iter()
             .enumerate()
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).expect("finite logits"))
+            // total order: a NaN logit must not panic the serving path
+            .max_by(|(_, a), (_, b)| a.total_cmp(b))
             .map(|(i, _)| i)
             .unwrap_or(0)
     }

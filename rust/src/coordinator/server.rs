@@ -32,7 +32,7 @@ use crate::runtime::{default_backend, InferenceBackend};
 use crate::sched::admission::{AdmissionPolicy, TimeBound};
 use crate::sched::clock::WallClock;
 use crate::sched::pipeline::{run_pipelined_gated, PlannedBatch};
-use crate::sched::scheduler::{Arrival, ArrivalSource, Scheduler, SourceEvent};
+use crate::sched::scheduler::{Arrival, ArrivalSource, ExecFeedback, Scheduler, SourceEvent};
 
 /// How many planned windows may be in flight between the planner and the
 /// GPU executor before admission backpressure kicks in.
@@ -204,6 +204,9 @@ where
 {
     let solver = solver_from_name(solver_name);
     let mut sched = Scheduler::new(ctx.clone(), solver.as_ref(), admission);
+    // execution feedback: the executor reports actual completion times so
+    // the planner's t_free tracks a faulty/straggling GPU, not the model
+    let fb = sched.attach_feedback();
     // epoch was captured before the server handle existed, so no submit
     // can ever be stamped before second 0 of this clock
     let mut clock = WallClock::with_epoch(epoch);
@@ -216,16 +219,21 @@ where
     };
     let (ready_tx, ready_rx) = mpsc::channel::<bool>();
     run_pipelined_gated(&mut sched, &mut clock, &mut source, depth, ready_rx, move |batches| {
-        executor_loop(ctx, make_backend, ready_tx, batches)
+        executor_loop(ctx, make_backend, solver_name, fb, ready_tx, batches)
     })
 }
 
 /// The GPU executor stage: owns the backend (constructed on this thread,
 /// readiness signalled through `ready`) and serves every planned batch,
-/// replying per request.
+/// replying per request.  Carries its own solver instance (solvers are
+/// stateless) so unrecoverable group faults can replan the window
+/// remainder instead of dropping straight to the local fallback; actual
+/// completion times flow back to the planner through `fb`.
 fn executor_loop<F>(
     ctx: PlanningContext,
     make_backend: F,
+    solver_name: &str,
+    fb: ExecFeedback,
     ready: Sender<bool>,
     batches: Receiver<PlannedBatch<Enqueued>>,
 ) -> anyhow::Result<EnergyLedger>
@@ -242,7 +250,7 @@ where
             return Err(e);
         }
     };
-    let engine = ServingEngine::executor(ctx, backend.as_ref());
+    let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name));
     let mut cumulative = EnergyLedger::default();
     while let Ok(batch) = batches.recv() {
         let requests: Vec<&InferenceRequest> =
@@ -251,9 +259,19 @@ where
         drop(requests); // release the borrow of batch.window before routing replies
         match result {
             Ok(out) => {
+                fb.report(out.actual_t_free_abs);
                 cumulative.merge(&out.ledger);
                 for (a, resp) in batch.window.into_iter().zip(out.responses) {
-                    let _ = a.payload.reply.send(Ok(resp));
+                    // a terminal Failed outcome has no result to return:
+                    // surface it as the transport-level error the client
+                    // already handles, never as an empty-logits "success"
+                    let reply = match &resp.outcome {
+                        crate::coordinator::request::RequestOutcome::Failed(msg) => {
+                            Err(format!("request failed: {msg}"))
+                        }
+                        _ => Ok(resp),
+                    };
+                    let _ = a.payload.reply.send(reply);
                 }
             }
             Err(err) => {

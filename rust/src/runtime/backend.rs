@@ -24,6 +24,41 @@ use anyhow::Result;
 
 use crate::model::ModelProfile;
 
+/// Virtual execution-time skew a backend accrued since the last drain:
+/// actual span = `planned * mult + extra_s`.  Real backends never skew;
+/// the fault-injection wrapper ([`crate::runtime::chaos::ChaosBackend`])
+/// accrues it per call so the executor can correct the GPU-busy horizon
+/// from *actual* completion times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecSkew {
+    /// Multiplicative slowdown of the planned span (>= 1 in practice).
+    pub mult: f64,
+    /// Additive virtual delay (s).
+    pub extra_s: f64,
+}
+
+impl ExecSkew {
+    pub const IDENTITY: ExecSkew = ExecSkew {
+        mult: 1.0,
+        extra_s: 0.0,
+    };
+
+    pub fn is_identity(&self) -> bool {
+        self.mult == 1.0 && self.extra_s == 0.0
+    }
+
+    /// Actual span implied for a planned span of `planned_s` seconds.
+    pub fn apply(&self, planned_s: f64) -> f64 {
+        planned_s * self.mult + self.extra_s
+    }
+}
+
+impl Default for ExecSkew {
+    fn default() -> Self {
+        Self::IDENTITY
+    }
+}
+
 /// A batched block-graph executor.
 ///
 /// Implementations promise:
@@ -65,13 +100,17 @@ pub trait InferenceBackend {
 
     // ---- provided ----
 
-    /// Smallest bucket >= `b` (saturating at the largest).
+    /// Smallest bucket >= `b` (saturating at the largest). A degenerate
+    /// backend reporting no buckets falls back to the raw batch size
+    /// instead of panicking on the serving path.
     fn bucket_for(&self, b: usize) -> usize {
         let buckets = self.buckets();
-        *buckets
+        buckets
             .iter()
             .find(|&&bk| bk >= b)
-            .unwrap_or_else(|| buckets.last().expect("non-empty buckets"))
+            .or_else(|| buckets.last())
+            .copied()
+            .unwrap_or_else(|| b.max(1))
     }
 
     /// Input element count per sample of block `n`.
@@ -106,6 +145,14 @@ pub trait InferenceBackend {
     /// Full model forward (tests and the local-compute stand-in).
     fn run_full(&self, input: &[f32], batch: usize) -> Result<Vec<f32>> {
         self.run_tail(0, input, batch)
+    }
+
+    /// Take-and-reset the virtual execution-time skew accrued since the
+    /// last drain. Real backends are skew-free (identity); the chaos
+    /// wrapper overrides this so the executor can bill actual rather than
+    /// planned GPU time. See [`crate::runtime::chaos`].
+    fn drain_skew(&self) -> ExecSkew {
+        ExecSkew::IDENTITY
     }
 }
 

@@ -1,0 +1,464 @@
+//! Deterministic fault injection for the serving pipeline.
+//!
+//! [`ChaosBackend`] wraps any [`InferenceBackend`] and perturbs its
+//! behavior per `run_block` call according to a seeded [`FaultPlan`]:
+//!
+//! * **latency skew** — per-call slowdown multipliers and additive
+//!   spikes.  Skew is *virtual*: nothing sleeps.  It accrues inside the
+//!   wrapper and the executor drains it through
+//!   [`InferenceBackend::drain_skew`] to correct the modeled GPU-busy
+//!   horizon (`t_free`) from actual completion times;
+//! * **transient failures** — `run_block` returns a typed
+//!   [`ChaosError::Transient`]; a retry may succeed.  The engine's
+//!   bounded-retry loop ([`crate::coordinator::engine`]) consumes these;
+//! * **stuck batches** — [`ChaosError::HangTimeout`]: the call is modeled
+//!   as wedged until the plan's `virtual_timeout_s` fires.  The harness
+//!   never actually blocks — the lost time is carried on the error and
+//!   billed to the virtual GPU clock, which is what makes thousands of
+//!   seeded chaos cases cheap and deterministic.
+//!
+//! Faults are drawn from an in-tree xoshiro PRNG seeded by
+//! `FaultPlan::seed`, so every chaos case in `tests/chaos_serving.rs` is
+//! exactly reproducible: pin a failing seed with `JDOB_CHAOS_SEED=<n>`.
+//!
+//! With [`FaultPlan::none`] (or any plan where every probability is zero)
+//! the wrapper is **bit-transparent**: `run_block` forwards without
+//! touching the RNG or the skew accumulator, so plans, logits, ledgers and
+//! metrics are bitwise identical to the bare inner backend — pinned by the
+//! zero-fault golden leg in `tests/golden_figures.rs`.
+
+use std::fmt;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::runtime::backend::{ExecSkew, InferenceBackend};
+use crate::util::rng::Rng;
+
+/// A seeded description of what can go wrong, and how often.
+///
+/// Probabilities are per `run_block` call and clamped to `[0, 1]` at
+/// construction; draws happen in a fixed order (transient, hang, slow,
+/// spike) so a plan's fault sequence depends only on its seed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// PRNG seed; the whole fault sequence is a pure function of it.
+    pub seed: u64,
+    /// P(call is slowed by a multiplier drawn from `mult_range`).
+    pub slow_prob: f64,
+    /// Slowdown multiplier range, `1 <= lo <= hi`.
+    pub mult_range: (f64, f64),
+    /// P(call adds a latency spike drawn from `spike_range`).
+    pub spike_prob: f64,
+    /// Additive spike range in seconds, `0 <= lo <= hi`.
+    pub spike_range: (f64, f64),
+    /// P(call fails transiently — retrying may succeed).
+    pub transient_prob: f64,
+    /// Stop injecting transient failures after this many (u64::MAX =
+    /// unlimited). Lets tests script "fails once, then recovers".
+    pub max_transients: u64,
+    /// P(call wedges until the virtual timeout).
+    pub hang_prob: f64,
+    /// Virtual time lost to a hung call before it is abandoned (s).
+    pub virtual_timeout_s: f64,
+}
+
+impl FaultPlan {
+    /// No faults at all: the wrapper is bit-transparent.
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            slow_prob: 0.0,
+            mult_range: (1.0, 1.0),
+            spike_prob: 0.0,
+            spike_range: (0.0, 0.0),
+            transient_prob: 0.0,
+            max_transients: 0,
+            hang_prob: 0.0,
+            virtual_timeout_s: 0.05,
+        }
+    }
+
+    /// Latency-only chaos: slowdowns and spikes, no errors. Exercises the
+    /// `t_free` correction and deadline-miss reporting paths.
+    pub fn latency_only(seed: u64) -> Self {
+        Self {
+            seed,
+            slow_prob: 0.35,
+            mult_range: (1.05, 3.0),
+            spike_prob: 0.15,
+            spike_range: (0.001, 0.02),
+            ..Self::none()
+        }
+    }
+
+    /// Transient `Err` returns plus mild latency noise. Exercises the
+    /// bounded-retry and degradation (replan / local-fallback) paths.
+    pub fn transient_failures(seed: u64) -> Self {
+        Self {
+            seed,
+            transient_prob: 0.12,
+            max_transients: u64::MAX,
+            slow_prob: 0.15,
+            mult_range: (1.05, 1.8),
+            ..Self::none()
+        }
+    }
+
+    /// Stuck batches bounded by a virtual timeout, plus mild latency
+    /// noise. Exercises abandonment and remainder replanning.
+    pub fn stuck_batches(seed: u64) -> Self {
+        Self {
+            seed,
+            hang_prob: 0.05,
+            virtual_timeout_s: 0.1,
+            slow_prob: 0.1,
+            mult_range: (1.05, 1.5),
+            ..Self::none()
+        }
+    }
+
+    /// True iff no fault can ever fire — the bit-transparency fast path.
+    pub fn is_fault_free(&self) -> bool {
+        self.slow_prob <= 0.0
+            && self.spike_prob <= 0.0
+            && (self.transient_prob <= 0.0 || self.max_transients == 0)
+            && self.hang_prob <= 0.0
+    }
+
+    /// Clamp probabilities and ranges into their documented domains.
+    fn normalized(mut self) -> Self {
+        let clamp01 = |p: f64| if p.is_finite() { p.clamp(0.0, 1.0) } else { 0.0 };
+        self.slow_prob = clamp01(self.slow_prob);
+        self.spike_prob = clamp01(self.spike_prob);
+        self.transient_prob = clamp01(self.transient_prob);
+        self.hang_prob = clamp01(self.hang_prob);
+        let lo = self.mult_range.0.max(1.0);
+        self.mult_range = (lo, self.mult_range.1.max(lo));
+        let lo = self.spike_range.0.max(0.0);
+        self.spike_range = (lo, self.spike_range.1.max(lo));
+        if !(self.virtual_timeout_s.is_finite() && self.virtual_timeout_s > 0.0) {
+            self.virtual_timeout_s = 0.05;
+        }
+        self
+    }
+}
+
+/// Typed injected fault, carried through `anyhow::Error` so the engine's
+/// recovery path can [`fault_class`] it without string matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosError {
+    /// Transient backend failure (network blip, kernel-launch hiccup):
+    /// retrying the same call may succeed.
+    Transient { call: u64, block: usize },
+    /// The call wedged and was abandoned after `lost_s` of virtual time
+    /// (the plan's `virtual_timeout_s`). Not retryable: the batch is lost.
+    HangTimeout { call: u64, block: usize, lost_s: f64 },
+}
+
+impl fmt::Display for ChaosError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ChaosError::Transient { call, block } => {
+                write!(f, "injected transient failure (call {call}, block {block})")
+            }
+            ChaosError::HangTimeout { call, block, lost_s } => write!(
+                f,
+                "injected stuck batch abandoned after {lost_s:.3}s virtual timeout \
+                 (call {call}, block {block})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ChaosError {}
+
+/// How the engine should react to an execution error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultClass {
+    /// Worth a bounded retry.
+    Transient,
+    /// Abandoned after `lost_s` of virtual GPU time; do not retry.
+    Hang { lost_s: f64 },
+    /// Anything else (contract violations, real backend failures):
+    /// degrade immediately.
+    Permanent,
+}
+
+/// Classify an execution error for the recovery path. Non-chaos errors
+/// (anything that does not downcast to [`ChaosError`]) are `Permanent`.
+pub fn fault_class(err: &anyhow::Error) -> FaultClass {
+    match err.downcast_ref::<ChaosError>() {
+        Some(ChaosError::Transient { .. }) => FaultClass::Transient,
+        Some(ChaosError::HangTimeout { lost_s, .. }) => FaultClass::Hang { lost_s: *lost_s },
+        None => FaultClass::Permanent,
+    }
+}
+
+/// Counters of everything the wrapper injected so far.
+#[derive(Debug, Default, Clone)]
+pub struct ChaosStats {
+    /// `run_block` calls that went through fault drawing.
+    pub calls: u64,
+    pub slow_calls: u64,
+    pub spikes: u64,
+    pub transient_errors: u64,
+    pub hangs: u64,
+    /// Total additive virtual delay injected via spikes (s).
+    pub injected_extra_s: f64,
+}
+
+struct ChaosState {
+    rng: Rng,
+    skew: ExecSkew,
+    stats: ChaosStats,
+}
+
+/// A fault-injecting wrapper around any [`InferenceBackend`].
+///
+/// Object-safety of the inner trait is preserved: the wrapper is itself a
+/// backend, so it composes over `SimBackend`, the PJRT `ModelRuntime`, or
+/// another `ChaosBackend`. Interior state (RNG, accrued skew, counters)
+/// sits behind a `Mutex` so the wrapper stays `Sync` like its inner
+/// backend; the lock is poison-proof (a panicking thread cannot wedge the
+/// harness).
+pub struct ChaosBackend<B: InferenceBackend> {
+    inner: B,
+    plan: FaultPlan,
+    state: Mutex<ChaosState>,
+}
+
+impl<B: InferenceBackend> ChaosBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        let plan = plan.normalized();
+        let state = Mutex::new(ChaosState {
+            rng: Rng::seed_from_u64(plan.seed),
+            skew: ExecSkew::IDENTITY,
+            stats: ChaosStats::default(),
+        });
+        Self { inner, plan, state }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn stats(&self) -> ChaosStats {
+        self.lock().stats.clone()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ChaosState> {
+        // a panicked holder leaves the state intact; keep serving
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Draw this call's faults. `Err` means the call never executes;
+    /// `Ok` may still have accrued latency skew.
+    fn inject(&self, block: usize) -> std::result::Result<(), ChaosError> {
+        if self.plan.is_fault_free() {
+            return Ok(());
+        }
+        let mut st = self.lock();
+        st.stats.calls += 1;
+        let call = st.stats.calls;
+        if self.plan.transient_prob > 0.0
+            && st.stats.transient_errors < self.plan.max_transients
+            && st.rng.next_f64() < self.plan.transient_prob
+        {
+            st.stats.transient_errors += 1;
+            return Err(ChaosError::Transient { call, block });
+        }
+        if self.plan.hang_prob > 0.0 && st.rng.next_f64() < self.plan.hang_prob {
+            st.stats.hangs += 1;
+            return Err(ChaosError::HangTimeout {
+                call,
+                block,
+                lost_s: self.plan.virtual_timeout_s,
+            });
+        }
+        if self.plan.slow_prob > 0.0 && st.rng.next_f64() < self.plan.slow_prob {
+            let (lo, hi) = self.plan.mult_range;
+            let m = st.rng.gen_range(lo, hi);
+            // pipelined calls overlap: the slowest call of the span
+            // dominates, so keep the max rather than the product
+            st.skew.mult = st.skew.mult.max(m);
+            st.stats.slow_calls += 1;
+        }
+        if self.plan.spike_prob > 0.0 && st.rng.next_f64() < self.plan.spike_prob {
+            let (lo, hi) = self.plan.spike_range;
+            let s = st.rng.gen_range(lo, hi);
+            st.skew.extra_s += s;
+            st.stats.injected_extra_s += s;
+            st.stats.spikes += 1;
+        }
+        Ok(())
+    }
+}
+
+impl<B: InferenceBackend> InferenceBackend for ChaosBackend<B> {
+    fn platform(&self) -> String {
+        format!("chaos({})", self.inner.platform())
+    }
+
+    fn n_blocks(&self) -> usize {
+        self.inner.n_blocks()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn in_shape(&self, n: usize) -> &[usize] {
+        self.inner.in_shape(n)
+    }
+
+    fn out_shape(&self, n: usize) -> &[usize] {
+        self.inner.out_shape(n)
+    }
+
+    fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()> {
+        self.inner.warmup(pairs)
+    }
+
+    fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.inject(n).map_err(anyhow::Error::new)?;
+        self.inner.run_block(n, input, batch)
+    }
+
+    fn drain_skew(&self) -> ExecSkew {
+        if self.plan.is_fault_free() {
+            return ExecSkew::IDENTITY;
+        }
+        let mut st = self.lock();
+        std::mem::replace(&mut st.skew, ExecSkew::IDENTITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelProfile;
+    use crate::runtime::sim::SimBackend;
+
+    fn sim() -> SimBackend {
+        let profile = ModelProfile::mobilenet_v2(32, 10);
+        SimBackend::from_profile(&profile, &[1, 2, 4], 7).expect("small sim")
+    }
+
+    fn input(be: &dyn InferenceBackend) -> Vec<f32> {
+        (0..be.in_elems(1)).map(|i| (i % 17) as f32 * 0.05 - 0.4).collect()
+    }
+
+    #[test]
+    fn fault_free_wrapper_is_bit_transparent() {
+        let bare = sim();
+        let wrapped = ChaosBackend::new(sim(), FaultPlan::none());
+        let x = input(&bare);
+        let a = bare.run_full(&x, 1).unwrap();
+        let b = wrapped.run_full(&x, 1).unwrap();
+        assert_eq!(a, b, "zero-fault chaos must not change a single bit");
+        assert!(wrapped.drain_skew().is_identity());
+        assert_eq!(wrapped.stats().calls, 0, "fast path must not draw");
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let mk = || ChaosBackend::new(sim(), FaultPlan::transient_failures(99));
+        let (a, b) = (mk(), mk());
+        let x = input(&a);
+        for _ in 0..20 {
+            let ra = a.run_block(1, &x, 1).is_ok();
+            let rb = b.run_block(1, &x, 1).is_ok();
+            assert_eq!(ra, rb);
+        }
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.transient_errors, sb.transient_errors);
+        assert_eq!(sa.slow_calls, sb.slow_calls);
+    }
+
+    #[test]
+    fn transient_errors_classify_and_cap() {
+        let plan = FaultPlan {
+            transient_prob: 1.0,
+            max_transients: 2,
+            ..FaultPlan::none()
+        };
+        let be = ChaosBackend::new(sim(), plan);
+        let x = input(&be);
+        for k in 0..2 {
+            let err = be.run_block(1, &x, 1).expect_err("injected");
+            assert_eq!(fault_class(&err), FaultClass::Transient, "call {k}");
+        }
+        // cap reached: the same call now succeeds
+        assert!(be.run_block(1, &x, 1).is_ok());
+        assert_eq!(be.stats().transient_errors, 2);
+    }
+
+    #[test]
+    fn hangs_carry_the_virtual_timeout() {
+        let plan = FaultPlan {
+            hang_prob: 1.0,
+            virtual_timeout_s: 0.25,
+            ..FaultPlan::none()
+        };
+        let be = ChaosBackend::new(sim(), plan);
+        let err = be.run_block(1, &input(&be), 1).expect_err("injected");
+        match fault_class(&err) {
+            FaultClass::Hang { lost_s } => assert!((lost_s - 0.25).abs() < 1e-12),
+            other => panic!("expected hang, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn skew_accrues_and_drains() {
+        let plan = FaultPlan {
+            slow_prob: 1.0,
+            mult_range: (2.0, 2.0),
+            spike_prob: 1.0,
+            spike_range: (0.01, 0.01),
+            ..FaultPlan::none()
+        };
+        let be = ChaosBackend::new(sim(), plan);
+        let x = input(&be);
+        be.run_block(1, &x, 1).unwrap();
+        be.run_block(1, &x, 1).unwrap();
+        let skew = be.drain_skew();
+        assert!((skew.mult - 2.0).abs() < 1e-12, "max, not product");
+        assert!((skew.extra_s - 0.02).abs() < 1e-12, "spikes add");
+        assert!((skew.apply(1.0) - 2.02).abs() < 1e-12);
+        assert!(be.drain_skew().is_identity(), "drain resets");
+    }
+
+    #[test]
+    fn non_chaos_errors_are_permanent() {
+        let err = anyhow::anyhow!("backend exploded");
+        assert_eq!(fault_class(&err), FaultClass::Permanent);
+    }
+
+    #[test]
+    fn normalization_clamps_bad_plans() {
+        let be = ChaosBackend::new(
+            sim(),
+            FaultPlan {
+                slow_prob: 7.0,
+                mult_range: (0.2, 0.1),
+                spike_range: (-1.0, -2.0),
+                virtual_timeout_s: f64::NAN,
+                ..FaultPlan::none()
+            },
+        );
+        let p = be.plan();
+        assert_eq!(p.slow_prob, 1.0);
+        assert!(p.mult_range.0 >= 1.0 && p.mult_range.1 >= p.mult_range.0);
+        assert!(p.spike_range.0 >= 0.0 && p.spike_range.1 >= p.spike_range.0);
+        assert!(p.virtual_timeout_s > 0.0);
+    }
+}

@@ -9,6 +9,10 @@
 //!   executable per (block, bucket) through a PJRT client and keeps
 //!   parameters device-resident; only the activation crosses the
 //!   host/device boundary per call.
+//! * [`chaos`] — deterministic fault injection: [`ChaosBackend`] wraps any
+//!   backend with a seeded [`FaultPlan`] (latency skew, transient errors,
+//!   stuck batches bounded by a virtual timeout); drives the recovery path
+//!   in [`crate::coordinator::engine`] and `tests/chaos_serving.rs`.
 //! * [`artifacts`] — the manifest contract between `aot.py` and the PJRT
 //!   executor (feature-independent: the manifest is plain JSON).
 //! * [`profiler`] — measures per-(block, bucket) latency on *any* backend;
@@ -16,13 +20,15 @@
 
 pub mod artifacts;
 pub mod backend;
+pub mod chaos;
 #[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod profiler;
 pub mod sim;
 
 pub use artifacts::Manifest;
-pub use backend::{default_backend, InferenceBackend};
+pub use backend::{default_backend, ExecSkew, InferenceBackend};
+pub use chaos::{ChaosBackend, ChaosError, ChaosStats, FaultClass, FaultPlan};
 #[cfg(feature = "pjrt")]
 pub use executor::ModelRuntime;
 pub use sim::{SimBackend, SIM_SEED};

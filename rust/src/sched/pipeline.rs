@@ -12,6 +12,14 @@
 //! The executor closure is constructed *inside* the spawned thread's scope,
 //! so non-`Send` backends (PJRT client handles) can be built there — the
 //! same factory discipline the sequential leader used.
+//!
+//! Depth alone bounds *planning ahead*; it cannot correct the horizon when
+//! execution runs *behind* plan (faults, stragglers). For that, attach an
+//! [`ExecFeedback`] to the scheduler before entering the pipeline and have
+//! the executor report actual completion times — the planner folds the
+//! latest report into `t_free` at each window.
+//!
+//! [`ExecFeedback`]: crate::sched::scheduler::ExecFeedback
 
 use std::sync::mpsc;
 
@@ -84,7 +92,13 @@ where
             });
         }
         drop(tx); // planner done: close the pipeline so the executor drains
-        executor.join().expect("executor stage panicked")
+        match executor.join() {
+            Ok(r) => r,
+            // a panic in the executor stage belongs to the caller's thread:
+            // re-raise it with its original payload instead of a generic
+            // double-panic through expect()
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
     })
 }
 

@@ -17,6 +17,8 @@
 //!   the pipelined server).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::algo::grouping::{optimal_grouping_ws, GroupedPlan};
 use crate::algo::types::{GroupSolver, PlanningContext, User, UserId};
@@ -315,6 +317,50 @@ impl OnlineStats {
     }
 }
 
+/// Cross-thread execution feedback: the executor stage reports *actual*
+/// absolute completion times (which faults may have pushed past the plan),
+/// and the planner folds the latest report into `t_free` at its next
+/// window.  Lock-free — an `f64` carried as bits in an [`AtomicU64`] with
+/// a CAS-max, so a slow executor can never move the horizon backwards and
+/// the planner thread never blocks on it.
+///
+/// On the nominal (fault-free) path the reported completion never exceeds
+/// what the planner already carries, so attaching feedback is plan-neutral:
+/// it only matters when execution runs *behind* plan.
+#[derive(Debug, Clone, Default)]
+pub struct ExecFeedback(Arc<AtomicU64>);
+
+impl ExecFeedback {
+    pub fn new() -> Self {
+        Self(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+
+    /// Report an actual absolute completion time (monotone max; NaN and
+    /// non-increasing reports are ignored).
+    pub fn report(&self, t_abs: f64) {
+        if !t_abs.is_finite() {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Acquire);
+        while t_abs > f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                t_abs.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Latest reported completion (0.0 until the first report).
+    pub fn latest(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Acquire))
+    }
+}
+
 /// Planning state shared by every consumer of the scheduler core.
 ///
 /// Owns the admission policy and — crucially — the GPU-busy horizon
@@ -322,11 +368,17 @@ impl OnlineStats {
 /// parameter in two divergent copies.  Monotonicity (`t_free` never moves
 /// backwards within a run) is an invariant enforced here and pinned by the
 /// scheduler property tests.
+///
+/// `t_free` is a *model* of the GPU; real execution can run behind it when
+/// faults strike. Two correction paths exist: [`Scheduler::observe_completion`]
+/// (synchronous callers) and an attached [`ExecFeedback`] (the pipelined
+/// server), both folded in monotonically so the horizon never regresses.
 pub struct Scheduler<'s> {
     ctx: PlanningContext,
     solver: &'s dyn GroupSolver,
     policy: Box<dyn AdmissionPolicy>,
     t_free: f64,
+    feedback: Option<ExecFeedback>,
     stats: OnlineStats,
     latency_sum_s: f64,
 }
@@ -342,6 +394,7 @@ impl<'s> Scheduler<'s> {
             solver,
             policy,
             t_free: 0.0,
+            feedback: None,
             stats: OnlineStats::default(),
             latency_sum_s: 0.0,
         }
@@ -350,6 +403,25 @@ impl<'s> Scheduler<'s> {
     /// Current absolute GPU-busy horizon.
     pub fn t_free(&self) -> f64 {
         self.t_free
+    }
+
+    /// Attach (and return) an execution-feedback channel. The executor
+    /// stage calls [`ExecFeedback::report`] with actual completion times;
+    /// [`Scheduler::plan`] drains the latest report before planning each
+    /// window so the horizon tracks reality under faulty execution.
+    pub fn attach_feedback(&mut self) -> ExecFeedback {
+        let fb = ExecFeedback::new();
+        self.feedback = Some(fb.clone());
+        fb
+    }
+
+    /// Fold an actual absolute completion time into the busy horizon
+    /// (synchronous path — same correction as [`ExecFeedback`], without
+    /// the channel). Monotone: stale or NaN observations are no-ops.
+    pub fn observe_completion(&mut self, t_abs: f64) {
+        if t_abs.is_finite() && t_abs > self.t_free {
+            self.t_free = t_abs;
+        }
     }
 
     pub fn policy(&self) -> &dyn AdmissionPolicy {
@@ -369,7 +441,15 @@ impl<'s> Scheduler<'s> {
     }
 
     /// Plan one closed window, advancing `t_free` and the running stats.
+    /// Any attached execution feedback is drained first, so the plan is
+    /// made against the *actual* GPU horizon, not a stale model of it.
     pub fn plan<P>(&mut self, window: &[Arrival<P>], close: f64) -> PlannedWindow {
+        if let Some(fb) = &self.feedback {
+            let actual = fb.latest();
+            if actual.is_finite() && actual > self.t_free {
+                self.t_free = actual;
+            }
+        }
         let planned = plan_window(&self.ctx, self.solver, window, close, self.t_free);
         debug_assert!(
             planned.t_free_abs >= self.t_free - TIME_EPS,
@@ -571,6 +651,44 @@ mod tests {
         });
         // full window of 2, then the tail request when the stream closes
         assert_eq!(sizes, vec![2, 1]);
+    }
+
+    #[test]
+    fn feedback_corrects_the_horizon_monotonically() {
+        let fb = ExecFeedback::new();
+        assert_eq!(fb.latest(), 0.0);
+        fb.report(1.5);
+        fb.report(0.7); // stale: ignored
+        fb.report(f64::NAN); // garbage: ignored
+        assert_eq!(fb.latest(), 1.5);
+        fb.report(2.0);
+        assert_eq!(fb.latest(), 2.0);
+
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(TimeBound::unbounded(0.05)));
+        let fb = sched.attach_feedback();
+        let arr = trace(&c, &[(20.0, 0.0)]);
+        let p1 = sched.plan(&arr[..1], 0.05);
+        // execution ran behind plan; the report must lift the next window's horizon
+        let late = p1.t_free_abs + 0.5;
+        fb.report(late);
+        let arr2 = trace(&c, &[(21.0, 0.2)]);
+        let p2 = sched.plan(&arr2, 0.25);
+        assert!(sched.t_free() >= late - TIME_EPS);
+        assert!((p2.rel_t_free - (late - 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observe_completion_is_monotone() {
+        let c = ctx();
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(4)));
+        sched.observe_completion(0.3);
+        assert_eq!(sched.t_free(), 0.3);
+        sched.observe_completion(0.1); // stale
+        sched.observe_completion(f64::NAN); // garbage
+        assert_eq!(sched.t_free(), 0.3);
     }
 
     #[test]

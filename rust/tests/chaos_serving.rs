@@ -1,0 +1,425 @@
+//! Seeded chaos matrix over the serving pipeline: fault mode × admission
+//! policy × seed, plus deterministic engine-level recovery cases.
+//!
+//! Every case must terminate with a terminal outcome per request, bill
+//! every deadline decision to the ledger (misses are never silent), and
+//! never panic or block past the virtual timeout — faults are virtual
+//! (see `jdob::runtime::chaos`), so the whole matrix runs in plain
+//! `cargo test` time.
+//!
+//! Knobs:
+//! * `JDOB_CHAOS_SEEDS=<n>` — seeds per (mode, policy) cell (default 7;
+//!   CI runs 25);
+//! * `JDOB_CHAOS_SEED=<seed>` — pin a single seed (from a CI failure
+//!   log) to reproduce one case exactly.
+//!
+//! Each case appends one line to `target/chaos/last_run.log`; on a CI
+//! failure that file is uploaded as an artifact, and its last line names
+//! the (mode, policy, seed) triple to pin.
+
+mod common;
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use jdob::algo::jdob::JDob;
+use jdob::coordinator::engine::ServingEngine;
+use jdob::coordinator::ledger::EnergyLedger;
+use jdob::coordinator::metrics::ServingMetrics;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::runtime::{ChaosBackend, ChaosStats, FaultPlan, InferenceBackend};
+use jdob::sched::admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+use jdob::sched::clock::VirtualClock;
+use jdob::sched::scheduler::{run_events, Scheduler, SliceSource};
+use jdob::sim::online::poisson_arrivals;
+use jdob::util::rng::Rng;
+
+const MODES: [&str; 3] = ["latency", "transient", "hang"];
+const POLICIES: [&str; 3] = ["size-bound", "time-bound", "earliest-slack"];
+
+fn fault_plan(mode: &str, seed: u64) -> FaultPlan {
+    match mode {
+        "latency" => FaultPlan::latency_only(seed),
+        "transient" => FaultPlan::transient_failures(seed),
+        "hang" => FaultPlan::stuck_batches(seed),
+        other => panic!("unknown chaos mode {other}"),
+    }
+}
+
+fn policy(name: &str) -> Box<dyn AdmissionPolicy> {
+    match name {
+        "size-bound" => Box::new(SizeBound::new(4)),
+        "time-bound" => Box::new(TimeBound::new(0.04, 8)),
+        "earliest-slack" => Box::new(EarliestSlack::new(0.04, 8, 0.005)),
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+fn seeds() -> Vec<u64> {
+    if let Ok(pin) = std::env::var("JDOB_CHAOS_SEED") {
+        let s: u64 = pin.parse().expect("JDOB_CHAOS_SEED must be an integer");
+        return vec![s];
+    }
+    let n: usize = std::env::var("JDOB_CHAOS_SEEDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7);
+    (0..n as u64).map(|i| 1000 + i * 7919).collect()
+}
+
+fn log_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/chaos/last_run.log")
+}
+
+fn log_line(line: &str) {
+    let path = log_path();
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+fn mk_request(user_id: usize, deadline_s: f64, in_elems: usize, salt: usize) -> InferenceRequest {
+    let input = (0..in_elems)
+        .map(|i| ((i * 31 + user_id * 7 + salt * 13) % 251) as f32 / 251.0 - 0.5)
+        .collect();
+    InferenceRequest {
+        user_id,
+        input,
+        deadline_s,
+    }
+}
+
+struct CaseResult {
+    requests: usize,
+    ledger: EnergyLedger,
+    metrics: ServingMetrics,
+    stats: ChaosStats,
+    misses_in_responses: usize,
+    failed_in_responses: usize,
+}
+
+/// Run one seeded chaos case end to end through the scheduler event loop
+/// (virtual clock) with execution on a chaos-wrapped SimBackend, feeding
+/// actual completion times back to the planner.
+fn run_case(mode: &str, policy_name: &str, seed: u64) -> CaseResult {
+    let ctx = common::small_exec_ctx();
+    let backend = ChaosBackend::new(common::small_sim_backend(&ctx), fault_plan(mode, seed));
+    let engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5eed);
+    let arrivals = poisson_arrivals(&ctx, 25.0, 0.25, (5.0, 40.0), &mut rng).expect("trace");
+    let n = arrivals.len();
+    let in_elems = backend.in_elems(1);
+
+    let solver = JDob::full();
+    let mut sched = Scheduler::new(ctx.clone(), &solver, policy(policy_name));
+    let fb = sched.attach_feedback();
+    let mut clock = VirtualClock::new();
+    let mut source = SliceSource::new(arrivals);
+
+    let mut ledger = EnergyLedger::default();
+    let mut metrics_sum = ServingMetrics::default();
+    let mut served = 0usize;
+    let mut misses_in_responses = 0usize;
+    let mut failed_in_responses = 0usize;
+
+    run_events(&mut sched, &mut clock, &mut source, &mut |window, planned| {
+        let reqs: Vec<InferenceRequest> = window
+            .iter()
+            .map(|a| mk_request(a.user.id, a.user.deadline, in_elems, seed as usize))
+            .collect();
+        let out = engine
+            .execute_window(&reqs, &planned)
+            .expect("window contract holds");
+        fb.report(out.actual_t_free_abs);
+        assert_eq!(out.responses.len(), reqs.len(), "one response per request");
+        for resp in &out.responses {
+            if resp.outcome.is_failed() {
+                failed_in_responses += 1;
+                assert!(resp.logits.is_empty(), "failed request must not carry logits");
+                assert!(!resp.deadline_met, "failed request cannot meet its deadline");
+            } else {
+                assert_eq!(resp.logits.len(), ctx.profile.num_classes);
+            }
+            if !resp.deadline_met {
+                misses_in_responses += 1;
+            }
+        }
+        served += out.responses.len();
+        ledger.merge(&out.ledger);
+        metrics_sum.retries += out.metrics.retries;
+        metrics_sum.degraded_requests += out.metrics.degraded_requests;
+        metrics_sum.replans += out.metrics.replans;
+        metrics_sum.exec_deadline_misses += out.metrics.exec_deadline_misses;
+        metrics_sum.failed_requests += out.metrics.failed_requests;
+        metrics_sum
+            .fault_log
+            .extend(out.metrics.fault_log.iter().cloned());
+        true
+    });
+
+    assert_eq!(served, n, "every admitted request must get a terminal response");
+    CaseResult {
+        requests: n,
+        ledger,
+        metrics: metrics_sum,
+        stats: backend.stats(),
+        misses_in_responses,
+        failed_in_responses,
+    }
+}
+
+fn assert_case_invariants(mode: &str, policy_name: &str, seed: u64, r: &CaseResult) {
+    let tag = format!("[mode={mode} policy={policy_name} seed={seed}]");
+    assert_eq!(
+        r.ledger.requests, r.requests,
+        "{tag} every request billed exactly once"
+    );
+    assert_eq!(
+        r.ledger.deadline_hits + r.ledger.deadline_misses,
+        r.requests,
+        "{tag} every deadline decision recorded"
+    );
+    // misses are never silent: the ledger agrees with the responses
+    assert_eq!(
+        r.ledger.deadline_misses, r.misses_in_responses,
+        "{tag} ledger misses must match response misses"
+    );
+    assert_eq!(
+        r.metrics.failed_requests, r.failed_in_responses,
+        "{tag} failure counter must match Failed outcomes"
+    );
+    if r.metrics.degraded_requests + r.metrics.failed_requests > 0 {
+        assert!(
+            !r.metrics.fault_log.is_empty(),
+            "{tag} degradation must leave a cause in the fault log"
+        );
+    }
+    match mode {
+        "latency" => {
+            // latency-only chaos cannot fail a request
+            assert_eq!(r.metrics.failed_requests, 0, "{tag} no Failed under latency-only");
+            assert_eq!(r.stats.transient_errors + r.stats.hangs, 0, "{tag}");
+        }
+        "transient" => {
+            // every injected transient either burned a retry or degraded
+            if r.stats.transient_errors > 0 {
+                assert!(
+                    r.metrics.retries
+                        + r.metrics.degraded_requests
+                        + r.metrics.failed_requests
+                        > 0,
+                    "{tag} transient faults must surface in the recovery counters"
+                );
+            }
+        }
+        "hang" => {
+            // an abandoned batch must degrade or fail someone, never vanish
+            if r.stats.hangs > 0 {
+                assert!(
+                    r.metrics.degraded_requests + r.metrics.failed_requests > 0,
+                    "{tag} hangs must surface as degradations or failures"
+                );
+            }
+        }
+        other => panic!("unknown mode {other}"),
+    }
+}
+
+#[test]
+fn seeded_chaos_matrix_terminates_with_terminal_outcomes() {
+    // fresh log for this run (best effort; the file is diagnostic only)
+    let _ = std::fs::remove_file(log_path());
+    let seeds = seeds();
+    let mut per_mode_stats = std::collections::HashMap::<&str, (u64, u64, u64, usize)>::new();
+    for mode in MODES {
+        for policy_name in POLICIES {
+            for &seed in &seeds {
+                let r = run_case(mode, policy_name, seed);
+                log_line(&format!(
+                    "mode={mode} policy={policy_name} seed={seed} requests={} \
+                     slow={} spikes={} transients={} hangs={} \
+                     retries={} degraded={} replans={} exec_misses={} failed={}",
+                    r.requests,
+                    r.stats.slow_calls,
+                    r.stats.spikes,
+                    r.stats.transient_errors,
+                    r.stats.hangs,
+                    r.metrics.retries,
+                    r.metrics.degraded_requests,
+                    r.metrics.replans,
+                    r.metrics.exec_deadline_misses,
+                    r.metrics.failed_requests,
+                ));
+                assert_case_invariants(mode, policy_name, seed, &r);
+                let e = per_mode_stats.entry(mode).or_default();
+                e.0 += r.stats.slow_calls + r.stats.spikes;
+                e.1 += r.stats.transient_errors;
+                e.2 += r.stats.hangs;
+                e.3 += r.metrics.retries + r.metrics.degraded_requests + r.metrics.failed_requests;
+            }
+        }
+    }
+    // the matrix must actually exercise each fault mode, not just survive it
+    let latency = per_mode_stats["latency"];
+    assert!(latency.0 > 0, "latency mode injected no skew across the matrix");
+    let transient = per_mode_stats["transient"];
+    assert!(transient.1 > 0, "transient mode injected no failures across the matrix");
+    assert!(transient.3 > 0, "transient faults triggered no recovery across the matrix");
+    let hang = per_mode_stats["hang"];
+    assert!(hang.2 > 0, "hang mode injected no stuck batches across the matrix");
+}
+
+// ---- deterministic engine-level recovery cases ----
+
+fn window_requests(
+    ctx: &jdob::algo::types::PlanningContext,
+    backend: &dyn InferenceBackend,
+) -> Vec<InferenceRequest> {
+    let in_elems = backend.in_elems(1);
+    let total = ctx.tables.total_work();
+    let dev = jdob::energy::device::DeviceModel::from_config(&ctx.cfg);
+    (0..4)
+        .map(|u| {
+            let deadline =
+                jdob::algo::types::User::deadline_from_beta(30.0 + u as f64 * 0.25, &dev, total);
+            mk_request(u, deadline, in_elems, 0)
+        })
+        .collect()
+}
+
+#[test]
+fn unrecoverable_transients_end_in_failed_not_panic() {
+    let ctx = common::small_exec_ctx();
+    let plan = FaultPlan {
+        transient_prob: 1.0,
+        max_transients: u64::MAX,
+        ..FaultPlan::none()
+    };
+    let backend = ChaosBackend::new(common::small_sim_backend(&ctx), plan);
+    let engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+    let reqs = window_requests(&ctx, &backend);
+    let out = engine.serve_window(&reqs, 0.0).expect("window contract");
+    assert_eq!(out.responses.len(), reqs.len());
+    for resp in &out.responses {
+        assert!(resp.outcome.is_failed(), "all-transient backend can serve nobody");
+        assert!(resp.logits.is_empty());
+        assert!(!resp.deadline_met);
+    }
+    assert_eq!(out.metrics.failed_requests, reqs.len());
+    assert!(out.metrics.retries > 0, "bounded retries must have been attempted");
+    assert!(!out.metrics.fault_log.is_empty());
+    assert_eq!(out.ledger.requests, reqs.len());
+    assert_eq!(out.ledger.deadline_misses, reqs.len());
+}
+
+#[test]
+fn single_transient_recovers_via_retry_with_identical_logits() {
+    let ctx = common::small_exec_ctx();
+    // fault-free reference leg
+    let bare = common::small_sim_backend(&ctx);
+    let engine0 = ServingEngine::new(ctx.clone(), &bare, Box::new(JDob::full()));
+    let reqs = window_requests(&ctx, &bare);
+    let want = engine0.serve_window(&reqs, 0.0).expect("reference leg");
+
+    // exactly one injected transient, then the backend behaves
+    let plan = FaultPlan {
+        transient_prob: 1.0,
+        max_transients: 1,
+        ..FaultPlan::none()
+    };
+    let backend = ChaosBackend::new(common::small_sim_backend(&ctx), plan);
+    let engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+    let out = engine.serve_window(&reqs, 0.0).expect("window contract");
+
+    assert_eq!(out.metrics.retries, 1, "one transient, one retry");
+    assert_eq!(out.metrics.failed_requests, 0);
+    assert_eq!(out.metrics.replans, 0);
+    for (got, want) in out.responses.iter().zip(&want.responses) {
+        assert_eq!(got.user_id, want.user_id);
+        assert_eq!(got.logits, want.logits, "retry must reproduce the fault-free result");
+        assert_eq!(got.deadline_met, want.deadline_met);
+    }
+    assert!(
+        out.responses.iter().any(|r| r.outcome.is_degraded()),
+        "a retried request must be reported Degraded, never silently Served"
+    );
+    assert_eq!(backend.stats().transient_errors, 1);
+}
+
+#[test]
+fn hangs_bill_the_virtual_timeout_and_never_block() {
+    let ctx = common::small_exec_ctx();
+    let plan = FaultPlan {
+        hang_prob: 1.0,
+        virtual_timeout_s: 0.5,
+        ..FaultPlan::none()
+    };
+    let backend = ChaosBackend::new(common::small_sim_backend(&ctx), plan);
+    let engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+    let reqs = window_requests(&ctx, &backend);
+
+    // planning is fault-independent: a clean leg tells us whether this
+    // window offloads at all (GPU-side hangs bill the virtual horizon;
+    // device-side hangs deliberately do not)
+    let bare = common::small_sim_backend(&ctx);
+    let clean_engine = ServingEngine::new(ctx.clone(), &bare, Box::new(JDob::full()));
+    let offloads = clean_engine
+        .serve_window(&reqs, 0.0)
+        .expect("clean leg")
+        .responses
+        .iter()
+        .any(|r| r.offloaded);
+
+    let out = engine.serve_window(&reqs, 0.0).expect("window contract");
+
+    assert!(backend.stats().hangs > 0);
+    // every hang is abandoned at the virtual timeout and billed to the
+    // virtual GPU clock — the wall clock never waits for it
+    if offloads {
+        assert!(
+            out.actual_t_free_abs >= 0.5,
+            "abandoned batch must advance the virtual horizon by its timeout, got {}",
+            out.actual_t_free_abs
+        );
+    }
+    // hangs are not retryable: every request degrades or fails, none vanish
+    assert_eq!(out.responses.len(), reqs.len());
+    assert!(out.responses.iter().all(|r| !r.outcome.is_served()));
+    assert!(out.metrics.degraded_requests + out.metrics.failed_requests > 0);
+    assert!(!out.metrics.fault_log.is_empty());
+    assert_eq!(out.ledger.requests, reqs.len());
+}
+
+#[test]
+fn replan_path_reroutes_remainder_when_solver_present() {
+    let ctx = common::small_exec_ctx();
+    // every call hangs: the first group's batch is abandoned, the
+    // solver-equipped engine replans the remainder at the corrected
+    // horizon (the replan hangs too), and the local path absorbs everyone
+    let plan = FaultPlan {
+        hang_prob: 1.0,
+        virtual_timeout_s: 0.05,
+        ..FaultPlan::none()
+    };
+    let backend = ChaosBackend::new(common::small_sim_backend(&ctx), plan);
+    let engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+    let reqs = window_requests(&ctx, &backend);
+    let out = engine.serve_window(&reqs, 0.0).expect("window contract");
+    if out.metrics.degraded_requests > 0 {
+        assert!(
+            out.metrics.replans >= 1,
+            "a solver-equipped engine must attempt a remainder replan"
+        );
+    }
+
+    // control leg: same requests, no faults — nothing degrades or replans
+    let clean_backend = ChaosBackend::new(common::small_sim_backend(&ctx), FaultPlan::none());
+    let engine2 = ServingEngine::new(ctx.clone(), &clean_backend, Box::new(JDob::full()));
+    let clean = engine2.serve_window(&reqs, 0.0).expect("clean leg");
+    assert_eq!(clean.metrics.replans, 0, "no replan without faults");
+    assert!(clean.responses.iter().all(|r| r.outcome.is_served()));
+}

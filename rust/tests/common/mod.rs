@@ -4,13 +4,33 @@
 
 use std::path::PathBuf;
 
+use std::sync::Arc;
+
 use jdob::algo::types::{PlanningContext, User};
 use jdob::energy::device::DeviceModel;
+use jdob::energy::edge::AnalyticEdge;
+use jdob::model::ModelProfile;
 use jdob::runtime::SimBackend;
 use jdob::util::rng::Rng;
 
 pub fn ctx() -> PlanningContext {
     PlanningContext::default_analytic()
+}
+
+/// A planning context over a small (32x32) profile: execution-heavy suites
+/// (chaos matrix, pipelined parity) stay fast in debug builds while still
+/// exercising the full plan/execute path.
+pub fn small_exec_ctx() -> PlanningContext {
+    let base = ctx();
+    let profile = ModelProfile::mobilenet_v2(32, 10);
+    let edge = Arc::new(AnalyticEdge::from_config(&base.cfg, &profile));
+    PlanningContext::new(base.cfg.clone(), profile, edge)
+}
+
+/// A SimBackend matched to [`small_exec_ctx`], deterministic seed.
+pub fn small_sim_backend(c: &PlanningContext) -> SimBackend {
+    SimBackend::from_profile(&c.profile, &c.cfg.buckets, jdob::runtime::SIM_SEED)
+        .expect("small profile matches the sim graph")
 }
 
 /// The deterministic tier-1 execution substrate: a SimBackend over the

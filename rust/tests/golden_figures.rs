@@ -16,6 +16,8 @@
 //!    explicitly re-bless (delete the file or run with `JDOB_BLESS=1`).
 //!    Tolerance absorbs libm last-ulp differences across platforms.
 
+mod common;
+
 use std::path::PathBuf;
 
 use jdob::algo::types::PlanningContext;
@@ -171,6 +173,103 @@ fn golden_fig5_different_deadlines() {
         assert!(get(r, "J-DOB") <= get(r, "LC") * (1.0 + 1e-9));
     }
     check_or_bless("fig5_m10.csv", &rows_to_csv("beta_range_width", &rows), 1e-6);
+}
+
+#[test]
+fn golden_zero_fault_chaos_is_bit_transparent() {
+    use jdob::algo::jdob::JDob;
+    use jdob::algo::types::User;
+    use jdob::coordinator::engine::{ServeOutcome, ServingEngine};
+    use jdob::coordinator::request::InferenceRequest;
+    use jdob::energy::device::DeviceModel;
+    use jdob::runtime::{ChaosBackend, FaultPlan, InferenceBackend};
+
+    // Logits fingerprint as a 48-bit decimal integer: exact in f64, so
+    // check_or_bless (which parses every cell as f64) compares it exactly
+    // instead of skipping it as a NaN pair.
+    fn logits_hash(logits: &[f32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for x in logits {
+            h = h.wrapping_mul(0x0100_0000_01b3).wrapping_add(x.to_bits() as u64);
+        }
+        h & ((1u64 << 48) - 1)
+    }
+
+    fn serving_csv(out: &ServeOutcome) -> String {
+        let mut s = String::from(
+            "user_id,offloaded,partition,modeled_latency_s,deadline_met,device_energy_j,logits_hash\n",
+        );
+        for r in &out.responses {
+            s.push_str(&format!(
+                "{},{},{},{:.17e},{},{:.17e},{}\n",
+                r.user_id,
+                r.offloaded as u8,
+                r.partition,
+                r.modeled_latency_s,
+                r.deadline_met as u8,
+                r.device_energy_j,
+                logits_hash(&r.logits),
+            ));
+        }
+        s.push_str(&format!(
+            "-1,0,0,{:.17e},0,{:.17e},{}\n",
+            out.actual_t_free_abs,
+            out.ledger.total_j(),
+            out.ledger.deadline_hits,
+        ));
+        s
+    }
+
+    let ctx = PlanningContext::default_analytic();
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    let bare = common::sim_backend();
+    let elems: usize = ctx.profile.input_shape.iter().product();
+    // three loose users (offloading/batching) plus one tight (local path)
+    let betas = [30.25, 30.25, 30.25, 0.5];
+    let reqs: Vec<InferenceRequest> = betas
+        .iter()
+        .enumerate()
+        .map(|(u, &beta)| InferenceRequest {
+            user_id: u,
+            input: (0..elems)
+                .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
+                .collect(),
+            deadline_s: User::deadline_from_beta(beta, &dev, total),
+        })
+        .collect();
+
+    let engine_sim = ServingEngine::new(ctx.clone(), &bare, Box::new(JDob::full()));
+    let out_sim = engine_sim.serve_window(&reqs, 0.0).expect("sim leg");
+
+    let chaos = ChaosBackend::new(common::sim_backend(), FaultPlan::none());
+    let engine_chaos = ServingEngine::new(ctx.clone(), &chaos, Box::new(JDob::full()));
+    let out_chaos = engine_chaos.serve_window(&reqs, 0.0).expect("chaos leg");
+
+    // bit-transparency: the fault-free wrapper changes nothing anywhere
+    let csv_sim = serving_csv(&out_sim);
+    let csv_chaos = serving_csv(&out_chaos);
+    assert_eq!(csv_sim, csv_chaos, "zero-fault ChaosBackend must be bit-transparent");
+    assert_eq!(
+        out_sim.actual_t_free_abs.to_bits(),
+        out_chaos.actual_t_free_abs.to_bits(),
+        "actual horizon must be bitwise identical"
+    );
+    assert_eq!(out_sim.ledger.total_j().to_bits(), out_chaos.ledger.total_j().to_bits());
+    assert_eq!(chaos.stats().calls, 0, "fault-free fast path must not draw faults");
+    for out in [&out_sim, &out_chaos] {
+        assert_eq!(out.metrics.retries, 0);
+        assert_eq!(out.metrics.degraded_requests, 0);
+        assert_eq!(out.metrics.replans, 0);
+        assert_eq!(out.metrics.exec_deadline_misses, 0);
+        assert_eq!(out.metrics.failed_requests, 0);
+        assert!(out.metrics.fault_log.is_empty());
+        assert!(out.responses.iter().all(|r| r.outcome.is_served()));
+    }
+    // both legs against the same golden, exact comparison: a future change
+    // that breaks either leg (or their equality) must re-bless explicitly
+    check_or_bless("serving_window_sim.csv", &csv_sim, 0.0);
+    check_or_bless("serving_window_sim.csv", &csv_chaos, 0.0);
 }
 
 #[test]

@@ -13,7 +13,11 @@
 //!   within a run;
 //! * the virtual-clock simulator (`run_online`) and the pipelined
 //!   planner/executor produce *identical plans* for the same trace and
-//!   policy on `SimBackend`.
+//!   policy on `SimBackend`;
+//! * under any `FaultPlan`, the execution-corrected `t_free` stays
+//!   monotone and never runs behind the last *actual* (chaos-skewed)
+//!   completion — through both correction paths (`observe_completion`
+//!   and the `ExecFeedback` channel).
 
 mod common;
 
@@ -147,6 +151,87 @@ fn prop_t_free_monotone_within_a_run() {
             true
         });
         assert!((sched.t_free() - last).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_corrected_t_free_monotone_and_tracks_actuals() {
+    use jdob::runtime::{ChaosBackend, FaultPlan, InferenceBackend};
+
+    for seed in 0..24u64 {
+        let c = common::small_exec_ctx();
+        let plan = match seed % 3 {
+            0 => FaultPlan::latency_only(seed * 31 + 7),
+            1 => FaultPlan::transient_failures(seed * 31 + 7),
+            _ => FaultPlan::stuck_batches(seed * 31 + 7),
+        };
+        let backend = ChaosBackend::new(common::small_sim_backend(&c), plan);
+        let engine = ServingEngine::new(c.clone(), &backend, Box::new(JDob::full()));
+        let elems = backend.in_elems(1);
+
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC4A05);
+        let arr = poisson_arrivals(&c, 30.0, 0.2, (5.0, 30.0), &mut rng).expect("valid args");
+        if arr.is_empty() {
+            continue;
+        }
+
+        let solver = JDob::full();
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(SizeBound::new(3)));
+        // alternate correction paths across seeds: the mpsc-free direct
+        // observation and the cross-thread feedback channel must behave
+        // identically in this synchronous setting
+        let fb = (seed % 2 == 0).then(|| sched.attach_feedback());
+
+        let mut last_t_free = sched.t_free();
+        let mut last_actual = 0.0f64;
+        let mut last_close = 0.0f64;
+        for chunk in arr.chunks(3) {
+            let close = chunk.last().expect("non-empty chunk").at;
+            last_close = close;
+            let planned = sched.plan(chunk, close);
+            assert!(
+                sched.t_free() >= last_t_free - 1e-9,
+                "seed {seed}: corrected t_free went backwards: {last_t_free} -> {}",
+                sched.t_free()
+            );
+            assert!(
+                sched.t_free() >= last_actual - 1e-9,
+                "seed {seed}: planner t_free {} ran behind last actual completion {last_actual}",
+                sched.t_free()
+            );
+            last_t_free = sched.t_free();
+
+            let reqs: Vec<InferenceRequest> = chunk
+                .iter()
+                .map(|a| InferenceRequest {
+                    user_id: a.user.id,
+                    input: (0..elems)
+                        .map(|i| ((i * 13 + a.user.id * 7) % 251) as f32 / 251.0 - 0.5)
+                        .collect(),
+                    deadline_s: a.user.deadline,
+                })
+                .collect();
+            let out = engine.execute_window(&reqs, &planned).expect("executes");
+            // actuals can only run behind plan, never ahead of the horizon
+            assert!(
+                out.actual_t_free_abs >= planned.close + planned.rel_t_free - 1e-9,
+                "seed {seed}: actual completion before the planned-against horizon"
+            );
+            last_actual = last_actual.max(out.actual_t_free_abs);
+            match &fb {
+                Some(fb) => fb.report(out.actual_t_free_abs),
+                None => sched.observe_completion(out.actual_t_free_abs),
+            }
+        }
+        // a final (empty) planning round drains any channel feedback:
+        // the horizon must have caught up with the last actual completion
+        let planned = sched.plan::<()>(&[], last_close);
+        assert!(
+            sched.t_free() >= last_actual - 1e-9,
+            "seed {seed}: final t_free {} behind last actual {last_actual}",
+            sched.t_free()
+        );
+        assert!(planned.t_free_abs >= last_actual - 1e-9, "seed {seed}");
     }
 }
 
