@@ -15,6 +15,12 @@
 //! * per-group plans are re-validated against the paper's constraints and
 //!   recorded as [`GroupTelemetry`].
 //!
+//! All tensor assembly (gather, prefix ping-pong, tail output) goes
+//! through one set of window-lifetime buffers (`ExecBuffers`) driven over
+//! the backend's `run_block_into`/`run_tail_into` contract, so the
+//! steady-state execution path performs no per-request heap allocation —
+//! see the "Execution engine" section of `src/sched/README.md`.
+//!
 //! ## Recovery states
 //!
 //! Execution no longer assumes every call lands exactly as planned. Each
@@ -102,6 +108,23 @@ pub struct ServeOutcome {
     pub actual_t_free_abs: f64,
 }
 
+/// Reusable execution buffers shared by every group (and replan) of one
+/// window — the engine-side half of the zero-allocation hot path: request
+/// inputs are gathered straight into `batch` (no per-request clone) and
+/// the backend's `run_*_into` entry points recycle the rest.
+#[derive(Default)]
+struct ExecBuffers {
+    /// Gathered cut-activations of a group's offloaded members, in group
+    /// order — the batched tail's input.
+    batch: Vec<f32>,
+    /// Prefix-chain ping-pong halves (b=1 device stand-in); `act` doubles
+    /// as the batched tail's scratch half.
+    act: Vec<f32>,
+    act_scratch: Vec<f32>,
+    /// Batched tail output, sliced per member into the responses.
+    logits: Vec<f32>,
+}
+
 /// Per-window execution state threaded through the recovery paths.
 struct WindowExec {
     ledger: EnergyLedger,
@@ -110,6 +133,7 @@ struct WindowExec {
     /// Virtual absolute GPU-free time so far (advanced by successful
     /// batches, drained skew, retry backoff and hang timeouts).
     gpu_free_abs: f64,
+    buf: ExecBuffers,
 }
 
 pub struct ServingEngine<'rt> {
@@ -218,6 +242,7 @@ impl<'rt> ServingEngine<'rt> {
             metrics: ServingMetrics::default(),
             responses: vec![None; requests.len()],
             gpu_free_abs: planned.close + planned.rel_t_free,
+            buf: ExecBuffers::default(),
         };
         let slots: Vec<usize> = (0..requests.len()).collect();
         self.execute_planned(requests, planned, &slots, &mut st, self.recovery.max_replans);
@@ -448,25 +473,38 @@ impl<'rt> ServingEngine<'rt> {
         let t0 = Instant::now();
         let n_tilde = plan.partition;
         let elems = self.runtime.elems_at_cut(n_tilde);
-        let mut batch_input = Vec::with_capacity(offloaded.len() * elems);
+        // gather straight into the window's reusable assembly buffer — no
+        // per-request input clone, no per-user activation Vec
+        st.buf.batch.clear();
+        st.buf.batch.reserve(offloaded.len() * elems);
         for &(wi, _) in offloaded {
             let input = &requests[slots[wi]].borrow().input;
-            let act = if n_tilde == 0 {
-                input.clone()
+            if n_tilde == 0 {
+                ensure!(input.len() == elems, "activation size mismatch at cut {n_tilde}");
+                st.buf.batch.extend_from_slice(input);
             } else {
-                // device-side prefix at b=1 (phone stand-in)
-                let mut a = input.clone();
-                for n in 1..=n_tilde {
-                    a = self.runtime.run_block(n, &a, 1)?;
+                // device-side prefix at b=1 (phone stand-in), ping-ponging
+                // two reusable buffers instead of one fresh Vec per block
+                self.runtime.run_block_into(1, input, 1, &mut st.buf.act)?;
+                for n in 2..=n_tilde {
+                    std::mem::swap(&mut st.buf.act, &mut st.buf.act_scratch);
+                    self.runtime.run_block_into(n, &st.buf.act_scratch, 1, &mut st.buf.act)?;
                 }
-                a
-            };
-            ensure!(act.len() == elems, "activation size mismatch at cut {n_tilde}");
-            batch_input.extend_from_slice(&act);
+                ensure!(
+                    st.buf.act.len() == elems,
+                    "activation size mismatch at cut {n_tilde}"
+                );
+                st.buf.batch.extend_from_slice(&st.buf.act);
+            }
         }
-        let logits_flat = self
-            .runtime
-            .run_tail(n_tilde, &batch_input, offloaded.len())
+        self.runtime
+            .run_tail_into(
+                n_tilde,
+                &st.buf.batch,
+                offloaded.len(),
+                &mut st.buf.logits,
+                &mut st.buf.act,
+            )
             .context("edge tail execution")?;
         let wall = t0.elapsed().as_secs_f64();
 
@@ -509,7 +547,7 @@ impl<'rt> ServingEngine<'rt> {
             st.metrics.wall_latency.record_s(wall);
             st.responses[slots[wi]] = Some(InferenceResponse {
                 user_id: oc.user_id,
-                logits: logits_flat[k * per..(k + 1) * per].to_vec(),
+                logits: st.buf.logits[k * per..(k + 1) * per].to_vec(),
                 modeled_latency_s: latency,
                 wall_latency_s: wall,
                 deadline_met: met,

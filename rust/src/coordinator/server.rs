@@ -241,15 +241,24 @@ where
     F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>>,
 {
     let backend = match make_backend(&ctx) {
-        Ok(b) => {
-            let _ = ready.send(true);
-            b
-        }
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(false);
             return Err(e);
         }
     };
+    // Warm every (block, bucket) pair the planner can emit *before*
+    // signalling readiness: PJRT compiles its executables, the sim backend
+    // pre-sizes its exec arenas — so window 0 pays no one-time compile or
+    // allocation spike and the readiness gate covers it.
+    let pairs: Vec<(usize, usize)> = (1..=backend.n_blocks())
+        .flat_map(|n| backend.buckets().iter().map(move |&b| (n, b)))
+        .collect();
+    if let Err(e) = backend.warmup(&pairs) {
+        let _ = ready.send(false);
+        return Err(e.context("backend warmup"));
+    }
+    let _ = ready.send(true);
     let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name));
     let mut cumulative = EnergyLedger::default();
     while let Ok(batch) = batches.recv() {

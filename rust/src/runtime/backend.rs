@@ -3,8 +3,10 @@
 //! model's block graph.
 //!
 //! Everything above this trait is backend-agnostic: the coordinator plans
-//! with [`crate::algo`], then drives `run_block`/`run_tail` over *some*
-//! executor. Two implementations ship in-tree:
+//! with [`crate::algo`], then drives `run_block`/`run_tail` (or their
+//! buffer-reusing `_into` variants — the hot-path contract shared by the
+//! engine, the chaos wrapper and the PJRT executor) over *some* executor.
+//! Two implementations ship in-tree:
 //!
 //! * [`crate::runtime::SimBackend`] (default) — pure-Rust reference kernels
 //!   over deterministic weights; no artifacts, no PJRT, bitwise
@@ -100,6 +102,50 @@ pub trait InferenceBackend {
 
     // ---- provided ----
 
+    /// Buffer-reusing variant of [`Self::run_block`]: the result replaces
+    /// the contents of `out` (same length contract as `run_block`'s return
+    /// value). Callers loop over windows with one long-lived buffer so the
+    /// steady-state hot path stops allocating; backends with an internal
+    /// arena ([`crate::runtime::SimBackend`]) override this to write
+    /// straight into `out`, everything else inherits the copying default.
+    fn run_block_into(
+        &self,
+        n: usize,
+        input: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let v = self.run_block(n, input, batch)?;
+        out.clear();
+        out.extend_from_slice(&v);
+        Ok(())
+    }
+
+    /// Buffer-reusing variant of [`Self::run_tail`]: chains blocks
+    /// `n_from+1..=N` by ping-ponging `out` and `scratch`, leaving the tail
+    /// output in `out`. With a `run_block_into`-overriding backend the
+    /// whole chain is allocation-free in steady state.
+    fn run_tail_into(
+        &self,
+        n_from: usize,
+        input: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+        scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        if n_from >= self.n_blocks() {
+            out.clear();
+            out.extend_from_slice(input);
+            return Ok(());
+        }
+        self.run_block_into(n_from + 1, input, batch, out)?;
+        for n in (n_from + 2)..=self.n_blocks() {
+            std::mem::swap(out, scratch);
+            self.run_block_into(n, scratch.as_slice(), batch, out)?;
+        }
+        Ok(())
+    }
+
     /// Smallest bucket >= `b` (saturating at the largest). A degenerate
     /// backend reporting no buckets falls back to the raw batch size
     /// instead of panicking on the serving path.
@@ -135,10 +181,9 @@ pub trait InferenceBackend {
 
     /// Execute the tail blocks ñ+1..N (the edge side of a partition plan).
     fn run_tail(&self, n_from: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
-        let mut act = input.to_vec();
-        for n in (n_from + 1)..=self.n_blocks() {
-            act = self.run_block(n, &act, batch)?;
-        }
+        let mut act = Vec::new();
+        let mut scratch = Vec::new();
+        self.run_tail_into(n_from, input, batch, &mut act, &mut scratch)?;
         Ok(act)
     }
 

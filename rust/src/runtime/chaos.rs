@@ -333,6 +333,20 @@ impl<B: InferenceBackend> InferenceBackend for ChaosBackend<B> {
         self.inner.run_block(n, input, batch)
     }
 
+    // Same fault point as `run_block` (one injection draw per block call,
+    // keeping seeded fault sequences identical across the two entry
+    // points), then delegate to the inner backend's buffer-reusing path.
+    fn run_block_into(
+        &self,
+        n: usize,
+        input: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inject(n).map_err(anyhow::Error::new)?;
+        self.inner.run_block_into(n, input, batch, out)
+    }
+
     fn drain_skew(&self) -> ExecSkew {
         if self.plan.is_fault_free() {
             return ExecSkew::IDENTITY;

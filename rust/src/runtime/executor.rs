@@ -153,6 +153,9 @@ impl ModelRuntime {
 
 }
 
+// `run_block_into`/`run_tail_into` stay at the trait defaults: PJRT owns
+// its output buffers device-side, so the host-side copy the default makes
+// is already the minimal transfer.
 impl InferenceBackend for ModelRuntime {
     fn platform(&self) -> String {
         self.client.platform_name()

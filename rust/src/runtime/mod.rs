@@ -2,8 +2,11 @@
 //!
 //! * [`backend`] — the trait itself plus [`default_backend`], the
 //!   build-configured constructor everything above this layer uses.
-//! * [`sim`] — pure-Rust [`SimBackend`]: reference kernels over
-//!   deterministic weights; the default (tier-1) execution substrate.
+//! * [`sim`] — pure-Rust [`SimBackend`]: deterministic weights executed by
+//!   the zero-allocation arena engine (register-blocked kernels, sample-
+//!   major `std::thread::scope` sharding) with the original scalar
+//!   reference path retained as the bit-exactness oracle; the default
+//!   (tier-1) execution substrate.
 //! * `executor` (`--features pjrt`) — `ModelRuntime`: loads the AOT
 //!   HLO-text artifacts produced by `python/compile/aot.py`, compiles one
 //!   executable per (block, bucket) through a PJRT client and keeps
@@ -31,4 +34,4 @@ pub use backend::{default_backend, ExecSkew, InferenceBackend};
 pub use chaos::{ChaosBackend, ChaosError, ChaosStats, FaultClass, FaultPlan};
 #[cfg(feature = "pjrt")]
 pub use executor::ModelRuntime;
-pub use sim::{SimBackend, SIM_SEED};
+pub use sim::{SimBackend, PAR_MIN_BATCH, SIM_SEED};

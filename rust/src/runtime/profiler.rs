@@ -35,12 +35,15 @@ pub fn profile_edge(rt: &dyn InferenceBackend, reps: usize) -> Result<EdgeProfil
         let mut row = Vec::with_capacity(buckets.len());
         for &b in &buckets {
             let input = vec![0.1f32; b * in_elems];
-            // warmup compiles + caches
-            rt.run_block(n, &input, b)?;
+            // warmup compiles + caches (and settles exec-arena sizes), then
+            // measure over one reused output buffer so the timings capture
+            // kernel work, not allocator traffic
+            let mut out = Vec::new();
+            rt.run_block_into(n, &input, b, &mut out)?;
             let mut times: Vec<f64> = (0..reps.max(1))
                 .map(|_| {
                     let t0 = Instant::now();
-                    rt.run_block(n, &input, b).expect("profiled block runs");
+                    rt.run_block_into(n, &input, b, &mut out).expect("profiled block runs");
                     t0.elapsed().as_secs_f64()
                 })
                 .collect();

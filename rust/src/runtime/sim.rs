@@ -1,5 +1,5 @@
 //! Pure-Rust simulation backend: the MobileNetV2 block graph executed with
-//! reference kernels — a direct port of `python/compile/kernels/ref.py`
+//! deterministic kernels — a direct port of `python/compile/kernels/ref.py`
 //! (the pure-jnp oracles the Pallas kernels are verified against).
 //!
 //! Purpose: make the *entire* serving path (engine, server, profiler,
@@ -17,6 +17,31 @@
 //! * per-sample results are independent of co-batched samples (every kernel
 //!   is sample-major), so padding is lossless — the property
 //!   `tests/integration_runtime.rs` pins.
+//!
+//! # Execution engine
+//!
+//! Two execution paths share the same weights and produce **bitwise
+//! identical** outputs (pinned by `tests/exec_bitwise.rs`):
+//!
+//! * **Arena engine** (default) — the hot path. Each block call borrows an
+//!   [`ExecArena`] from a pool on the backend: ping-pong activation
+//!   buffers, im2col / expansion scratch, and a bucket-padding staging
+//!   buffer, all grow-only, so once a (block, bucket) pair has run (or
+//!   [`InferenceBackend::warmup`] pre-sized the pool) a steady-state
+//!   `run_block` performs **zero heap allocations** — fenced by
+//!   `tests/perf_smoke.rs` with a counting allocator. Kernels are
+//!   register-blocked over output columns but keep the per-output
+//!   k-accumulation order (ascending `p`, exact-zero skip) of the
+//!   reference kernels; f32 addition order is what fixes the bits, so the
+//!   tiling is FP-order-stable. Batches of at least [`PAR_MIN_BATCH`]
+//!   samples shard sample-major across a `std::thread::scope` pool
+//!   (`JDOB_EXEC_THREADS`, default = available parallelism capped at 8):
+//!   legal bitwise because every kernel is sample-independent.
+//! * **Reference path** — the original allocating scalar kernels, retained
+//!   verbatim as the oracle. Selected by [`SimBackend::reference_exec`] or
+//!   the `JDOB_EXEC_REFERENCE=1` environment variable.
+
+use std::sync::Mutex;
 
 use anyhow::{bail, ensure, Result};
 
@@ -27,6 +52,11 @@ use crate::util::rng::Rng;
 /// Seed used by [`crate::runtime::default_backend`]; fixed so the default
 /// serving stack is reproducible across processes.
 pub const SIM_SEED: u64 = 0x5EED_CAFE;
+
+/// Batches at least this large shard sample-major across the thread pool
+/// (when the backend was built with more than one exec thread). Below it
+/// the per-`thread::scope` overhead outweighs the kernel work.
+pub const PAR_MIN_BATCH: usize = 4;
 
 /// MobileNetV2 stage table (expansion t, out channels c, repeats n, first
 /// stride s) — must match `python/compile/model.py::ARCH` and
@@ -46,6 +76,11 @@ const N_BLOCKS: usize = 9;
 
 // ---------------------------------------------------------------------------
 // Reference kernels (port of python/compile/kernels/ref.py)
+//
+// `matmul_bias_act` stays exactly as originally written — it is the fully
+// independent bit-exactness oracle for the tiled arena matmul
+// (`tests/exec_bitwise.rs`). The conv/pool kernels allocate and delegate
+// to their `_into` twins, whose bodies are the original loops verbatim.
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,11 +144,123 @@ fn depthwise3x3(
     stride: usize,
     a: Act,
 ) -> Vec<f32> {
+    let ho = (h - 1) / stride + 1;
+    let wo = (w - 1) / stride + 1;
+    let mut y = vec![0f32; bsz * ho * wo * c];
+    depthwise3x3_into(x, bsz, h, w, c, wts, bias, stride, a, &mut y);
+    y
+}
+
+/// NHWC -> [B*Ho*Wo, 9*C] patches for a 3x3 conv with padding 1 (the same
+/// layout `ref.py::_im2col`/the Pallas stem use, so an HWIO weight tensor
+/// reshaped to [9*C, Cout] row-major lines up).
+fn im2col3x3(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, stride: usize) -> Vec<f32> {
+    let ho = (h - 1) / stride + 1;
+    let wo = (w - 1) / stride + 1;
+    let mut cols = vec![0f32; bsz * ho * wo * 9 * c];
+    im2col3x3_into(x, bsz, h, w, c, stride, &mut cols);
+    cols
+}
+
+/// [B, H, W, C] -> [B, C] mean over the spatial dims.
+fn global_avg_pool(x: &[f32], bsz: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut y = vec![0f32; bsz * c];
+    global_avg_pool_into(x, bsz, h, w, c, &mut y);
+    y
+}
+
+// ---------------------------------------------------------------------------
+// Arena kernels: allocation-free `_into` variants
+//
+// Bit-exactness argument (why these may replace the reference kernels under
+// a `to_bits` pin): f32 addition is not associative, so the *only* thing
+// that fixes the output bits is the per-output-element order of operations.
+// Every kernel below accumulates each output element over ascending `p`
+// (resp. ascending `ky`, `kx`) with the same exact-zero skip as its
+// reference twin — the column tiling in `matmul_bias_act_into` regroups
+// *which outputs* share a pass over `x`, never the order of additions into
+// any single accumulator. `rustc` does not contract `a * b + c` into fma
+// by default, so the scalar ops themselves are also identical.
+// ---------------------------------------------------------------------------
+
+/// Grow-only resize: steady-state calls (buffer already large enough) touch
+/// no allocator. Callers slice `[..n]` and fully overwrite it.
+#[inline]
+fn grow(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+/// Output-column register tile width of `matmul_bias_act_into`: 8
+/// accumulators live in registers across the whole k loop, so `x` and the
+/// bias are re-read once per tile instead of once per column.
+const COL_TILE: usize = 8;
+
+/// `y = act(x @ w + b)` into a caller buffer; bitwise equal to
+/// [`matmul_bias_act`] (same per-output accumulation order).
+#[allow(clippy::too_many_arguments)]
+fn matmul_bias_act_into(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    cols: usize,
+    bias: &[f32],
+    a: Act,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * cols);
+    debug_assert_eq!(bias.len(), cols);
+    debug_assert_eq!(y.len(), rows * cols);
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let yrow = &mut y[i * cols..(i + 1) * cols];
+        let mut j0 = 0;
+        while j0 < cols {
+            let t = COL_TILE.min(cols - j0);
+            let mut acc = [0f32; COL_TILE];
+            for (p, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    // exact no-op contribution; makes zero-padded samples cheap
+                    continue;
+                }
+                let wrow = &w[p * cols + j0..p * cols + j0 + t];
+                for (av, &wv) in acc[..t].iter_mut().zip(wrow) {
+                    *av += xv * wv;
+                }
+            }
+            for ((yv, &av), &bv) in
+                yrow[j0..j0 + t].iter_mut().zip(&acc[..t]).zip(&bias[j0..j0 + t])
+            {
+                *yv = apply(av + bv, a);
+            }
+            j0 += t;
+        }
+    }
+}
+
+/// [`depthwise3x3`] into a caller buffer (this *is* the shared kernel body:
+/// bias is copied in first, so no pre-zeroing of `y` is needed).
+#[allow(clippy::too_many_arguments)]
+fn depthwise3x3_into(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    wts: &[f32],
+    bias: &[f32],
+    stride: usize,
+    a: Act,
+    y: &mut [f32],
+) {
     debug_assert_eq!(x.len(), bsz * h * w * c);
     debug_assert_eq!(wts.len(), 9 * c);
     let ho = (h - 1) / stride + 1;
     let wo = (w - 1) / stride + 1;
-    let mut y = vec![0f32; bsz * ho * wo * c];
+    debug_assert_eq!(y.len(), bsz * ho * wo * c);
     for b in 0..bsz {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -142,17 +289,24 @@ fn depthwise3x3(
             }
         }
     }
-    y
 }
 
-/// NHWC -> [B*Ho*Wo, 9*C] patches for a 3x3 conv with padding 1 (the same
-/// layout `ref.py::_im2col`/the Pallas stem use, so an HWIO weight tensor
-/// reshaped to [9*C, Cout] row-major lines up).
-fn im2col3x3(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, stride: usize) -> Vec<f32> {
+/// [`im2col3x3`] into a caller buffer (shared kernel body; padding columns
+/// must read zero, so the used range is cleared first).
+fn im2col3x3_into(
+    x: &[f32],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+    y: &mut [f32],
+) {
     let ho = (h - 1) / stride + 1;
     let wo = (w - 1) / stride + 1;
     let k = 9 * c;
-    let mut cols = vec![0f32; bsz * ho * wo * k];
+    debug_assert_eq!(y.len(), bsz * ho * wo * k);
+    y.fill(0.0);
     for b in 0..bsz {
         for oy in 0..ho {
             for ox in 0..wo {
@@ -169,21 +323,21 @@ fn im2col3x3(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, stride: usize)
                         }
                         let src = ((b * h + iy as usize) * w + ix as usize) * c;
                         let dst = base + (ky * 3 + kx) * c;
-                        cols[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                        y[dst..dst + c].copy_from_slice(&x[src..src + c]);
                     }
                 }
             }
         }
     }
-    cols
 }
 
-/// [B, H, W, C] -> [B, C] mean over the spatial dims.
-fn global_avg_pool(x: &[f32], bsz: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
-    let mut y = vec![0f32; bsz * c];
+/// [`global_avg_pool`] into a caller buffer (shared kernel body).
+fn global_avg_pool_into(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), bsz * c);
     let inv = 1.0 / (h * w) as f32;
     for b in 0..bsz {
         let yrow = &mut y[b * c..(b + 1) * c];
+        yrow.fill(0.0);
         for p in 0..h * w {
             let xrow = &x[(b * h * w + p) * c..][..c];
             for ch in 0..c {
@@ -194,7 +348,6 @@ fn global_avg_pool(x: &[f32], bsz: usize, h: usize, w: usize, c: usize) -> Vec<f
             *v *= inv;
         }
     }
-    y
 }
 
 // ---------------------------------------------------------------------------
@@ -267,6 +420,7 @@ impl Bottleneck {
     }
 
     /// Forward over a [bsz, h, w, cin] batch; returns (y, ho, wo).
+    /// Reference path: allocates per stage.
     fn forward(&self, x: &[f32], bsz: usize, h: usize, w: usize) -> (Vec<f32>, usize, usize) {
         let pixels = bsz * h * w;
         let expanded;
@@ -306,6 +460,72 @@ impl Bottleneck {
         }
         (out, ho, wo)
     }
+
+    /// Arena path: expansion and depthwise intermediates go into borrowed
+    /// scratch, the projection (+ residual) straight into `out`. Bitwise
+    /// equal to [`Bottleneck::forward`].
+    #[allow(clippy::too_many_arguments)]
+    fn forward_into(
+        &self,
+        x: &[f32],
+        bsz: usize,
+        h: usize,
+        w: usize,
+        mid_buf: &mut Vec<f32>,
+        yd_buf: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let pixels = bsz * h * w;
+        let mid: &[f32] = match &self.expand {
+            Some(e) => {
+                let n = pixels * e.cout;
+                grow(mid_buf, n);
+                matmul_bias_act_into(
+                    x,
+                    pixels,
+                    e.cin,
+                    &e.w,
+                    e.cout,
+                    &e.b,
+                    Act::Relu6,
+                    &mut mid_buf[..n],
+                );
+                &mid_buf[..n]
+            }
+            None => x,
+        };
+        let ho = (h - 1) / self.stride + 1;
+        let wo = (w - 1) / self.stride + 1;
+        let yd_n = bsz * ho * wo * self.cmid;
+        grow(yd_buf, yd_n);
+        depthwise3x3_into(
+            mid,
+            bsz,
+            h,
+            w,
+            self.cmid,
+            &self.dw.w,
+            &self.dw.b,
+            self.stride,
+            Act::Relu6,
+            &mut yd_buf[..yd_n],
+        );
+        matmul_bias_act_into(
+            &yd_buf[..yd_n],
+            bsz * ho * wo,
+            self.project.cin,
+            &self.project.w,
+            self.project.cout,
+            &self.project.b,
+            Act::None,
+            out,
+        );
+        if self.stride == 1 && self.cin == self.cout {
+            for (o, &xv) in out.iter_mut().zip(x) {
+                *o += xv;
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -318,12 +538,88 @@ enum SimBlock {
 }
 
 // ---------------------------------------------------------------------------
+// Execution arena
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch for one in-flight block execution: ping-pong activation
+/// buffers for multi-unit stages, im2col / expansion / depthwise scratch,
+/// and a bucket-padding staging buffer. All buffers are grow-only
+/// ([`grow`]), so an arena that has seen a (block, bucket) pair — or was
+/// pre-sized by `warmup` — services it without touching the allocator.
+#[derive(Debug, Default)]
+struct ExecArena {
+    /// Inter-unit activation ping-pong halves (multi-unit stages).
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    /// im2col patches (stem), expansion output (bottlenecks), 1280-wide
+    /// pre-pool activation (head).
+    mid: Vec<f32>,
+    /// Depthwise output (bottlenecks), pooled activation (head).
+    yd: Vec<f32>,
+    /// Zero-padded bucket staging for `batch < bucket` calls.
+    padded: Vec<f32>,
+}
+
+/// Per-buffer element requirements of a set of (block, bucket) pairs;
+/// element-wise max over pairs, used by `warmup` to pre-size the pool.
+#[derive(Debug, Default, Clone, Copy)]
+struct ArenaReq {
+    ping: usize,
+    mid: usize,
+    yd: usize,
+    padded: usize,
+}
+
+impl ArenaReq {
+    fn max_with(&mut self, o: ArenaReq) {
+        self.ping = self.ping.max(o.ping);
+        self.mid = self.mid.max(o.mid);
+        self.yd = self.yd.max(o.yd);
+        self.padded = self.padded.max(o.padded);
+    }
+}
+
+impl ExecArena {
+    fn grow_to(&mut self, r: &ArenaReq) {
+        grow(&mut self.ping, r.ping);
+        grow(&mut self.pong, r.ping);
+        grow(&mut self.mid, r.mid);
+        grow(&mut self.yd, r.yd);
+        grow(&mut self.padded, r.padded);
+    }
+}
+
+/// Which execution engine a [`SimBackend`] runs (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ExecMode {
+    Arena,
+    Reference,
+}
+
+fn env_exec_mode() -> ExecMode {
+    match std::env::var("JDOB_EXEC_REFERENCE") {
+        Ok(v) if !v.is_empty() && v != "0" => ExecMode::Reference,
+        _ => ExecMode::Arena,
+    }
+}
+
+fn env_exec_threads() -> usize {
+    match std::env::var("JDOB_EXEC_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) => n.clamp(1, 64),
+        None => std::thread::available_parallelism().map_or(1, |n| n.get()).min(8),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The backend
 // ---------------------------------------------------------------------------
 
 /// Deterministic, dependency-free inference backend over the MobileNetV2
 /// block graph (see module docs).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct SimBackend {
     num_classes: usize,
     buckets: Vec<usize>,
@@ -332,12 +628,41 @@ pub struct SimBackend {
     in_shapes: Vec<Vec<usize>>,
     out_shapes: Vec<Vec<usize>>,
     seed: u64,
+    mode: ExecMode,
+    /// Sample-major shard count for batches >= [`PAR_MIN_BATCH`]; 1 = serial.
+    exec_threads: usize,
+    /// Idle [`ExecArena`]s; at most `exec_threads` are ever in flight.
+    arena_pool: Mutex<Vec<ExecArena>>,
+}
+
+impl Clone for SimBackend {
+    fn clone(&self) -> Self {
+        Self {
+            num_classes: self.num_classes,
+            buckets: self.buckets.clone(),
+            blocks: self.blocks.clone(),
+            in_shapes: self.in_shapes.clone(),
+            out_shapes: self.out_shapes.clone(),
+            seed: self.seed,
+            mode: self.mode,
+            exec_threads: self.exec_threads,
+            // scratch is value-free state: a clone starts with an empty pool
+            // and re-grows (or re-warms) its own arenas
+            arena_pool: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl SimBackend {
     /// Build the backend for `profile` (must be the MobileNetV2 block graph
     /// this module implements — shapes are cross-checked) padding batches
     /// to `buckets`. Same `seed` => bitwise-identical weights.
+    ///
+    /// The execution engine defaults to the arena path with
+    /// `JDOB_EXEC_THREADS` shards (available parallelism capped at 8 when
+    /// unset); `JDOB_EXEC_REFERENCE=1` selects the reference path. Both
+    /// knobs also have builder equivalents ([`Self::with_exec_threads`],
+    /// [`Self::reference_exec`]).
     pub fn from_profile(profile: &ModelProfile, buckets: &[usize], seed: u64) -> Result<Self> {
         ensure!(
             profile.n_blocks == N_BLOCKS,
@@ -408,6 +733,9 @@ impl SimBackend {
             in_shapes,
             out_shapes,
             seed,
+            mode: env_exec_mode(),
+            exec_threads: env_exec_threads(),
+            arena_pool: Mutex::new(Vec::new()),
         })
     }
 
@@ -425,7 +753,86 @@ impl SimBackend {
         self.seed
     }
 
-    /// Forward of block `n` on exactly `bsz` samples (no bucket padding).
+    /// Force the arena engine with exactly `threads` sample-major shards
+    /// (1 = serial arena path). Overrides both environment knobs.
+    pub fn with_exec_threads(mut self, threads: usize) -> Self {
+        self.mode = ExecMode::Arena;
+        self.exec_threads = threads.max(1);
+        self
+    }
+
+    /// Select the retained reference scalar path — the allocating kernels
+    /// the arena engine is verified against (`tests/exec_bitwise.rs`).
+    pub fn reference_exec(mut self) -> Self {
+        self.mode = ExecMode::Reference;
+        self
+    }
+
+    fn take_arena(&self) -> ExecArena {
+        self.arena_pool
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn put_arena(&self, ar: ExecArena) {
+        self.arena_pool.lock().unwrap_or_else(|e| e.into_inner()).push(ar);
+    }
+
+    /// Shard size the parallel path uses for a bucket-sized batch.
+    fn shard_bsz(&self, bucket: usize) -> usize {
+        if self.exec_threads > 1 && bucket >= PAR_MIN_BATCH {
+            bucket.div_ceil(self.exec_threads.min(bucket))
+        } else {
+            bucket
+        }
+    }
+
+    /// Scratch requirements of block `n` executed at `bucket` (padding at
+    /// the full bucket; kernel scratch at the shard size, since that is the
+    /// largest batch any single arena sees on the parallel path).
+    fn arena_req(&self, n: usize, bucket: usize) -> ArenaReq {
+        let b = self.shard_bsz(bucket);
+        let shape = &self.in_shapes[n - 1];
+        let mut r = ArenaReq {
+            padded: bucket * self.in_elems(n),
+            ..Default::default()
+        };
+        match &self.blocks[n - 1] {
+            SimBlock::Stem(_) => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let ho = (h - 1) / 2 + 1;
+                let wo = (w - 1) / 2 + 1;
+                r.mid = b * ho * wo * 9 * c;
+            }
+            SimBlock::Stage(units) => {
+                let (mut h, mut w) = (shape[0], shape[1]);
+                for (i, u) in units.iter().enumerate() {
+                    let ho = (h - 1) / u.stride + 1;
+                    let wo = (w - 1) / u.stride + 1;
+                    if u.expand.is_some() {
+                        r.mid = r.mid.max(b * h * w * u.cmid);
+                    }
+                    r.yd = r.yd.max(b * ho * wo * u.cmid);
+                    if i + 1 < units.len() {
+                        r.ping = r.ping.max(b * ho * wo * u.cout);
+                    }
+                    h = ho;
+                    w = wo;
+                }
+            }
+            SimBlock::Head { head, .. } => {
+                let (h, w, _) = (shape[0], shape[1], shape[2]);
+                r.mid = b * h * w * head.cout;
+                r.yd = b * head.cout;
+            }
+        }
+        r
+    }
+
+    /// Reference forward of block `n` on exactly `bsz` samples (no bucket
+    /// padding) — the original allocating path, kept as the oracle.
     fn forward_block(&self, n: usize, x: &[f32], bsz: usize) -> Vec<f32> {
         let shape = &self.in_shapes[n - 1];
         match &self.blocks[n - 1] {
@@ -455,6 +862,206 @@ impl SimBackend {
             }
         }
     }
+
+    /// Arena forward of block `n` on exactly `bsz` samples, serial, writing
+    /// the full `bsz * out_elems(n)` result into `out`.
+    fn exec_block_into(
+        &self,
+        n: usize,
+        x: &[f32],
+        bsz: usize,
+        ar: &mut ExecArena,
+        out: &mut [f32],
+    ) {
+        let shape = &self.in_shapes[n - 1];
+        match &self.blocks[n - 1] {
+            SimBlock::Stem(lin) => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let ho = (h - 1) / 2 + 1;
+                let wo = (w - 1) / 2 + 1;
+                let k = 9 * c;
+                let n_cols = bsz * ho * wo * k;
+                grow(&mut ar.mid, n_cols);
+                im2col3x3_into(x, bsz, h, w, c, 2, &mut ar.mid[..n_cols]);
+                matmul_bias_act_into(
+                    &ar.mid[..n_cols],
+                    bsz * ho * wo,
+                    k,
+                    &lin.w,
+                    lin.cout,
+                    &lin.b,
+                    Act::Relu6,
+                    out,
+                );
+            }
+            SimBlock::Stage(units) => {
+                let (mut h, mut w) = (shape[0], shape[1]);
+                let last = units.len() - 1;
+                // take the ping-pong halves out of the arena so the
+                // remaining fields stay borrowable for unit scratch
+                let mut a_buf = std::mem::take(&mut ar.ping);
+                let mut b_buf = std::mem::take(&mut ar.pong);
+                let mut cur_len = 0usize;
+                for (i, u) in units.iter().enumerate() {
+                    let ho = (h - 1) / u.stride + 1;
+                    let wo = (w - 1) / u.stride + 1;
+                    let src_is_input = i == 0;
+                    if i == last {
+                        let src: &[f32] = if src_is_input { x } else { &a_buf[..cur_len] };
+                        u.forward_into(src, bsz, h, w, &mut ar.mid, &mut ar.yd, out);
+                    } else {
+                        let out_len = bsz * ho * wo * u.cout;
+                        grow(&mut b_buf, out_len);
+                        let src: &[f32] = if src_is_input { x } else { &a_buf[..cur_len] };
+                        u.forward_into(
+                            src,
+                            bsz,
+                            h,
+                            w,
+                            &mut ar.mid,
+                            &mut ar.yd,
+                            &mut b_buf[..out_len],
+                        );
+                        std::mem::swap(&mut a_buf, &mut b_buf);
+                        cur_len = out_len;
+                    }
+                    h = ho;
+                    w = wo;
+                }
+                ar.ping = a_buf;
+                ar.pong = b_buf;
+            }
+            SimBlock::Head { head, cls } => {
+                let (h, w, c) = (shape[0], shape[1], shape[2]);
+                let n_mid = bsz * h * w * head.cout;
+                grow(&mut ar.mid, n_mid);
+                matmul_bias_act_into(
+                    x,
+                    bsz * h * w,
+                    c,
+                    &head.w,
+                    head.cout,
+                    &head.b,
+                    Act::Relu6,
+                    &mut ar.mid[..n_mid],
+                );
+                let n_pool = bsz * head.cout;
+                grow(&mut ar.yd, n_pool);
+                global_avg_pool_into(&ar.mid[..n_mid], bsz, h, w, head.cout, &mut ar.yd[..n_pool]);
+                matmul_bias_act_into(
+                    &ar.yd[..n_pool],
+                    bsz,
+                    cls.cin,
+                    &cls.w,
+                    cls.cout,
+                    &cls.b,
+                    Act::None,
+                    out,
+                );
+            }
+        }
+    }
+
+    /// Arena forward with sample-major sharding: batches of at least
+    /// [`PAR_MIN_BATCH`] split across `exec_threads` scoped threads, each
+    /// with its own arena. Bitwise equal to the serial path because every
+    /// kernel is sample-independent.
+    fn exec_block(&self, n: usize, x: &[f32], bsz: usize, ar: &mut ExecArena, out: &mut [f32]) {
+        let shards = self.exec_threads.min(bsz);
+        if shards <= 1 || bsz < PAR_MIN_BATCH {
+            self.exec_block_into(n, x, bsz, ar, out);
+            return;
+        }
+        let in_elems = self.in_elems(n);
+        let out_elems = self.out_elems(n);
+        let chunk = bsz.div_ceil(shards);
+        std::thread::scope(|s| {
+            let mut xs = x.chunks(chunk * in_elems);
+            let mut outs = out.chunks_mut(chunk * out_elems);
+            let head = xs.next().zip(outs.next());
+            for (xc, oc) in xs.zip(outs) {
+                s.spawn(move || {
+                    let mut shard_ar = self.take_arena();
+                    self.exec_block_into(n, xc, xc.len() / in_elems, &mut shard_ar, oc);
+                    self.put_arena(shard_ar);
+                });
+            }
+            // first shard on the calling thread, with the caller's arena
+            if let Some((xc, oc)) = head {
+                self.exec_block_into(n, xc, xc.len() / in_elems, ar, oc);
+            }
+        });
+    }
+
+    /// Shared `run_block` validation; returns (bucket, in_elems, out_elems).
+    fn validate_run(&self, n: usize, input: &[f32], batch: usize) -> Result<(usize, usize, usize)> {
+        ensure!(
+            (1..=N_BLOCKS).contains(&n),
+            "block {n} out of range 1..={N_BLOCKS}"
+        );
+        ensure!(batch >= 1, "batch must be >= 1");
+        let in_elems = self.in_elems(n);
+        ensure!(
+            input.len() == batch * in_elems,
+            "block {n}: input len {} != batch {batch} x {in_elems}",
+            input.len()
+        );
+        let bucket = self.bucket_for(batch);
+        ensure!(
+            batch <= bucket,
+            "batch {batch} exceeds the largest bucket {bucket}"
+        );
+        Ok((bucket, in_elems, self.out_elems(n)))
+    }
+
+    /// Reference `run_block`: pad-allocate, forward, truncate.
+    fn run_block_reference(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let (bucket, in_elems, out_elems) = self.validate_run(n, input, batch)?;
+        let out = if batch == bucket {
+            self.forward_block(n, input, batch)
+        } else {
+            let mut padded = vec![0f32; bucket * in_elems];
+            padded[..input.len()].copy_from_slice(input);
+            self.forward_block(n, &padded, bucket)
+        };
+        let mut v = out;
+        v.truncate(batch * out_elems);
+        Ok(v)
+    }
+
+    /// Arena `run_block`: stage padding in the arena, execute at bucket
+    /// size into the caller's (grow-only) buffer, truncate the padding off.
+    /// Steady state touches no allocator.
+    fn run_block_arena(
+        &self,
+        n: usize,
+        input: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let (bucket, in_elems, out_elems) = self.validate_run(n, input, batch)?;
+        let mut ar = self.take_arena();
+        let mut padded = std::mem::take(&mut ar.padded);
+        let need_out = bucket * out_elems;
+        grow(out, need_out);
+        {
+            let src: &[f32] = if batch == bucket {
+                input
+            } else {
+                let need_in = bucket * in_elems;
+                grow(&mut padded, need_in);
+                padded[..input.len()].copy_from_slice(input);
+                // the staging buffer is reused: clear the pad tail every call
+                padded[input.len()..need_in].fill(0.0);
+                &padded[..need_in]
+            };
+            self.exec_block(n, src, bucket, &mut ar, &mut out[..need_out]);
+        }
+        ar.padded = padded;
+        self.put_arena(ar);
+        out.truncate(batch * out_elems);
+        Ok(())
+    }
 }
 
 impl InferenceBackend for SimBackend {
@@ -483,7 +1090,7 @@ impl InferenceBackend for SimBackend {
     }
 
     fn warmup(&self, pairs: &[(usize, usize)]) -> Result<()> {
-        // Nothing to compile; validate the request like the PJRT path would.
+        // Validate the request like the PJRT path would...
         for &(n, b) in pairs {
             ensure!(
                 (1..=N_BLOCKS).contains(&n),
@@ -491,39 +1098,53 @@ impl InferenceBackend for SimBackend {
             );
             ensure!(b >= 1, "warmup: batch must be >= 1");
         }
+        // ...then pre-size the arena pool for every declared pair, so the
+        // first serving window pays no one-time allocation spikes (the sim
+        // analogue of the PJRT compile cache).
+        if self.mode == ExecMode::Arena {
+            let mut req = ArenaReq::default();
+            for &(n, b) in pairs {
+                req.max_with(self.arena_req(n, self.bucket_for(b)));
+            }
+            let want = self.exec_threads.max(1);
+            let mut pool = self.arena_pool.lock().unwrap_or_else(|e| e.into_inner());
+            while pool.len() < want {
+                pool.push(ExecArena::default());
+            }
+            for ar in pool.iter_mut() {
+                ar.grow_to(&req);
+            }
+        }
         Ok(())
     }
 
     fn run_block(&self, n: usize, input: &[f32], batch: usize) -> Result<Vec<f32>> {
-        ensure!(
-            (1..=N_BLOCKS).contains(&n),
-            "block {n} out of range 1..={N_BLOCKS}"
-        );
-        ensure!(batch >= 1, "batch must be >= 1");
-        let in_elems = self.in_elems(n);
-        ensure!(
-            input.len() == batch * in_elems,
-            "block {n}: input len {} != batch {batch} x {in_elems}",
-            input.len()
-        );
+        match self.mode {
+            ExecMode::Reference => self.run_block_reference(n, input, batch),
+            ExecMode::Arena => {
+                let mut out = Vec::new();
+                self.run_block_arena(n, input, batch, &mut out)?;
+                Ok(out)
+            }
+        }
+    }
 
-        // Zero-pad to the bucket, execute at bucket size, slice padding off —
-        // the same cost/shape semantics as the compiled PJRT executables.
-        let bucket = self.bucket_for(batch);
-        ensure!(
-            batch <= bucket,
-            "batch {batch} exceeds the largest bucket {bucket}"
-        );
-        let out = if batch == bucket {
-            self.forward_block(n, input, batch)
-        } else {
-            let mut padded = vec![0f32; bucket * in_elems];
-            padded[..input.len()].copy_from_slice(input);
-            self.forward_block(n, &padded, bucket)
-        };
-        let mut v = out;
-        v.truncate(batch * self.out_elems(n));
-        Ok(v)
+    fn run_block_into(
+        &self,
+        n: usize,
+        input: &[f32],
+        batch: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        match self.mode {
+            ExecMode::Arena => self.run_block_arena(n, input, batch, out),
+            ExecMode::Reference => {
+                let v = self.run_block_reference(n, input, batch)?;
+                out.clear();
+                out.extend_from_slice(&v);
+                Ok(())
+            }
+        }
     }
 }
 
@@ -544,6 +1165,26 @@ mod tests {
         // relu6 clamps
         let y = matmul_bias_act(&[1.0, 2.0, 3.0, 4.0], 2, 2, &[5.0, 6.0], 1, &[1.0], Act::Relu6);
         assert_eq!(y, vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_into_matches_reference_kernel() {
+        // dims straddling the register tile (cols % COL_TILE != 0) and an
+        // exact zero in x to hit the skip path in both kernels
+        let (rows, k, cols) = (3, 5, 13);
+        let mut rng = Rng::seed_from_u64(99);
+        let mut x: Vec<f32> = (0..rows * k).map(|_| rng.gen_range(-1.0, 1.0) as f32).collect();
+        x[7] = 0.0;
+        let w: Vec<f32> = (0..k * cols).map(|_| rng.gen_range(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..cols).map(|_| rng.gen_range(-1.0, 1.0) as f32).collect();
+        for act in [Act::None, Act::Relu6] {
+            let want = matmul_bias_act(&x, rows, k, &w, cols, &b, act);
+            let mut got = vec![7.0f32; rows * cols]; // dirty: must be overwritten
+            matmul_bias_act_into(&x, rows, k, &w, cols, &b, act, &mut got);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "{act:?}");
+        }
     }
 
     #[test]
@@ -619,6 +1260,65 @@ mod tests {
     }
 
     #[test]
+    fn arena_engine_matches_reference_bitwise() {
+        let arena = small().with_exec_threads(1);
+        let parallel = small().with_exec_threads(3);
+        let oracle = small().reference_exec();
+        let mut rng = Rng::seed_from_u64(0xA1);
+        for n in 1..=N_BLOCKS {
+            let elems = oracle.in_elems(n);
+            for batch in [1usize, 3] {
+                // batch 3 pads to bucket 4: exercises the staging buffer
+                let x: Vec<f32> =
+                    (0..batch * elems).map(|_| rng.gen_range(-1.0, 1.0) as f32).collect();
+                let want: Vec<u32> = oracle
+                    .run_block(n, &x, batch)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                for (tag, be) in [("serial", &arena), ("parallel", &parallel)] {
+                    let got: Vec<u32> = be
+                        .run_block(n, &x, batch)
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(want, got, "block {n} batch {batch} ({tag})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_block_into_reuses_dirty_buffer() {
+        // a stale, oversized output buffer from a *different* block must not
+        // leak into the result (the engine reuses one buffer across blocks)
+        let be = small().with_exec_threads(1);
+        let x1: Vec<f32> = (0..be.in_elems(1)).map(|i| (i % 13) as f32 / 13.0).collect();
+        let x9: Vec<f32> = (0..be.in_elems(9)).map(|i| (i % 17) as f32 / 17.0).collect();
+        let mut out = Vec::new();
+        be.run_block_into(1, &x1, 1, &mut out).unwrap(); // large
+        be.run_block_into(9, &x9, 1, &mut out).unwrap(); // small, reuses buffer
+        assert_eq!(out, be.run_block(9, &x9, 1).unwrap());
+        assert_eq!(out.len(), be.out_elems(9));
+    }
+
+    #[test]
+    fn warmup_presizes_arena_pool() {
+        let be = small().with_exec_threads(2);
+        let pairs: Vec<(usize, usize)> = (1..=N_BLOCKS).flat_map(|n| [(n, 1), (n, 4)]).collect();
+        be.warmup(&pairs).unwrap();
+        let pool = be.arena_pool.lock().unwrap();
+        assert_eq!(pool.len(), 2);
+        for ar in pool.iter() {
+            assert!(!ar.mid.is_empty(), "warmup left mid scratch unsized");
+            assert!(!ar.padded.is_empty(), "warmup left padding staging unsized");
+            assert_eq!(ar.ping.len(), ar.pong.len());
+        }
+    }
+
+    #[test]
     fn rejects_bad_inputs() {
         let be = small();
         assert!(be.run_block(1, &[0.0; 7], 1).is_err());
@@ -627,6 +1327,9 @@ mod tests {
         assert!(be.warmup(&[(0, 1)]).is_err());
         assert!(be.warmup(&[(1, 0)]).is_err());
         assert!(be.warmup(&[(1, 1), (9, 32)]).is_ok());
+        // the _into entry point validates identically
+        let mut out = Vec::new();
+        assert!(be.run_block_into(1, &[0.0; 7], 1, &mut out).is_err());
     }
 
     #[test]

@@ -63,7 +63,9 @@ where
 
 /// [`run_pipelined`] with a readiness gate: the planner admits no work
 /// until the executor sends `true` on the gate (e.g. after constructing a
-/// non-`Send` backend on its own thread).  `false` — or a dropped sender —
+/// non-`Send` backend on its own thread *and* warming it up — the server
+/// pre-sizes exec arenas / compile caches behind this gate so window 0
+/// pays no one-time spike).  `false` — or a dropped sender —
 /// skips the event loop entirely, so a failed executor setup fails fast
 /// instead of parking clients behind a window that will never be served;
 /// `execute`'s result (typically the setup error) is still returned.

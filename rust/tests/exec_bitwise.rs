@@ -1,0 +1,129 @@
+//! Bit-exactness property suite for the arena execution engine
+//! (`runtime/sim.rs`): for seeds × all 9 blocks × batches straddling the
+//! bucket boundaries, the arena path (serial and sample-major parallel)
+//! must be `to_bits`-identical to the retained reference scalar path.
+//!
+//! Why this can hold at all: f32 addition is non-associative, so the
+//! arena kernels keep the reference per-output accumulation order
+//! (ascending k with the exact-zero skip); the register tiling only
+//! regroups which outputs share a pass over the input, and the thread
+//! sharding splits along the sample axis, which no kernel sums across.
+
+use jdob::model::ModelProfile;
+use jdob::runtime::{InferenceBackend, SimBackend};
+use jdob::util::rng::Rng;
+
+const BUCKETS: &[usize] = &[1, 2, 4, 8];
+/// Batches chosen to hit exact-bucket, padded-bucket and largest-bucket
+/// slicing (buckets [1,2,4,8]: 3 and 5 pad, 8 saturates).
+const BATCHES: &[usize] = &[1, 2, 3, 5, 8];
+const SEEDS: &[u64] = &[7, 11, 42, 1234, 0x5EED_CAFE];
+
+fn backends(seed: u64) -> (SimBackend, SimBackend, SimBackend) {
+    let p = ModelProfile::mobilenet_v2(32, 10);
+    let serial = SimBackend::from_profile(&p, BUCKETS, seed).unwrap().with_exec_threads(1);
+    let parallel = SimBackend::from_profile(&p, BUCKETS, seed).unwrap().with_exec_threads(4);
+    let reference = SimBackend::from_profile(&p, BUCKETS, seed).unwrap().reference_exec();
+    (serial, parallel, reference)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn random_input(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_range(-1.0, 1.0) as f32).collect()
+}
+
+#[test]
+fn exec_bitwise_identity() {
+    for &seed in SEEDS {
+        let (serial, parallel, reference) = backends(seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xBEEF);
+        for n in 1..=reference.n_blocks() {
+            let elems = reference.in_elems(n);
+            for &batch in BATCHES {
+                let x = random_input(&mut rng, batch * elems);
+                let want = bits(&reference.run_block(n, &x, batch).unwrap());
+                let got = bits(&serial.run_block(n, &x, batch).unwrap());
+                assert_eq!(want, got, "seed {seed} block {n} batch {batch} (serial arena)");
+                let got_par = bits(&parallel.run_block(n, &x, batch).unwrap());
+                assert_eq!(want, got_par, "seed {seed} block {n} batch {batch} (parallel arena)");
+            }
+        }
+    }
+}
+
+#[test]
+fn tail_and_full_chains_are_bitwise_identical() {
+    let (serial, parallel, reference) = backends(3);
+    let mut rng = Rng::seed_from_u64(0xC0FFEE);
+    for cut in [0usize, 1, 4, 8, 9] {
+        let elems = reference.elems_at_cut(cut);
+        for &batch in &[1usize, 3, 8] {
+            let x = random_input(&mut rng, batch * elems);
+            let want = bits(&reference.run_tail(cut, &x, batch).unwrap());
+            for (tag, be) in [("serial", &serial), ("parallel", &parallel)] {
+                // the Vec-returning chain...
+                assert_eq!(
+                    want,
+                    bits(&be.run_tail(cut, &x, batch).unwrap()),
+                    "cut {cut} batch {batch} ({tag} run_tail)"
+                );
+                // ...and the engine's buffer-reusing chain, over dirty
+                // buffers left from the previous (cut, batch) iteration
+                let (mut out, mut scratch) = (vec![9.9f32; 5], Vec::new());
+                be.run_tail_into(cut, &x, batch, &mut out, &mut scratch).unwrap();
+                assert_eq!(want, bits(&out), "cut {cut} batch {batch} ({tag} run_tail_into)");
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_bucket_slicing_matches_per_sample_runs() {
+    // Per-sample independence on the arena path specifically: a padded
+    // batch (5 -> bucket 8) must reproduce each sample's b=1 result
+    // bitwise, including the final sample adjacent to the zero padding.
+    let (serial, parallel, _) = backends(21);
+    let mut rng = Rng::seed_from_u64(0xAB);
+    for be in [&serial, &parallel] {
+        for n in 1..=be.n_blocks() {
+            let elems = be.in_elems(n);
+            let out_elems = be.out_elems(n);
+            let batch = 5usize;
+            let x = random_input(&mut rng, batch * elems);
+            let batched = be.run_block(n, &x, batch).unwrap();
+            assert_eq!(batched.len(), batch * out_elems, "block {n}");
+            for s in 0..batch {
+                let single = be.run_block(n, &x[s * elems..(s + 1) * elems], 1).unwrap();
+                assert_eq!(
+                    bits(&single),
+                    bits(&batched[s * out_elems..(s + 1) * out_elems]),
+                    "block {n} sample {s}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warmup_does_not_change_results() {
+    // Pre-sizing arenas is invisible in the outputs: warmed and cold
+    // backends agree bitwise on every block.
+    let (cold, _, _) = backends(77);
+    let (warm, _, _) = backends(77);
+    let pairs: Vec<(usize, usize)> = (1..=warm.n_blocks())
+        .flat_map(|n| BUCKETS.iter().map(move |&b| (n, b)))
+        .collect();
+    warm.warmup(&pairs).unwrap();
+    let mut rng = Rng::seed_from_u64(0x77);
+    for n in 1..=cold.n_blocks() {
+        let x = random_input(&mut rng, 3 * cold.in_elems(n));
+        assert_eq!(
+            bits(&cold.run_block(n, &x, 3).unwrap()),
+            bits(&warm.run_block(n, &x, 3).unwrap()),
+            "block {n}"
+        );
+    }
+}

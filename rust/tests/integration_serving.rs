@@ -79,6 +79,39 @@ fn batched_logits_equal_individual_forwards() {
 }
 
 #[test]
+fn gathered_batch_payloads_are_bitwise_unchanged() {
+    // Regression for the clone-free gather: the engine now assembles the
+    // edge batch directly from request inputs into a reusable window
+    // buffer (no per-request `input.clone()`), and slices responses out of
+    // a reusable logits buffer. Response payloads must be *bitwise* what a
+    // per-request b=1 full forward produces — on SimBackend the batched
+    // tail is bitwise per-sample-independent, so run_full(input, 1) is an
+    // exact oracle for any partition the plan picked.
+    let c = ctx();
+    let rt = sim_backend();
+    let engine = ServingEngine::new(c.clone(), &rt, Box::new(JDob::full()));
+    let to_bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    // two consecutive windows, the second smaller: stale buffer contents
+    // from window 1 (larger batches) must not leak into window 2
+    for m in [4usize, 2] {
+        let reqs = mk_requests(&c, m, 30.25);
+        let out = engine.serve_window(&reqs, 0.0).unwrap();
+        assert_eq!(out.responses.len(), m, "window of {m}");
+        for (req, resp) in reqs.iter().zip(&out.responses) {
+            let direct = rt.run_full(&req.input, 1).unwrap();
+            assert_eq!(
+                to_bits(&direct),
+                to_bits(&resp.logits),
+                "window of {m}, user {} (offloaded={}, partition={})",
+                resp.user_id,
+                resp.offloaded,
+                resp.partition
+            );
+        }
+    }
+}
+
+#[test]
 fn mixed_deadlines_split_into_groups() {
     let c = ctx();
     let rt = sim_backend();

@@ -1,12 +1,11 @@
-//! Release-mode planner perf guard.  Ignored by default so `cargo test -q`
-//! stays deterministic-time; CI runs it explicitly:
+//! Release-mode planner + execution perf guards.  Ignored by default so
+//! `cargo test -q` stays deterministic-time; CI runs them explicitly:
 //!
 //! ```sh
 //! cargo test --release --test perf_smoke -- --ignored
 //! ```
 //!
-//! Two fences against gross planner regressions, without nightly criterion
-//! comparisons:
+//! Planner fences (without nightly criterion comparisons):
 //! * a *counted* fence — the workspace DP must issue ≥5x fewer inner-solve
 //!   invocations than the reference DP on the M = 32 horizon-replan
 //!   workload (counts are machine-independent, so this cannot flake on
@@ -15,16 +14,65 @@
 //!   window plan takes ~1-5 ms in release; budgeting 250 ms only trips on
 //!   order-of-magnitude regressions (e.g. the memoization silently
 //!   disabled), not on CI noise.
+//!
+//! Execution fences (the arena engine of `runtime/sim.rs`):
+//! * a *counted* zero-allocation fence — steady-state `run_block_into`
+//!   over every (block, bucket) pair must perform **zero** heap
+//!   allocations (a counting global allocator makes this exact, so it
+//!   cannot flake either); the serial path is fenced — `thread::scope`
+//!   itself allocates, so the parallel path is exercised by the chaos CI
+//!   leg instead;
+//! * a warmup fence — after `warmup()` pre-sized the arenas, even the
+//!   *first* call must not allocate (the run_pipelined window-0 property);
+//! * a *timed* throughput guard with a very generous floor.
 
 mod common;
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use common::{ctx, random_users};
 use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal_grouping_ws};
 use jdob::algo::jdob::JDob;
 use jdob::algo::{CountingSolver, PlannerWorkspace};
+use jdob::model::ModelProfile;
+use jdob::runtime::{InferenceBackend, SimBackend};
 use jdob::util::rng::Rng;
+
+/// Counts allocator calls (alloc/realloc; frees don't matter for the
+/// fence). Test-binary-only code — the library itself never sees this.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
 
 #[test]
 #[ignore = "release-mode perf smoke; CI runs it via --ignored"]
@@ -66,5 +114,102 @@ fn perf_smoke_planner_m32() {
         per_plan < 0.25,
         "memoized M=32 plan took {:.1} ms (expected single-digit ms in release)",
         per_plan * 1e3
+    );
+}
+
+const EXEC_BUCKETS: &[usize] = &[1, 2, 4, 8];
+
+fn exec_backend() -> SimBackend {
+    SimBackend::from_profile(&ModelProfile::mobilenet_v2(32, 10), EXEC_BUCKETS, 7)
+        .unwrap()
+        .with_exec_threads(1)
+}
+
+/// All (block, bucket) cases with a deterministic input each.
+fn exec_cases(be: &SimBackend) -> Vec<(usize, usize, Vec<f32>)> {
+    let mut cases = Vec::new();
+    for n in 1..=be.n_blocks() {
+        for &b in EXEC_BUCKETS {
+            let input: Vec<f32> =
+                (0..b * be.in_elems(n)).map(|i| ((i % 89) as f32) / 89.0 - 0.5).collect();
+            cases.push((n, b, input));
+        }
+    }
+    cases
+}
+
+#[test]
+#[ignore = "release-mode perf smoke; CI runs it via --ignored"]
+fn perf_smoke_exec_zero_alloc_steady_state() {
+    let be = exec_backend();
+    let cases = exec_cases(&be);
+    let mut out = Vec::new();
+    // settle: first pass grows arenas + the output buffer to their maxima
+    for (n, b, input) in &cases {
+        be.run_block_into(*n, input, *b, &mut out).unwrap();
+    }
+    let before = allocs();
+    for _ in 0..3 {
+        for (n, b, input) in &cases {
+            be.run_block_into(*n, input, *b, &mut out).unwrap();
+        }
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state run_block_into allocated ({} calls over {} cases)",
+        3 * cases.len(),
+        cases.len()
+    );
+}
+
+#[test]
+#[ignore = "release-mode perf smoke; CI runs it via --ignored"]
+fn perf_smoke_exec_warmup_presizes_first_call() {
+    let be = exec_backend();
+    let pairs: Vec<(usize, usize)> = (1..=be.n_blocks())
+        .flat_map(|n| EXEC_BUCKETS.iter().map(move |&b| (n, b)))
+        .collect();
+    be.warmup(&pairs).unwrap();
+    // bucket-exact batch (no padding staging) and a pre-reserved output:
+    // with warmed arenas the very first execution must already be
+    // allocation-free — the property that keeps run_pipelined's window 0
+    // inside the same envelope as window k.
+    let n = 1;
+    let b = 8;
+    let input: Vec<f32> = (0..b * be.in_elems(n)).map(|i| (i % 7) as f32).collect();
+    let mut out = Vec::with_capacity(b * be.out_elems(n));
+    let before = allocs();
+    be.run_block_into(n, &input, b, &mut out).unwrap();
+    assert_eq!(allocs() - before, 0, "first post-warmup run_block_into allocated");
+    // padded batches stage through the warmed arena, still without allocating
+    let input3: Vec<f32> = input[..3 * be.in_elems(n)].to_vec();
+    let before = allocs();
+    be.run_block_into(n, &input3, 3, &mut out).unwrap();
+    assert_eq!(allocs() - before, 0, "padded post-warmup run_block_into allocated");
+}
+
+#[test]
+#[ignore = "release-mode perf smoke; CI runs it via --ignored"]
+fn perf_smoke_exec_throughput_guard() {
+    // Very generous floor: the 32px graph at bucket 8 sustains thousands
+    // of samples/s in release; 50/s only trips on order-of-magnitude
+    // regressions (e.g. the arena path silently falling back to
+    // per-call allocation plus debug-grade kernels), never on CI noise.
+    let be = exec_backend();
+    let batch = 8;
+    let input: Vec<f32> = (0..batch * be.in_elems(1)).map(|i| ((i % 97) as f32) / 97.0).collect();
+    be.run_full(&input, batch).unwrap(); // settle arenas
+    let reps = 3;
+    let start = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(be.run_full(&input, batch).unwrap());
+    }
+    let per_sample = start.elapsed().as_secs_f64() / (reps * batch) as f64;
+    assert!(
+        per_sample < 0.02,
+        "full forward took {:.2} ms/sample at bucket {batch} (floor: 20 ms/sample)",
+        per_sample * 1e3
     );
 }
