@@ -117,6 +117,9 @@ impl SystemConfig {
         if self.bandwidth_hz <= 0.0 || self.p_tx_w < 0.0 {
             bail!("channel parameters invalid");
         }
+        if let Err(e) = crate::util::try_shannon_rate_bps(self.bandwidth_hz, self.snr_db) {
+            bail!("uplink channel invalid: {e}");
+        }
         if self.alpha <= 0.0 || self.eta <= 0.0 {
             bail!("alpha/eta must be positive");
         }
@@ -284,6 +287,19 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = SystemConfig::default();
         c.buckets = vec![2, 4];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_uplink_channel() {
+        let mut c = SystemConfig::default();
+        c.snr_db = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.snr_db = -30.0;
+        assert!(c.validate().is_err());
+        let mut c = SystemConfig::default();
+        c.bandwidth_hz = f64::INFINITY;
         assert!(c.validate().is_err());
     }
 }

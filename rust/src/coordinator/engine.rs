@@ -31,6 +31,9 @@
 //!    │ transient fault (bounded retries,
 //!    │ virtual backoff billed to the GPU clock)
 //!    ├──retry ok───────────────────────────► Degraded (served, retried)
+//!    │ upload straggles past straggler_budget_s
+//!    │ (or never arrives) — evicted at batch
+//!    ├──form time, replanned/local──────────► Degraded (served off-batch)
 //!    │ hang (virtual timeout) / retries exhausted / permanent fault
 //!    ├──remainder replanned (≤ max_replans,
 //!    │  at the fault-corrected horizon)─────► Degraded (served off-plan)
@@ -38,6 +41,16 @@
 //!    └──local fallback also fails───────────► Failed  (recorded, never
 //!                                                      panicked)
 //! ```
+//!
+//! The uplink side is faulted by an optional [`ChannelModel`]
+//! ([`crate::runtime::netchaos`], attached via
+//! [`ServingEngine::with_channel`]): at batch-form time every offloaded
+//! member's upload is pushed through the channel, members whose uploads
+//! run more than [`RecoveryPolicy::straggler_budget_s`] behind their
+//! planned `tx_latency` (Eq. 4) are **evicted** — the batch launches
+//! without them, waiting at most the budget — and all actual transmission
+//! energy (retransmits, wasted partial uploads) is billed to
+//! [`EnergyLedger::device_tx_j`], never silently absorbed.
 //!
 //! All fault time is **virtual** (see [`crate::runtime::chaos`]): hangs
 //! and retry backoff advance a virtual GPU clock, and successful-but-slow
@@ -67,6 +80,7 @@ use crate::coordinator::metrics::{GroupTelemetry, ServingMetrics};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestOutcome};
 use crate::energy::device::DeviceModel;
 use crate::runtime::chaos::{fault_class, FaultClass};
+use crate::runtime::netchaos::ChannelModel;
 use crate::runtime::InferenceBackend;
 use crate::sched::scheduler::{plan_window, Arrival, PlannedWindow, UserOutcome};
 use crate::util::TIME_EPS;
@@ -82,6 +96,12 @@ pub struct RecoveryPolicy {
     /// Remainder replans allowed per window after an unrecoverable group
     /// failure; 0 degrades straight to the local fallback.
     pub max_replans: usize,
+    /// How long (s) a batch may wait for an upload running behind its
+    /// planned `tx_latency` before the member is evicted and the batch
+    /// launches without it. Only consulted when a faulty [`ChannelModel`]
+    /// is attached; the wait is virtual (billed to the GPU horizon as a
+    /// launch delay), never a real sleep.
+    pub straggler_budget_s: f64,
 }
 
 impl Default for RecoveryPolicy {
@@ -90,6 +110,7 @@ impl Default for RecoveryPolicy {
             max_retries: 2,
             retry_backoff_s: 1e-3,
             max_replans: 1,
+            straggler_budget_s: 5e-3,
         }
     }
 }
@@ -131,9 +152,20 @@ struct WindowExec {
     metrics: ServingMetrics,
     responses: Vec<Option<InferenceResponse>>,
     /// Virtual absolute GPU-free time so far (advanced by successful
-    /// batches, drained skew, retry backoff and hang timeouts).
+    /// batches, drained skew, retry backoff, hang timeouts and bounded
+    /// straggler launch delays).
     gpu_free_abs: f64,
     buf: ExecBuffers,
+    /// Channel-corrected transmission energy per top-level slot, staged by
+    /// `apply_channel` for members that survived into the batch:
+    /// `(actual_tx_j, retransmit_component_j)`. Consumed (`take`) at
+    /// billing; `None` means the planned figure stands.
+    pending_tx: Vec<Option<(f64, f64)>>,
+    /// Transmission energy (J) burned on uploads that never produced a
+    /// batch launch for this slot (evicted stragglers, batches that failed
+    /// after channel passage). Carried until whatever path finally serves
+    /// the slot bills it — wasted uplink energy is never absorbed.
+    wasted_tx_j: Vec<f64>,
 }
 
 pub struct ServingEngine<'rt> {
@@ -145,6 +177,10 @@ pub struct ServingEngine<'rt> {
     /// the local fallback.
     pub solver: Option<Box<dyn GroupSolver>>,
     pub recovery: RecoveryPolicy,
+    /// Uplink channel model every offloaded upload passes through at
+    /// batch-form time. Defaults to [`ChannelModel::none`], whose path is
+    /// bit-transparent (no RNG draw, no arithmetic on planned figures).
+    pub channel: ChannelModel,
 }
 
 impl<'rt> ServingEngine<'rt> {
@@ -158,6 +194,7 @@ impl<'rt> ServingEngine<'rt> {
             runtime,
             solver: Some(solver),
             recovery: RecoveryPolicy::default(),
+            channel: ChannelModel::none(),
         }
     }
 
@@ -170,12 +207,21 @@ impl<'rt> ServingEngine<'rt> {
             runtime,
             solver: None,
             recovery: RecoveryPolicy::default(),
+            channel: ChannelModel::none(),
         }
     }
 
     /// Override the recovery policy (builder style).
     pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> Self {
         self.recovery = recovery;
+        self
+    }
+
+    /// Attach an uplink channel model (builder style). Composes with a
+    /// GPU-side [`crate::runtime::ChaosBackend`] for correlated
+    /// GPU+uplink fault runs.
+    pub fn with_channel(mut self, channel: ChannelModel) -> Self {
+        self.channel = channel;
         self
     }
 
@@ -243,7 +289,12 @@ impl<'rt> ServingEngine<'rt> {
             responses: vec![None; requests.len()],
             gpu_free_abs: planned.close + planned.rel_t_free,
             buf: ExecBuffers::default(),
+            pending_tx: vec![None; requests.len()],
+            wasted_tx_j: vec![0.0; requests.len()],
         };
+        // sheds happened upstream (admission gate) but are reported per
+        // window, so the executor carries the count into its metrics
+        st.metrics.shed_requests = planned.shed;
         let slots: Vec<usize> = (0..requests.len()).collect();
         self.execute_planned(requests, planned, &slots, &mut st, self.recovery.max_replans);
 
@@ -257,7 +308,9 @@ impl<'rt> ServingEngine<'rt> {
                 let msg = "no execution path produced a result".to_string();
                 st.metrics.failed_requests += 1;
                 st.metrics.fault_log.push(format!("user {}: {msg}", oc.user_id));
-                st.ledger.record_request(0.0, 0.0, false);
+                // even a failed slot pays for uploads it burned on the way
+                let wasted = std::mem::take(&mut st.wasted_tx_j[ri]);
+                st.ledger.record_request_tx(0.0, wasted, wasted, false);
                 st.responses[ri] = Some(InferenceResponse {
                     user_id: oc.user_id,
                     logits: Vec::new(),
@@ -308,6 +361,7 @@ impl<'rt> ServingEngine<'rt> {
         replans_left: usize,
     ) {
         let mut failure: Option<anyhow::Error> = None;
+        let mut evicted_all: Vec<usize> = Vec::new();
         if let Some(gp) = &planned.grouped {
             // each group was planned against the previous group's GPU-free end
             let mut t_free_check = planned.rel_t_free;
@@ -342,13 +396,35 @@ impl<'rt> ServingEngine<'rt> {
                     continue;
                 }
 
+                // batch formation: every upload passes through the uplink
+                // channel; stragglers past the budget are evicted so the
+                // batch never waits longer than straggler_budget_s
+                let (surviving, launch_delay, evicted) =
+                    self.apply_channel(planned, plan, &offloaded, slots, st);
+                evicted_all.extend(evicted);
+                if surviving.is_empty() {
+                    // every upload straggled or died: nothing to batch, the
+                    // GPU slot goes unused and the members are re-served
+                    // through the straggler path below
+                    st.metrics.fault_log.push(format!(
+                        "group (partition {}, batch {}): entire offload set evicted; \
+                         batch skipped",
+                        plan.partition,
+                        offloaded.len()
+                    ));
+                    continue;
+                }
+                st.metrics.max_straggler_wait_s =
+                    st.metrics.max_straggler_wait_s.max(launch_delay);
+
                 match self.run_edge_batch(
                     requests,
                     planned,
                     slots,
                     plan,
                     planned_span,
-                    &offloaded,
+                    &surviving,
+                    launch_delay,
                     st,
                 ) {
                     Ok(retries) => {
@@ -356,7 +432,14 @@ impl<'rt> ServingEngine<'rt> {
                     }
                     Err(cause) => {
                         // this group is lost; everything planned behind it
-                        // degrades through the remainder path
+                        // degrades through the remainder path — including
+                        // the already-delivered uploads, whose energy moves
+                        // to the wasted pool so the fallback still bills it
+                        for &(wi, _) in &surviving {
+                            if let Some((actual_j, _)) = st.pending_tx[slots[wi]].take() {
+                                st.wasted_tx_j[slots[wi]] += actual_j;
+                            }
+                        }
                         failure = Some(cause);
                         break;
                     }
@@ -364,8 +447,29 @@ impl<'rt> ServingEngine<'rt> {
             }
         }
 
-        if let Some(cause) = failure {
-            self.degrade_remainder(requests, planned, slots, st, replans_left, cause);
+        match failure {
+            Some(cause) => {
+                // the remainder path re-serves every unserved eligible
+                // member, evicted stragglers included
+                self.degrade_remainder(requests, planned, slots, st, replans_left, cause);
+            }
+            None => {
+                // no group failure, but stragglers evicted at batch-form
+                // time still need serving: replan them at the corrected
+                // horizon (or let the local loop below absorb them)
+                let stranded: Vec<usize> = evicted_all
+                    .into_iter()
+                    .filter(|&eidx| st.responses[slots[planned.eligible_pos[eidx]]].is_none())
+                    .collect();
+                if !stranded.is_empty() {
+                    st.metrics.degraded_requests += stranded.len();
+                    st.metrics.fault_log.push(format!(
+                        "{} straggler(s) evicted; replanning at the corrected horizon",
+                        stranded.len()
+                    ));
+                    self.replan_members(requests, planned, slots, st, replans_left, &stranded);
+                }
+            }
         }
 
         // Local service for every slot without a response yet: plan-local
@@ -376,18 +480,83 @@ impl<'rt> ServingEngine<'rt> {
             if st.responses[slot].is_some() {
                 continue;
             }
+            // uplink energy burned before this slot degraded to local
+            // service (evicted straggler uploads, failed-batch uploads)
+            let extra_tx = std::mem::take(&mut st.wasted_tx_j[slot]);
             let resp = if oc.in_plan && oc.offloaded {
                 // a planned offload member only reaches the local path
                 // through degradation: re-bill as deadline-optimal local
                 // service anchored at the fault-detection time, not as the
                 // offload that never happened
                 let corrected = self.degraded_outcome(planned, wi, st.gpu_free_abs);
-                self.run_local(requests[slot].borrow(), &corrected, true, st)
+                self.run_local(requests[slot].borrow(), &corrected, true, extra_tx, st)
             } else {
-                self.run_local(requests[slot].borrow(), oc, false, st)
+                self.run_local(requests[slot].borrow(), oc, false, extra_tx, st)
             };
             st.responses[slot] = Some(resp);
         }
+    }
+
+    /// Batch formation against the uplink channel: push every offloaded
+    /// member's upload through [`ChannelModel::transmit`] and split the
+    /// group into survivors (upload landed within
+    /// [`RecoveryPolicy::straggler_budget_s`] of its planned `tx_latency`)
+    /// and evicted stragglers. Returns `(survivors, launch_delay_s,
+    /// evicted_eligible_indices)`; the launch delay is the slowest
+    /// surviving upload's lateness, by construction `<= straggler_budget_s`.
+    ///
+    /// The fault-free path returns the input verbatim without touching the
+    /// RNG or any planned figure — the zero-fault golden test pins this.
+    fn apply_channel(
+        &self,
+        planned: &PlannedWindow,
+        plan: &Plan,
+        offloaded: &[(usize, usize)],
+        slots: &[usize],
+        st: &mut WindowExec,
+    ) -> (Vec<(usize, usize)>, f64, Vec<usize>) {
+        if self.channel.is_fault_free() {
+            return (offloaded.to_vec(), 0.0, Vec::new());
+        }
+        let budget = self.recovery.straggler_budget_s;
+        let o_bits = self.ctx.tables.o(plan.partition);
+        let mut surviving = Vec::with_capacity(offloaded.len());
+        let mut evicted = Vec::new();
+        let mut launch_delay = 0.0f64;
+        for &(wi, eidx) in offloaded {
+            let u = &planned.eligible[eidx];
+            let planned_tx_s = u.dev.tx_latency(o_bits);
+            let planned_tx_j = planned.outcomes[wi].energy_tx_j;
+            let out = self.channel.transmit(planned_tx_s, planned_tx_j);
+            if out.attempts > 1 {
+                st.metrics.retransmits += (out.attempts - 1) as usize;
+            }
+            let late = out.actual_tx_s - planned_tx_s;
+            if !out.delivered || late > budget + TIME_EPS {
+                // evicted: the upload energy was burned for nothing here —
+                // park it on the slot so whatever path finally serves the
+                // request bills it
+                st.wasted_tx_j[slots[wi]] += out.actual_tx_j;
+                st.metrics.stragglers_evicted += 1;
+                st.metrics.fault_log.push(format!(
+                    "user {}: upload {} (+{:.3} ms over plan, budget {:.3} ms); \
+                     evicted from batch",
+                    u.id,
+                    if out.delivered { "straggled" } else { "undelivered" },
+                    late.max(0.0) * 1e3,
+                    budget * 1e3,
+                ));
+                evicted.push(eidx);
+            } else {
+                // survived: the actual (possibly retransmitted) tx energy
+                // replaces the planned figure at billing time
+                st.pending_tx[slots[wi]] =
+                    Some((out.actual_tx_j, (out.actual_tx_j - planned_tx_j).max(0.0)));
+                launch_delay = launch_delay.max(late.max(0.0));
+                surviving.push((wi, eidx));
+            }
+        }
+        (surviving, launch_delay, evicted)
     }
 
     fn telemetry(plan: &Plan, users: usize, retries: usize) -> GroupTelemetry {
@@ -416,6 +585,7 @@ impl<'rt> ServingEngine<'rt> {
         plan: &Plan,
         planned_span: f64,
         offloaded: &[(usize, usize)],
+        launch_delay: f64,
         st: &mut WindowExec,
     ) -> Result<usize> {
         let mut attempt = 0usize;
@@ -427,6 +597,7 @@ impl<'rt> ServingEngine<'rt> {
                 plan,
                 planned_span,
                 offloaded,
+                launch_delay,
                 attempt,
                 st,
             ) {
@@ -467,6 +638,7 @@ impl<'rt> ServingEngine<'rt> {
         plan: &Plan,
         planned_span: f64,
         offloaded: &[(usize, usize)],
+        launch_delay: f64,
         attempt: usize,
         st: &mut WindowExec,
     ) -> Result<()> {
@@ -517,6 +689,9 @@ impl<'rt> ServingEngine<'rt> {
         } else {
             (st.gpu_free_abs + skew.apply(planned_span)).max(planned_end_abs)
         };
+        // bounded straggler wait shifts the whole launch; 0.0 on the
+        // nominal path, where `x + 0.0` is bitwise `x`
+        st.gpu_free_abs += launch_delay;
         // how far the batch finished behind its plan
         let slip = (st.gpu_free_abs - planned_end_abs).max(0.0);
 
@@ -542,7 +717,16 @@ impl<'rt> ServingEngine<'rt> {
                     st.metrics.exec_deadline_misses += 1;
                 }
             }
-            st.ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, met);
+            // channel-corrected uplink billing: the staged actual energy
+            // (plus anything wasted on earlier evictions of this slot)
+            // replaces the planned figure; all three extras are 0.0 on the
+            // nominal path, keeping the expression bitwise transparent
+            let wasted = std::mem::take(&mut st.wasted_tx_j[slots[wi]]);
+            let (actual_tx_j, retransmit_j) = match st.pending_tx[slots[wi]].take() {
+                Some((actual_j, extra_j)) => (actual_j + wasted, extra_j + wasted),
+                None => (oc.energy_tx_j + wasted, wasted),
+            };
+            st.ledger.record_request_tx(oc.energy_compute_j, actual_tx_j, retransmit_j, met);
             st.metrics.modeled_latency.record_s(latency);
             st.metrics.wall_latency.record_s(wall);
             st.responses[slots[wi]] = Some(InferenceResponse {
@@ -585,6 +769,24 @@ impl<'rt> ServingEngine<'rt> {
         if rem.is_empty() {
             return;
         }
+        self.replan_members(requests, planned, slots, st, replans_left, &rem);
+    }
+
+    /// Re-plan a set of still-unserved eligible members (`rem` holds
+    /// indices into `planned.eligible`) as a fresh window closing at the
+    /// corrected GPU horizon, and execute it recursively. Shared by the
+    /// group-failure remainder path and the straggler-eviction path; a
+    /// no-op (the local loop absorbs the members) when no solver or no
+    /// replan budget is available.
+    fn replan_members<Q: Borrow<InferenceRequest>>(
+        &self,
+        requests: &[Q],
+        planned: &PlannedWindow,
+        slots: &[usize],
+        st: &mut WindowExec,
+        replans_left: usize,
+        rem: &[usize],
+    ) {
         let solver = if replans_left > 0 {
             self.solver.as_deref()
         } else {
@@ -658,11 +860,17 @@ impl<'rt> ServingEngine<'rt> {
     /// fallback, or degraded), billed from its modeled outcome, with
     /// bounded transient retries. Infallible: an unrecoverable error
     /// becomes a terminal [`RequestOutcome::Failed`] response.
+    ///
+    /// `extra_tx_j` is uplink energy the device already burned on uploads
+    /// that never served this request (evicted straggler attempts,
+    /// failed-batch uploads); it is billed on top of the modeled figures —
+    /// 0.0 on the nominal path, keeping the billing bitwise transparent.
     fn run_local(
         &self,
         request: &InferenceRequest,
         oc: &UserOutcome,
         degraded: bool,
+        extra_tx_j: f64,
         st: &mut WindowExec,
     ) -> InferenceResponse {
         let t0 = Instant::now();
@@ -690,7 +898,12 @@ impl<'rt> ServingEngine<'rt> {
         let wall = t0.elapsed().as_secs_f64();
         match logits {
             Some(logits) => {
-                st.ledger.record_request(oc.energy_compute_j, oc.energy_tx_j, oc.deadline_met);
+                st.ledger.record_request_tx(
+                    oc.energy_compute_j,
+                    oc.energy_tx_j + extra_tx_j,
+                    extra_tx_j,
+                    oc.deadline_met,
+                );
                 st.metrics.modeled_latency.record_s(oc.latency_s);
                 st.metrics.wall_latency.record_s(wall);
                 st.metrics.local_samples += 1;
@@ -702,7 +915,7 @@ impl<'rt> ServingEngine<'rt> {
                     deadline_met: oc.deadline_met,
                     offloaded: false,
                     partition: oc.partition,
-                    device_energy_j: oc.device_energy_j(),
+                    device_energy_j: oc.device_energy_j() + extra_tx_j,
                     outcome: if degraded || attempt > 0 {
                         RequestOutcome::Degraded
                     } else {
@@ -720,7 +933,8 @@ impl<'rt> ServingEngine<'rt> {
                 st.metrics.failed_requests += 1;
                 st.metrics.wall_latency.record_s(wall);
                 // nothing useful was computed; bill the request as a miss
-                st.ledger.record_request(0.0, 0.0, false);
+                // (the wasted uplink energy was still burned)
+                st.ledger.record_request_tx(0.0, extra_tx_j, extra_tx_j, false);
                 InferenceResponse {
                     user_id: oc.user_id,
                     logits: Vec::new(),

@@ -1,10 +1,22 @@
 //! Energy & deadline ledger: accumulates the modeled energy of every served
 //! request, split by component, plus deadline compliance.
+//!
+//! `device_tx_j` is **actual** transmission energy: when a faulty uplink
+//! ([`crate::runtime::netchaos`]) forces retransmits or wasted partial
+//! uploads, the excess over the planned Eq. 4 figure is billed here too and
+//! additionally split out as `retransmit_tx_j` — so
+//! `device_tx_j - retransmit_tx_j` recovers the planned component, and
+//! fault energy never hides inside the nominal numbers.
 
 #[derive(Debug, Default, Clone)]
 pub struct EnergyLedger {
     pub device_compute_j: f64,
+    /// Actual device transmission energy, retransmits included.
     pub device_tx_j: f64,
+    /// The slice of `device_tx_j` beyond plan: retransmitted and wasted
+    /// (evicted-straggler) upload energy. Informational split — already
+    /// contained in `device_tx_j`, never added to `total_j` twice.
+    pub retransmit_tx_j: f64,
     pub edge_j: f64,
     pub requests: usize,
     pub deadline_hits: usize,
@@ -18,8 +30,22 @@ impl EnergyLedger {
         device_tx_j: f64,
         deadline_met: bool,
     ) {
+        self.record_request_tx(device_compute_j, device_tx_j, 0.0, deadline_met);
+    }
+
+    /// [`EnergyLedger::record_request`] with the actual transmission split:
+    /// `device_tx_j` is the full energy the device spent transmitting for
+    /// this request and `retransmit_tx_j` the part of it beyond plan.
+    pub fn record_request_tx(
+        &mut self,
+        device_compute_j: f64,
+        device_tx_j: f64,
+        retransmit_tx_j: f64,
+        deadline_met: bool,
+    ) {
         self.device_compute_j += device_compute_j;
         self.device_tx_j += device_tx_j;
+        self.retransmit_tx_j += retransmit_tx_j;
         self.requests += 1;
         if deadline_met {
             self.deadline_hits += 1;
@@ -55,6 +81,7 @@ impl EnergyLedger {
     pub fn merge(&mut self, other: &EnergyLedger) {
         self.device_compute_j += other.device_compute_j;
         self.device_tx_j += other.device_tx_j;
+        self.retransmit_tx_j += other.retransmit_tx_j;
         self.edge_j += other.edge_j;
         self.requests += other.requests;
         self.deadline_hits += other.deadline_hits;
@@ -91,5 +118,36 @@ mod tests {
         ba.merge(&a);
         assert_eq!(ab.total_j(), ba.total_j());
         assert_eq!(ab.requests, ba.requests);
+    }
+
+    #[test]
+    fn retransmit_split_stays_inside_device_tx() {
+        let mut l = EnergyLedger::default();
+        // planned 0.5 J, one wasted attempt of 0.3 J -> actual 0.8 J
+        l.record_request_tx(1.0, 0.8, 0.3, true);
+        assert_eq!(l.device_tx_j, 0.8);
+        assert_eq!(l.retransmit_tx_j, 0.3);
+        // the split is informational: totals count device_tx_j once
+        assert_eq!(l.total_j(), 1.8);
+        // planned component is recoverable
+        assert!((l.device_tx_j - l.retransmit_tx_j - 0.5).abs() < 1e-12);
+        // the 3-arg form is the 0-retransmit special case
+        let mut a = EnergyLedger::default();
+        a.record_request(1.0, 0.5, true);
+        let mut b = EnergyLedger::default();
+        b.record_request_tx(1.0, 0.5, 0.0, true);
+        assert_eq!(a.device_tx_j.to_bits(), b.device_tx_j.to_bits());
+        assert_eq!(a.retransmit_tx_j.to_bits(), b.retransmit_tx_j.to_bits());
+    }
+
+    #[test]
+    fn merge_carries_the_retransmit_split() {
+        let mut a = EnergyLedger::default();
+        a.record_request_tx(1.0, 0.6, 0.1, true);
+        let mut b = EnergyLedger::default();
+        b.record_request_tx(2.0, 0.9, 0.4, false);
+        a.merge(&b);
+        assert!((a.retransmit_tx_j - 0.5).abs() < 1e-12);
+        assert!((a.device_tx_j - 1.5).abs() < 1e-12);
     }
 }

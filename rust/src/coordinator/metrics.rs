@@ -94,6 +94,17 @@ pub struct ServingMetrics {
     pub exec_deadline_misses: usize,
     /// Requests with a terminal `Failed` outcome (no result produced).
     pub failed_requests: usize,
+    /// Arrivals the admission gate shed before this window (copied from
+    /// `PlannedWindow::shed`; they never reach the engine as requests).
+    pub shed_requests: usize,
+    /// Offloaded members evicted at batch-form time because their upload
+    /// ran more than `straggler_budget_s` behind plan (or never arrived).
+    pub stragglers_evicted: usize,
+    /// Uplink retransmission attempts across all uploads of the run.
+    pub retransmits: usize,
+    /// Longest launch delay any batch accepted waiting for a surviving
+    /// straggler (s); bounded by `straggler_budget_s` by construction.
+    pub max_straggler_wait_s: f64,
     /// Human-readable causes of degradations/failures, in occurrence
     /// order. Empty on the nominal path.
     pub fault_log: Vec<String>,
@@ -152,14 +163,20 @@ impl ServingMetrics {
         );
         if self.retries + self.degraded_requests + self.replans + self.failed_requests > 0
             || self.exec_deadline_misses > 0
+            || self.shed_requests + self.stragglers_evicted + self.retransmits > 0
         {
             s.push_str(&format!(
-                " | recovery: retries={} degraded={} replans={} exec_misses={} failed={}",
+                " | recovery: retries={} degraded={} replans={} exec_misses={} failed={} \
+                 shed={} evicted={} retransmits={} max_straggler_wait={:.2}ms",
                 self.retries,
                 self.degraded_requests,
                 self.replans,
                 self.exec_deadline_misses,
                 self.failed_requests,
+                self.shed_requests,
+                self.stragglers_evicted,
+                self.retransmits,
+                self.max_straggler_wait_s * 1e3,
             ));
         }
         s
@@ -244,5 +261,21 @@ mod tests {
         };
         let r = m.report();
         assert!(r.contains("retries=2") && r.contains("degraded=1"), "{r}");
+    }
+
+    #[test]
+    fn report_surfaces_channel_and_shed_counters() {
+        let m = ServingMetrics {
+            shed_requests: 3,
+            stragglers_evicted: 2,
+            retransmits: 5,
+            max_straggler_wait_s: 0.004,
+            ..Default::default()
+        };
+        let r = m.report();
+        assert!(
+            r.contains("shed=3") && r.contains("evicted=2") && r.contains("retransmits=5"),
+            "{r}"
+        );
     }
 }

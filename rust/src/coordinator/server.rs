@@ -218,9 +218,24 @@ where
         pending: None,
     };
     let (ready_tx, ready_rx) = mpsc::channel::<bool>();
-    run_pipelined_gated(&mut sched, &mut clock, &mut source, depth, ready_rx, move |batches| {
-        executor_loop(ctx, make_backend, solver_name, fb, ready_tx, batches)
-    })
+    run_pipelined_gated(
+        &mut sched,
+        &mut clock,
+        &mut source,
+        depth,
+        ready_rx,
+        // Shed at admission: the request never reaches the executor, so
+        // answer its client here with a terminal transport error — the
+        // same failure surface a `RequestOutcome::Failed` maps to.
+        &mut |a: Arrival<Enqueued>| {
+            let _ = a.payload.reply.send(Err(format!(
+                "request shed at admission (overload): user {} cannot meet its \
+                 deadline even local-only at maximum frequency",
+                a.user.id
+            )));
+        },
+        move |batches| executor_loop(ctx, make_backend, solver_name, fb, ready_tx, batches),
+    )
 }
 
 /// The GPU executor stage: owns the backend (constructed on this thread,

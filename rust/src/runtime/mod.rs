@@ -16,6 +16,10 @@
 //!   backend with a seeded [`FaultPlan`] (latency skew, transient errors,
 //!   stuck batches bounded by a virtual timeout); drives the recovery path
 //!   in [`crate::coordinator::engine`] and `tests/chaos_serving.rs`.
+//! * [`netchaos`] — the uplink-side sibling: a seeded [`ChannelModel`]
+//!   perturbs per-upload effective rate (fading, bounded-retransmit drops,
+//!   stale-rate drift) in virtual time; drives the straggler-tolerant
+//!   batch formation in [`crate::coordinator::engine`].
 //! * [`artifacts`] — the manifest contract between `aot.py` and the PJRT
 //!   executor (feature-independent: the manifest is plain JSON).
 //! * [`profiler`] — measures per-(block, bucket) latency on *any* backend;
@@ -26,12 +30,14 @@ pub mod backend;
 pub mod chaos;
 #[cfg(feature = "pjrt")]
 pub mod executor;
+pub mod netchaos;
 pub mod profiler;
 pub mod sim;
 
 pub use artifacts::Manifest;
 pub use backend::{default_backend, ExecSkew, InferenceBackend};
 pub use chaos::{ChaosBackend, ChaosError, ChaosStats, FaultClass, FaultPlan};
+pub use netchaos::{ChannelModel, ChannelStats, UplinkFaultPlan, UplinkOutcome};
 #[cfg(feature = "pjrt")]
 pub use executor::ModelRuntime;
 pub use sim::{SimBackend, PAR_MIN_BATCH, SIM_SEED};

@@ -1,0 +1,466 @@
+//! Deterministic uplink fault injection — the transport-side sibling of
+//! [`crate::runtime::chaos`].
+//!
+//! J-DOB prices every offload with a rate fixed at planning time (Eq. 4:
+//! `tx_latency = O_ñ / R` with `R` from [`crate::util::shannon_rate_bps`]).
+//! The wireless channel is the least stable link in the chain, so the
+//! serving engine drives each offloaded member's upload through a
+//! [`ChannelModel`] seeded by an [`UplinkFaultPlan`] before the edge batch
+//! launches:
+//!
+//! * **fading** — the effective rate is multiplied by a factor in `(0, 1]`,
+//!   stretching the upload (and its energy: `E_tx = p_tx · t_tx`, Eq. 4);
+//! * **transient drops** — an attempt dies mid-transfer after burning a
+//!   fraction of its airtime, then retransmits, bounded by
+//!   `max_retransmits`; exhausting the bound means the payload is never
+//!   delivered and the engine must serve the user off-batch;
+//! * **stale-rate drift** — the channel moved between plan time and
+//!   execution time: the executed rate is the planned rate times a drift
+//!   factor (which may exceed 1 — channels also improve).
+//!
+//! Everything is **virtual time**: nothing sleeps, the perturbed upload
+//! duration/energy is returned to the caller, who bills it to the virtual
+//! clocks and the [`EnergyLedger`]. Draws come from an in-tree xoshiro
+//! PRNG seeded by `UplinkFaultPlan::seed` in a fixed order (drift, fade,
+//! then per-attempt drop + waste), so every chaos case is an exact replay
+//! of its seed.
+//!
+//! With [`ChannelModel::none`] (or any plan where no fault can fire) the
+//! model is **bit-transparent**: [`ChannelModel::transmit`] returns the
+//! planned values verbatim without touching the RNG or the lock, so plans,
+//! ledgers and logits are bitwise identical to a pipeline without the
+//! model — pinned by the zero-fault golden leg in
+//! `tests/golden_figures.rs`.
+//!
+//! [`EnergyLedger`]: crate::coordinator::ledger::EnergyLedger
+
+use std::sync::Mutex;
+
+use crate::util::rng::Rng;
+
+/// A seeded description of what the uplink can do wrong.
+///
+/// Probabilities are per upload (fade/drift) or per attempt (drop) and
+/// clamped to `[0, 1]` at construction; ranges are clamped into their
+/// documented domains. The whole fault sequence is a pure function of
+/// `seed`.
+#[derive(Debug, Clone)]
+pub struct UplinkFaultPlan {
+    /// PRNG seed; the fault sequence is a pure function of it.
+    pub seed: u64,
+    /// P(upload sees slow fading: effective rate × a `fade_range` draw).
+    pub fade_prob: f64,
+    /// Rate multipliers under fading, `0 < lo <= hi <= 1`.
+    pub fade_range: (f64, f64),
+    /// P(an upload *attempt* is dropped mid-transfer and must be
+    /// retransmitted from scratch).
+    pub drop_prob: f64,
+    /// Fraction of the attempt's airtime (and energy) burned before the
+    /// drop is detected, `0 <= lo <= hi <= 1`.
+    pub drop_waste_range: (f64, f64),
+    /// Stop injecting drops after this many across the model's lifetime
+    /// (`u64::MAX` = unlimited). Lets tests script "drops once, then
+    /// delivers".
+    pub max_drops: u64,
+    /// Retransmit attempts allowed after the first before the upload is
+    /// declared undelivered (0 = a single drop kills it).
+    pub max_retransmits: u32,
+    /// P(the plan-time rate is stale: executed rate × a `drift_range`
+    /// draw).
+    pub drift_prob: f64,
+    /// Rate multipliers under drift, `0 < lo <= hi` (may exceed 1: the
+    /// channel can also have improved since planning).
+    pub drift_range: (f64, f64),
+}
+
+impl UplinkFaultPlan {
+    /// No faults at all: the model is bit-transparent.
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            fade_prob: 0.0,
+            fade_range: (1.0, 1.0),
+            drop_prob: 0.0,
+            drop_waste_range: (0.0, 0.0),
+            max_drops: 0,
+            max_retransmits: 2,
+            drift_prob: 0.0,
+            drift_range: (1.0, 1.0),
+        }
+    }
+
+    /// Slow fading only: uploads stretch, nothing is lost. Exercises the
+    /// straggler-budget eviction and launch-delay billing paths.
+    pub fn fading(seed: u64) -> Self {
+        Self {
+            seed,
+            fade_prob: 0.35,
+            fade_range: (0.35, 0.95),
+            ..Self::none()
+        }
+    }
+
+    /// Mid-transfer drops with bounded retransmission, plus mild fading.
+    /// Exercises retransmit billing and the undelivered → off-batch path.
+    pub fn dropping(seed: u64) -> Self {
+        Self {
+            seed,
+            drop_prob: 0.15,
+            drop_waste_range: (0.2, 0.9),
+            max_drops: u64::MAX,
+            max_retransmits: 2,
+            fade_prob: 0.10,
+            fade_range: (0.6, 0.95),
+            ..Self::none()
+        }
+    }
+
+    /// Stale planning rate: the channel drifted between plan and
+    /// execution, in either direction. Exercises the straggler gate with
+    /// both early and late uploads.
+    pub fn stale_rate(seed: u64) -> Self {
+        Self {
+            seed,
+            drift_prob: 0.5,
+            drift_range: (0.55, 1.3),
+            ..Self::none()
+        }
+    }
+
+    /// True iff no fault can ever fire — the bit-transparency fast path.
+    pub fn is_fault_free(&self) -> bool {
+        self.fade_prob <= 0.0
+            && (self.drop_prob <= 0.0 || self.max_drops == 0)
+            && self.drift_prob <= 0.0
+    }
+
+    /// Clamp probabilities and ranges into their documented domains.
+    fn normalized(mut self) -> Self {
+        let clamp01 = |p: f64| if p.is_finite() { p.clamp(0.0, 1.0) } else { 0.0 };
+        self.fade_prob = clamp01(self.fade_prob);
+        self.drop_prob = clamp01(self.drop_prob);
+        self.drift_prob = clamp01(self.drift_prob);
+        // fade multipliers must keep the rate positive and never speed it up
+        let lo = if self.fade_range.0.is_finite() {
+            self.fade_range.0.clamp(1e-3, 1.0)
+        } else {
+            1.0
+        };
+        self.fade_range = (lo, self.fade_range.1.clamp(lo, 1.0));
+        let lo = clamp01(self.drop_waste_range.0);
+        self.drop_waste_range = (lo, self.drop_waste_range.1.clamp(lo, 1.0));
+        // drift keeps the rate positive but may exceed 1
+        let lo = if self.drift_range.0.is_finite() {
+            self.drift_range.0.max(1e-3)
+        } else {
+            1.0
+        };
+        self.drift_range = (lo, self.drift_range.1.max(lo));
+        self
+    }
+}
+
+/// What actually happened to one upload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UplinkOutcome {
+    /// Total airtime spent across all attempts (s). Equals the planned
+    /// `tx_latency` on the nominal path.
+    pub actual_tx_s: f64,
+    /// Total transmit energy spent across all attempts (J) — `p_tx` times
+    /// the airtime, per Eq. 4. Equals the planned tx energy nominally.
+    pub actual_tx_j: f64,
+    /// Attempts made (1 on the nominal path).
+    pub attempts: u32,
+    /// False iff the retransmit bound was exhausted: the activation never
+    /// reached the edge and the user cannot join the batch.
+    pub delivered: bool,
+}
+
+/// Counters of everything the model injected so far.
+#[derive(Debug, Default, Clone)]
+pub struct ChannelStats {
+    /// Uploads that went through fault drawing (the fast path never
+    /// counts).
+    pub uploads: u64,
+    pub fades: u64,
+    pub drops: u64,
+    /// Attempts beyond the first, across all uploads.
+    pub retransmits: u64,
+    pub drifted: u64,
+    /// Uploads that exhausted the retransmit bound.
+    pub undelivered: u64,
+    /// Airtime spent beyond plan across all uploads (s, never negative).
+    pub extra_tx_s: f64,
+    /// Transmit energy spent beyond plan across all uploads (J).
+    pub extra_tx_j: f64,
+}
+
+struct ChannelState {
+    rng: Rng,
+    stats: ChannelStats,
+}
+
+/// A seeded per-upload channel perturbation model.
+///
+/// Interior state (RNG, counters) sits behind a `Mutex` so the model stays
+/// `Sync` next to the backend it composes with; the lock is poison-proof
+/// (a panicking thread cannot wedge the serving path).
+pub struct ChannelModel {
+    plan: UplinkFaultPlan,
+    state: Mutex<ChannelState>,
+}
+
+impl ChannelModel {
+    pub fn new(plan: UplinkFaultPlan) -> Self {
+        let plan = plan.normalized();
+        let state = Mutex::new(ChannelState {
+            rng: Rng::seed_from_u64(plan.seed),
+            stats: ChannelStats::default(),
+        });
+        Self { plan, state }
+    }
+
+    /// The bit-transparent identity channel.
+    pub fn none() -> Self {
+        Self::new(UplinkFaultPlan::none())
+    }
+
+    pub fn plan(&self) -> &UplinkFaultPlan {
+        &self.plan
+    }
+
+    /// True iff [`ChannelModel::transmit`] is a verbatim pass-through.
+    pub fn is_fault_free(&self) -> bool {
+        self.plan.is_fault_free()
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.lock().stats.clone()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ChannelState> {
+        // a panicked holder leaves the state intact; keep serving
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Push one upload through the channel. `planned_tx_s`/`planned_tx_j`
+    /// are the plan-time Eq. 4 values (`O_ñ / R` and `p_tx · t_tx`); the
+    /// outcome carries what the channel actually cost.
+    ///
+    /// Fault-free plans (and zero-length uploads) return the planned
+    /// values verbatim without touching the RNG — the bit-transparency
+    /// fast path.
+    pub fn transmit(&self, planned_tx_s: f64, planned_tx_j: f64) -> UplinkOutcome {
+        let nominal = UplinkOutcome {
+            actual_tx_s: planned_tx_s,
+            actual_tx_j: planned_tx_j,
+            attempts: 1,
+            delivered: true,
+        };
+        if self.plan.is_fault_free() || !(planned_tx_s > 0.0) {
+            return nominal;
+        }
+        let mut st = self.lock();
+        st.stats.uploads += 1;
+
+        // Fixed draw order so the sequence is a pure function of the seed:
+        // drift, fade, then per-attempt (drop?, waste fraction).
+        let mut rate_mult = 1.0;
+        if self.plan.drift_prob > 0.0 && st.rng.next_f64() < self.plan.drift_prob {
+            let (lo, hi) = self.plan.drift_range;
+            rate_mult *= st.rng.gen_range(lo, hi);
+            st.stats.drifted += 1;
+        }
+        if self.plan.fade_prob > 0.0 && st.rng.next_f64() < self.plan.fade_prob {
+            let (lo, hi) = self.plan.fade_range;
+            rate_mult *= st.rng.gen_range(lo, hi);
+            st.stats.fades += 1;
+        }
+        // rate scales down => airtime and energy scale up (Eq. 4)
+        let attempt_s = planned_tx_s / rate_mult;
+        let attempt_j = planned_tx_j / rate_mult;
+
+        let mut total_s = 0.0;
+        let mut total_j = 0.0;
+        let mut attempts: u32 = 0;
+        let delivered = loop {
+            attempts += 1;
+            let dropped = self.plan.drop_prob > 0.0
+                && st.stats.drops < self.plan.max_drops
+                && st.rng.next_f64() < self.plan.drop_prob;
+            if dropped {
+                st.stats.drops += 1;
+                let (lo, hi) = self.plan.drop_waste_range;
+                let waste = st.rng.gen_range(lo, hi);
+                total_s += attempt_s * waste;
+                total_j += attempt_j * waste;
+                if attempts > self.plan.max_retransmits {
+                    st.stats.undelivered += 1;
+                    break false;
+                }
+                st.stats.retransmits += 1;
+                continue;
+            }
+            total_s += attempt_s;
+            total_j += attempt_j;
+            break true;
+        };
+        st.stats.extra_tx_s += (total_s - planned_tx_s).max(0.0);
+        st.stats.extra_tx_j += (total_j - planned_tx_j).max(0.0);
+        UplinkOutcome {
+            actual_tx_s: total_s,
+            actual_tx_j: total_j,
+            attempts,
+            delivered,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_transmit_is_verbatim_and_never_draws() {
+        let ch = ChannelModel::none();
+        let out = ch.transmit(0.0089, 0.00178);
+        assert_eq!(out.actual_tx_s.to_bits(), 0.0089f64.to_bits());
+        assert_eq!(out.actual_tx_j.to_bits(), 0.00178f64.to_bits());
+        assert_eq!(out.attempts, 1);
+        assert!(out.delivered);
+        assert_eq!(ch.stats().uploads, 0, "fast path must not draw");
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let mk = || ChannelModel::new(UplinkFaultPlan::dropping(42));
+        let (a, b) = (mk(), mk());
+        for _ in 0..50 {
+            let (oa, ob) = (a.transmit(0.01, 0.002), b.transmit(0.01, 0.002));
+            assert_eq!(oa, ob);
+        }
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.drops, sb.drops);
+        assert_eq!(sa.fades, sb.fades);
+        assert_eq!(sa.retransmits, sb.retransmits);
+    }
+
+    #[test]
+    fn fading_stretches_time_and_energy_together() {
+        let ch = ChannelModel::new(UplinkFaultPlan {
+            fade_prob: 1.0,
+            fade_range: (0.5, 0.5),
+            ..UplinkFaultPlan::none()
+        });
+        let out = ch.transmit(0.01, 0.002);
+        assert!((out.actual_tx_s - 0.02).abs() < 1e-12, "{}", out.actual_tx_s);
+        assert!((out.actual_tx_j - 0.004).abs() < 1e-12);
+        assert!(out.delivered);
+        assert_eq!(out.attempts, 1);
+        // energy/time ratio (= p_tx) is preserved by construction
+        assert!(
+            (out.actual_tx_j / out.actual_tx_s - 0.2).abs() < 1e-9,
+            "fading must not change the transmit power"
+        );
+    }
+
+    #[test]
+    fn single_scripted_drop_bills_the_wasted_attempt() {
+        // drops exactly once (max_drops = 1), wasting exactly half of the
+        // first attempt, then delivers on the retransmit
+        let ch = ChannelModel::new(UplinkFaultPlan {
+            drop_prob: 1.0,
+            drop_waste_range: (0.5, 0.5),
+            max_drops: 1,
+            max_retransmits: 2,
+            ..UplinkFaultPlan::none()
+        });
+        let out = ch.transmit(0.01, 0.002);
+        assert!(out.delivered);
+        assert_eq!(out.attempts, 2);
+        assert!((out.actual_tx_s - 0.015).abs() < 1e-12, "{}", out.actual_tx_s);
+        assert!((out.actual_tx_j - 0.003).abs() < 1e-12);
+        let st = ch.stats();
+        assert_eq!((st.drops, st.retransmits, st.undelivered), (1, 1, 0));
+        assert!((st.extra_tx_j - 0.001).abs() < 1e-12);
+        // the cap is spent: the next upload is nominal
+        let again = ch.transmit(0.01, 0.002);
+        assert_eq!(again.attempts, 1);
+        assert_eq!(again.actual_tx_s.to_bits(), 0.01f64.to_bits());
+    }
+
+    #[test]
+    fn exhausted_retransmits_mean_undelivered() {
+        let ch = ChannelModel::new(UplinkFaultPlan {
+            drop_prob: 1.0,
+            drop_waste_range: (1.0, 1.0),
+            max_drops: u64::MAX,
+            max_retransmits: 2,
+            ..UplinkFaultPlan::none()
+        });
+        let out = ch.transmit(0.01, 0.002);
+        assert!(!out.delivered);
+        assert_eq!(out.attempts, 3, "first try + 2 retransmits");
+        // all three full attempts burned airtime and energy
+        assert!((out.actual_tx_s - 0.03).abs() < 1e-12);
+        assert!((out.actual_tx_j - 0.006).abs() < 1e-12);
+        assert_eq!(ch.stats().undelivered, 1);
+    }
+
+    #[test]
+    fn drift_can_speed_up_or_slow_down() {
+        let fast = ChannelModel::new(UplinkFaultPlan {
+            drift_prob: 1.0,
+            drift_range: (2.0, 2.0),
+            ..UplinkFaultPlan::none()
+        });
+        let out = fast.transmit(0.01, 0.002);
+        assert!((out.actual_tx_s - 0.005).abs() < 1e-12, "improved channel");
+        // an early upload is not "extra"
+        assert_eq!(fast.stats().extra_tx_s, 0.0);
+        let slow = ChannelModel::new(UplinkFaultPlan {
+            drift_prob: 1.0,
+            drift_range: (0.5, 0.5),
+            ..UplinkFaultPlan::none()
+        });
+        let out = slow.transmit(0.01, 0.002);
+        assert!((out.actual_tx_s - 0.02).abs() < 1e-12, "stale rate");
+        assert!(slow.stats().extra_tx_s > 0.0);
+    }
+
+    #[test]
+    fn zero_length_uploads_bypass_the_rng() {
+        let ch = ChannelModel::new(UplinkFaultPlan::fading(7));
+        let out = ch.transmit(0.0, 0.0);
+        assert_eq!(out.attempts, 1);
+        assert!(out.delivered);
+        assert_eq!(ch.stats().uploads, 0);
+    }
+
+    #[test]
+    fn normalization_clamps_bad_plans() {
+        let ch = ChannelModel::new(UplinkFaultPlan {
+            fade_prob: 9.0,
+            fade_range: (-1.0, 4.0),
+            drop_prob: f64::NAN,
+            drop_waste_range: (2.0, -1.0),
+            drift_range: (0.0, f64::NAN),
+            ..UplinkFaultPlan::none()
+        });
+        let p = ch.plan();
+        assert_eq!(p.fade_prob, 1.0);
+        assert_eq!(p.drop_prob, 0.0);
+        assert!(p.fade_range.0 > 0.0 && p.fade_range.1 <= 1.0);
+        assert!(p.fade_range.0 <= p.fade_range.1);
+        assert!(p.drop_waste_range.0 >= 0.0 && p.drop_waste_range.1 <= 1.0);
+        assert!(p.drift_range.0 > 0.0 && p.drift_range.1 >= p.drift_range.0);
+    }
+
+    #[test]
+    fn preset_plans_are_fault_free_only_for_none() {
+        assert!(UplinkFaultPlan::none().is_fault_free());
+        assert!(!UplinkFaultPlan::fading(1).is_fault_free());
+        assert!(!UplinkFaultPlan::dropping(1).is_fault_free());
+        assert!(!UplinkFaultPlan::stale_rate(1).is_fault_free());
+    }
+}

@@ -1,4 +1,5 @@
-//! Admission policies: when does the currently-open window close?
+//! Admission policies: when does the currently-open window close — and is
+//! a request admitted at all?
 //!
 //! The event loop ([`crate::sched::scheduler::run_events`]) opens a window
 //! at the first arrival and keeps admitting until the policy says stop —
@@ -8,6 +9,43 @@
 //! they never touch the clock, the queue, or the planner, which is what
 //! makes them swappable between the virtual-time simulator and the live
 //! server.
+//!
+//! Policies may also gate each arrival ([`AdmissionPolicy::admit`]):
+//! [`ShedOnOverload`] rejects requests whose deadline cannot be met even
+//! local-only at maximum device frequency, turning certain deadline misses
+//! into terminal sheds at the door instead of admitted-and-missed work.
+
+use crate::algo::types::User;
+use crate::util::TIME_EPS;
+
+/// Everything a per-arrival admission gate may inspect, assembled by the
+/// scheduler (so the policy stays pure decision logic).
+#[derive(Debug)]
+pub struct AdmitQuery<'a> {
+    pub user: &'a User,
+    /// Arrival time (s since the clock epoch).
+    pub at: f64,
+    /// The arrival's absolute deadline.
+    pub absolute_deadline: f64,
+    /// Current clock reading (>= `at` once the arrival is seen).
+    pub now: f64,
+    /// The scheduler's current absolute GPU-busy horizon.
+    pub t_free: f64,
+    /// The user's floor service time: full model on-device at `f_max`
+    /// (Eq. 1 at maximum frequency) — the feasibility yardstick no plan
+    /// can beat without the GPU.
+    pub min_local_s: f64,
+}
+
+/// A per-arrival admission verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Admit into the open window.
+    Admit,
+    /// Reject at the door with a terminal outcome; the request never
+    /// enters a window and never consumes GPU horizon.
+    Shed,
+}
 
 /// Decides when an open admission window closes.
 ///
@@ -26,6 +64,13 @@ pub trait AdmissionPolicy: Send {
 
     /// Close immediately once `admitted` requests are in the window?
     fn is_full(&self, admitted: usize) -> bool;
+
+    /// Per-arrival gate, consulted by the event loop before an arrival
+    /// joins (or opens) a window. The default admits everything — only
+    /// wrapper policies like [`ShedOnOverload`] override it.
+    fn admit(&self, _query: &AdmitQuery<'_>) -> AdmitDecision {
+        AdmitDecision::Admit
+    }
 }
 
 /// Close after `max_batch` requests, with no time bound: maximizes batching
@@ -141,9 +186,171 @@ impl AdmissionPolicy for EarliestSlack {
     }
 }
 
+/// Overload-aware wrapper: windowing is delegated to `inner`, but every
+/// arrival first passes a feasibility pre-check — if the request cannot
+/// make its deadline even served local-only at maximum device frequency
+/// (plus `guard_s` of slack reserved for windowing/planning), it is shed
+/// at the door with a terminal outcome instead of admitted-and-missed.
+///
+/// Shedding never consumes GPU horizon: a shed arrival opens no window,
+/// joins no batch and leaves `t_free` untouched (pinned by the scheduler
+/// property tests). Under overload this keeps *admitted* requests' miss
+/// rate at zero while the unshedded baseline piles up misses.
+///
+/// Choosing `guard_s`: at least the inner policy's maximum window wait —
+/// then any admitted request still has its full local-only floor left when
+/// the window closes, so even the worst case (local fallback at `f_max`)
+/// meets the deadline.
+pub struct ShedOnOverload {
+    pub inner: Box<dyn AdmissionPolicy>,
+    /// Slack reserved on top of the local-only floor (s); see above.
+    pub guard_s: f64,
+}
+
+impl ShedOnOverload {
+    pub fn new(inner: Box<dyn AdmissionPolicy>, guard_s: f64) -> Self {
+        Self {
+            inner,
+            guard_s: guard_s.max(0.0),
+        }
+    }
+}
+
+impl AdmissionPolicy for ShedOnOverload {
+    fn name(&self) -> &'static str {
+        "shed-on-overload"
+    }
+
+    fn close_by(&self, opened_at: f64, earliest_deadline: f64) -> f64 {
+        self.inner.close_by(opened_at, earliest_deadline)
+    }
+
+    fn is_full(&self, admitted: usize) -> bool {
+        self.inner.is_full(admitted)
+    }
+
+    fn admit(&self, q: &AdmitQuery<'_>) -> AdmitDecision {
+        // service can start no earlier than now (nor before the arrival)
+        let start = q.now.max(q.at);
+        let remaining = q.absolute_deadline - start;
+        if remaining + TIME_EPS < q.min_local_s + self.guard_s {
+            return AdmitDecision::Shed;
+        }
+        self.inner.admit(q)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::types::PlanningContext;
+    use crate::energy::device::DeviceModel;
+
+    fn query(dev: &DeviceModel, min_local_s: f64, slack: f64) -> (User, f64) {
+        let user = User {
+            id: 0,
+            deadline: min_local_s + slack,
+            dev: dev.clone(),
+        };
+        (user, min_local_s + slack)
+    }
+
+    #[test]
+    fn shed_on_overload_gates_on_the_local_only_floor() {
+        let c = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&c.cfg);
+        let min_local = dev.min_latency(c.tables.total_work());
+        let p = ShedOnOverload::new(Box::new(TimeBound::new(0.05, 16)), 0.02);
+        // windowing delegates to the inner policy
+        assert_eq!(p.name(), "shed-on-overload");
+        assert!((p.close_by(1.0, 9.0) - 1.05).abs() < 1e-12);
+        assert!(p.is_full(16) && !p.is_full(15));
+
+        // plenty of slack: admitted
+        let (user, deadline) = query(&dev, min_local, 1.0);
+        let q = AdmitQuery {
+            user: &user,
+            at: 0.0,
+            absolute_deadline: deadline,
+            now: 0.0,
+            t_free: 0.0,
+            min_local_s: min_local,
+        };
+        assert_eq!(p.admit(&q), AdmitDecision::Admit);
+
+        // infeasible even local-only at f_max: shed
+        let (user, deadline) = query(&dev, min_local, -0.5 * min_local);
+        let q = AdmitQuery {
+            user: &user,
+            at: 0.0,
+            absolute_deadline: deadline,
+            now: 0.0,
+            t_free: 0.0,
+            min_local_s: min_local,
+        };
+        assert_eq!(p.admit(&q), AdmitDecision::Shed);
+
+        // feasible on paper but inside the guard: shed (the guard reserves
+        // the windowing delay that would otherwise eat the slack)
+        let (user, deadline) = query(&dev, min_local, 0.01);
+        let q = AdmitQuery {
+            user: &user,
+            at: 0.0,
+            absolute_deadline: deadline,
+            now: 0.0,
+            t_free: 0.0,
+            min_local_s: min_local,
+        };
+        assert_eq!(p.admit(&q), AdmitDecision::Shed);
+    }
+
+    #[test]
+    fn shed_gate_measures_slack_from_now_not_arrival() {
+        let c = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&c.cfg);
+        let min_local = dev.min_latency(c.tables.total_work());
+        let p = ShedOnOverload::new(Box::new(SizeBound::new(8)), 0.0);
+        let user = User {
+            id: 0,
+            deadline: min_local + 0.05,
+            dev: dev.clone(),
+        };
+        let mut q = AdmitQuery {
+            user: &user,
+            at: 0.0,
+            absolute_deadline: min_local + 0.05,
+            now: 0.0,
+            t_free: 0.0,
+            min_local_s: min_local,
+        };
+        assert_eq!(p.admit(&q), AdmitDecision::Admit);
+        // the clock has moved past the slack: the same request is now
+        // infeasible and must be shed
+        q.now = 0.1;
+        assert_eq!(p.admit(&q), AdmitDecision::Shed);
+    }
+
+    #[test]
+    fn default_policies_admit_everything() {
+        let c = PlanningContext::default_analytic();
+        let dev = DeviceModel::from_config(&c.cfg);
+        let user = User {
+            id: 0,
+            deadline: 1e-9, // hopeless deadline
+            dev: dev.clone(),
+        };
+        let q = AdmitQuery {
+            user: &user,
+            at: 0.0,
+            absolute_deadline: 1e-9,
+            now: 0.0,
+            t_free: 5.0,
+            min_local_s: 0.04,
+        };
+        assert_eq!(SizeBound::new(4).admit(&q), AdmitDecision::Admit);
+        assert_eq!(TimeBound::new(0.1, 8).admit(&q), AdmitDecision::Admit);
+        assert_eq!(EarliestSlack::new(0.1, 8, 0.02).admit(&q), AdmitDecision::Admit);
+    }
 
     #[test]
     fn size_bound_never_times_out() {

@@ -23,10 +23,12 @@ pub mod clock;
 pub mod pipeline;
 pub mod scheduler;
 
-pub use admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+pub use admission::{
+    AdmissionPolicy, AdmitDecision, AdmitQuery, EarliestSlack, ShedOnOverload, SizeBound, TimeBound,
+};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use pipeline::{run_pipelined, run_pipelined_gated, PlannedBatch};
 pub use scheduler::{
-    plan_window, run_events, Arrival, ArrivalSource, OnlineStats, PlannedWindow, Scheduler,
-    SliceSource, SourceEvent, UserOutcome,
+    plan_window, run_events, run_events_with_shed, Arrival, ArrivalSource, OnlineStats,
+    PlannedWindow, Scheduler, SliceSource, SourceEvent, UserOutcome,
 };

@@ -24,7 +24,9 @@
 use std::sync::mpsc;
 
 use crate::sched::clock::Clock;
-use crate::sched::scheduler::{run_events, Arrival, ArrivalSource, PlannedWindow, Scheduler};
+use crate::sched::scheduler::{
+    run_events_with_shed, Arrival, ArrivalSource, PlannedWindow, Scheduler,
+};
 
 /// One planned window in flight between the planner and executor stages.
 pub struct PlannedBatch<P> {
@@ -55,10 +57,11 @@ where
     R: Send,
     X: FnOnce(mpsc::Receiver<PlannedBatch<P>>) -> R + Send,
 {
-    // no setup to wait for: pre-signal the gate
+    // no setup to wait for: pre-signal the gate; default policies admit
+    // everything, so the no-op shed sink is never called
     let (ready_tx, ready_rx) = mpsc::channel();
     let _ = ready_tx.send(true);
-    run_pipelined_gated(sched, clock, source, depth, ready_rx, execute)
+    run_pipelined_gated(sched, clock, source, depth, ready_rx, &mut |_| {}, execute)
 }
 
 /// [`run_pipelined`] with a readiness gate: the planner admits no work
@@ -69,12 +72,18 @@ where
 /// skips the event loop entirely, so a failed executor setup fails fast
 /// instead of parking clients behind a window that will never be served;
 /// `execute`'s result (typically the setup error) is still returned.
+///
+/// `shed` receives arrivals rejected by the admission gate (see
+/// [`run_events_with_shed`]); it runs on the planner thread, so the server
+/// can answer shed clients with a terminal reply without touching the
+/// executor stage. Pass `&mut |_| {}` when the policy never sheds.
 pub fn run_pipelined_gated<P, R, X>(
     sched: &mut Scheduler<'_>,
     clock: &mut dyn Clock,
     source: &mut dyn ArrivalSource<P>,
     depth: usize,
     ready: mpsc::Receiver<bool>,
+    shed: &mut dyn FnMut(Arrival<P>),
     execute: X,
 ) -> R
 where
@@ -89,9 +98,13 @@ where
             .spawn_scoped(s, move || execute(rx))
             .expect("spawning executor stage");
         if ready.recv().unwrap_or(false) {
-            run_events(sched, clock, source, &mut |window, planned| {
-                tx.send(PlannedBatch { window, planned }).is_ok()
-            });
+            run_events_with_shed(
+                sched,
+                clock,
+                source,
+                &mut |window, planned| tx.send(PlannedBatch { window, planned }).is_ok(),
+                shed,
+            );
         }
         drop(tx); // planner done: close the pipeline so the executor drains
         match executor.join() {
@@ -166,11 +179,19 @@ mod tests {
         let mut clock = VirtualClock::new();
         let mut source = SliceSource::new(trace(&c, 4));
         let (ready_tx, ready_rx) = mpsc::channel();
-        let out = run_pipelined_gated(&mut sched, &mut clock, &mut source, 1, ready_rx, move |rx| {
-            let _ = ready_tx.send(false);
-            drop(rx);
-            "backend construction failed"
-        });
+        let out = run_pipelined_gated(
+            &mut sched,
+            &mut clock,
+            &mut source,
+            1,
+            ready_rx,
+            &mut |_| {},
+            move |rx| {
+                let _ = ready_tx.send(false);
+                drop(rx);
+                "backend construction failed"
+            },
+        );
         assert_eq!(out, "backend construction failed");
         assert_eq!(sched.stats().windows, 0, "no window may be planned");
     }

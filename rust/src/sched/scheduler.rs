@@ -23,7 +23,7 @@ use std::sync::Arc;
 use crate::algo::grouping::{optimal_grouping_ws, GroupedPlan};
 use crate::algo::types::{GroupSolver, PlanningContext, User, UserId};
 use crate::algo::workspace::PlannerWorkspace;
-use crate::sched::admission::AdmissionPolicy;
+use crate::sched::admission::{AdmissionPolicy, AdmitDecision, AdmitQuery};
 use crate::sched::clock::Clock;
 use crate::util::TIME_EPS;
 
@@ -161,6 +161,11 @@ pub struct PlannedWindow {
     pub outcomes: Vec<UserOutcome>,
     /// Total modeled energy of the window (plan + fallback + edge), J.
     pub planned_energy_j: f64,
+    /// Arrivals shed at admission since the previous planned window (they
+    /// are NOT in `outcomes` — a shed request never enters a window). The
+    /// executor copies this into `ServingMetrics::shed_requests` so sheds
+    /// stay visible per window, not just in the run totals.
+    pub shed: usize,
 }
 
 /// Plan one closed window against an explicit horizon (stateless; the
@@ -283,6 +288,9 @@ pub fn plan_window<P>(
             .map(|o| o.expect("every window member has an outcome"))
             .collect(),
         planned_energy_j,
+        // stateless planning knows nothing about admission gating; the
+        // stateful Scheduler::plan fills this in
+        shed: 0,
     }
 }
 
@@ -297,6 +305,10 @@ pub struct OnlineStats {
     pub windows: usize,
     /// Mean arrival-to-finish modeled latency (s).
     pub mean_latency_s: f64,
+    /// Arrivals rejected at the door by the admission gate
+    /// ([`crate::sched::admission::ShedOnOverload`]); never counted in
+    /// `served` and never touching the GPU horizon.
+    pub shed: usize,
 }
 
 impl OnlineStats {
@@ -381,6 +393,12 @@ pub struct Scheduler<'s> {
     feedback: Option<ExecFeedback>,
     stats: OnlineStats,
     latency_sum_s: f64,
+    /// Total model workload (FLOPs), cached for the per-arrival admission
+    /// gate's local-only feasibility floor.
+    total_work: f64,
+    /// Sheds since the last planned window, drained into
+    /// [`PlannedWindow::shed`] by [`Scheduler::plan`].
+    pending_shed: usize,
 }
 
 impl<'s> Scheduler<'s> {
@@ -389,6 +407,7 @@ impl<'s> Scheduler<'s> {
         solver: &'s dyn GroupSolver,
         policy: Box<dyn AdmissionPolicy>,
     ) -> Self {
+        let total_work = ctx.tables.total_work();
         Self {
             ctx,
             solver,
@@ -397,6 +416,8 @@ impl<'s> Scheduler<'s> {
             feedback: None,
             stats: OnlineStats::default(),
             latency_sum_s: 0.0,
+            total_work,
+            pending_shed: 0,
         }
     }
 
@@ -440,6 +461,31 @@ impl<'s> Scheduler<'s> {
         self.stats
     }
 
+    /// Gate one arrival through the admission policy's overload check.
+    ///
+    /// `now` is the instant the decision is taken (the clock, not the
+    /// arrival stamp — slack is measured from when we can actually act).
+    /// On [`AdmitDecision::Shed`] the arrival is counted (run stats +
+    /// the next window's [`PlannedWindow::shed`]) and must NOT be pushed
+    /// into any window: a shed request never reaches the planner, so it
+    /// can never move the GPU horizon.
+    pub fn gate<P>(&mut self, a: &Arrival<P>, now: f64) -> AdmitDecision {
+        let q = AdmitQuery {
+            user: &a.user,
+            at: a.at,
+            absolute_deadline: a.absolute_deadline,
+            now,
+            t_free: self.t_free,
+            min_local_s: a.user.dev.min_latency(self.total_work),
+        };
+        let d = self.policy.admit(&q);
+        if d == AdmitDecision::Shed {
+            self.stats.shed += 1;
+            self.pending_shed += 1;
+        }
+        d
+    }
+
     /// Plan one closed window, advancing `t_free` and the running stats.
     /// Any attached execution feedback is drained first, so the plan is
     /// made against the *actual* GPU horizon, not a stale model of it.
@@ -450,7 +496,8 @@ impl<'s> Scheduler<'s> {
                 self.t_free = actual;
             }
         }
-        let planned = plan_window(&self.ctx, self.solver, window, close, self.t_free);
+        let mut planned = plan_window(&self.ctx, self.solver, window, close, self.t_free);
+        planned.shed = std::mem::take(&mut self.pending_shed);
         debug_assert!(
             planned.t_free_abs >= self.t_free - TIME_EPS,
             "t_free must be monotone: {} -> {}",
@@ -490,13 +537,41 @@ pub fn run_events<P>(
     source: &mut dyn ArrivalSource<P>,
     sink: &mut dyn FnMut(Vec<Arrival<P>>, PlannedWindow) -> bool,
 ) {
+    run_events_with_shed(sched, clock, source, sink, &mut |_| {})
+}
+
+/// [`run_events`] with an explicit shed sink: every arrival is gated
+/// through [`Scheduler::gate`] before it can join a window, and arrivals
+/// the policy sheds are handed to `shed` instead of being planned.  The
+/// server uses the shed sink to send the terminal "shed at admission"
+/// transport reply; the default policies admit everything, making the
+/// two entry points equivalent (the no-op shed sink in [`run_events`]
+/// is never called).
+///
+/// A shed arrival never opens, joins, extends or delays a window — in
+/// particular it can never advance the scheduler's GPU-busy horizon
+/// (`t_free`), which `tests/sched_invariants.rs` pins as a property.
+pub fn run_events_with_shed<P>(
+    sched: &mut Scheduler<'_>,
+    clock: &mut dyn Clock,
+    source: &mut dyn ArrivalSource<P>,
+    sink: &mut dyn FnMut(Vec<Arrival<P>>, PlannedWindow) -> bool,
+    shed: &mut dyn FnMut(Arrival<P>),
+) {
     loop {
-        // Wait (or jump) to the first arrival of the next window.
-        let first = match source.next_before(f64::INFINITY) {
-            SourceEvent::Arrival(a) => a,
-            _ => return,
+        // Wait (or jump) to the first admitted arrival of the next window.
+        let first = loop {
+            let a = match source.next_before(f64::INFINITY) {
+                SourceEvent::Arrival(a) => a,
+                _ => return,
+            };
+            clock.wait_until(a.at);
+            let now = clock.now().max(a.at);
+            match sched.gate(&a, now) {
+                AdmitDecision::Admit => break a,
+                AdmitDecision::Shed => shed(a),
+            }
         };
-        clock.wait_until(first.at);
         let opened_at = clock.now().max(first.at);
         let mut earliest_deadline = first.absolute_deadline;
         let mut window = vec![first];
@@ -509,8 +584,17 @@ pub fn run_events<P>(
             let close_by = sched.policy().close_by(opened_at, earliest_deadline);
             match source.next_before(close_by) {
                 SourceEvent::Arrival(a) => {
-                    earliest_deadline = earliest_deadline.min(a.absolute_deadline);
-                    window.push(a);
+                    let now = clock.now().max(a.at);
+                    match sched.gate(&a, now) {
+                        AdmitDecision::Admit => {
+                            earliest_deadline = earliest_deadline.min(a.absolute_deadline);
+                            window.push(a);
+                        }
+                        // Shed mid-window: the arrival vanishes from the
+                        // window's point of view — close time and the
+                        // earliest-deadline bound are untouched.
+                        AdmitDecision::Shed => shed(a),
+                    }
                 }
                 SourceEvent::TimedOut => break close_by,
                 // Stream over: no further arrival can ever be admitted, so
@@ -537,7 +621,7 @@ mod tests {
     use super::*;
     use crate::algo::jdob::JDob;
     use crate::energy::device::DeviceModel;
-    use crate::sched::admission::{SizeBound, TimeBound};
+    use crate::sched::admission::{ShedOnOverload, SizeBound, TimeBound};
     use crate::sched::clock::VirtualClock;
 
     fn ctx() -> PlanningContext {
@@ -689,6 +773,66 @@ mod tests {
         sched.observe_completion(0.1); // stale
         sched.observe_completion(f64::NAN); // garbage
         assert_eq!(sched.t_free(), 0.3);
+    }
+
+    #[test]
+    fn shed_arrivals_never_enter_windows() {
+        let c = ctx();
+        let solver = JDob::full();
+        let policy = ShedOnOverload::new(Box::new(TimeBound::unbounded(0.05)), 0.0);
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(policy));
+        let mut clock = VirtualClock::new();
+        let mut arr = trace(&c, &[(20.0, 0.0), (20.0, 0.001), (21.0, 0.5)]);
+        // zero slack: infeasible even local-only at f_max -> shed
+        arr[1].absolute_deadline = arr[1].at;
+        let mut source = SliceSource::new(arr);
+        let mut shed_ids = Vec::new();
+        let mut windows = Vec::new();
+        run_events_with_shed(
+            &mut sched,
+            &mut clock,
+            &mut source,
+            &mut |w, p| {
+                windows.push((w.len(), p.shed));
+                true
+            },
+            &mut |a| shed_ids.push(a.user.id),
+        );
+        assert_eq!(shed_ids, vec![1]);
+        assert_eq!(sched.stats().shed, 1);
+        assert_eq!(sched.stats().served, 2, "shed requests are not served");
+        // the shed arrival neither joined window 1 nor opened one of its own
+        assert_eq!(windows, vec![(1, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn shed_first_arrival_does_not_open_a_window() {
+        let c = ctx();
+        let solver = JDob::full();
+        let policy = ShedOnOverload::new(Box::new(TimeBound::unbounded(0.05)), 0.0);
+        let mut sched = Scheduler::new(c.clone(), &solver, Box::new(policy));
+        let mut clock = VirtualClock::new();
+        let mut arr = trace(&c, &[(20.0, 0.0), (21.0, 0.3)]);
+        arr[0].absolute_deadline = arr[0].at;
+        let mut source = SliceSource::new(arr);
+        let mut shed = 0usize;
+        let mut windows = Vec::new();
+        run_events_with_shed(
+            &mut sched,
+            &mut clock,
+            &mut source,
+            &mut |w, p| {
+                windows.push((w.len(), p.close, p.shed));
+                true
+            },
+            &mut |_| shed += 1,
+        );
+        assert_eq!(shed, 1);
+        // the surviving arrival opens the (only) window at its own time
+        assert_eq!(windows.len(), 1);
+        assert_eq!(windows[0].0, 1);
+        assert!(windows[0].1 >= 0.3);
+        assert_eq!(windows[0].2, 1, "the shed is reported on the next window");
     }
 
     #[test]

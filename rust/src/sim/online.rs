@@ -130,7 +130,7 @@ mod tests {
     use super::*;
     use crate::algo::baselines::LocalComputing;
     use crate::algo::jdob::JDob;
-    use crate::sched::admission::{EarliestSlack, SizeBound};
+    use crate::sched::admission::{EarliestSlack, ShedOnOverload, SizeBound};
 
     fn ctx() -> PlanningContext {
         PlanningContext::default_analytic()
@@ -235,6 +235,51 @@ mod tests {
             assert!(stats.windows >= 1);
             assert!(stats.total_energy_j > 0.0);
         }
+    }
+
+    #[test]
+    fn shed_on_overload_keeps_admitted_misses_at_zero() {
+        // Overload: deadlines so tight that blind admission must miss —
+        // for the smallest betas the window wait alone eats the entire
+        // slack. The unshedded baseline admits-and-misses; ShedOnOverload
+        // rejects exactly the infeasible arrivals at the door and every
+        // request it admits still makes its deadline.
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(77);
+        let arr = poisson_arrivals(&c, 80.0, 2.0, (0.05, 8.0), &mut rng).unwrap();
+        let n = arr.len();
+        let solver = JDob::full();
+        let baseline = run_online_with_policy(
+            &c,
+            arr.clone(),
+            &solver,
+            Box::new(TimeBound::new(0.05, usize::MAX)),
+        );
+        assert_eq!(baseline.served, n);
+        assert_eq!(baseline.shed, 0);
+        assert!(
+            baseline.deadline_hits < n,
+            "baseline must miss under overload ({}/{n} hit)",
+            baseline.deadline_hits
+        );
+        // guard == the inner policy's max window wait: anything admitted
+        // can still be served local-only at the window close
+        let shed = run_online_with_policy(
+            &c,
+            arr.clone(),
+            &solver,
+            Box::new(ShedOnOverload::new(
+                Box::new(TimeBound::new(0.05, usize::MAX)),
+                0.05,
+            )),
+        );
+        assert_eq!(shed.served + shed.shed, n, "every arrival terminates");
+        assert!(shed.shed > 0, "overload must shed");
+        assert!(shed.served > 0, "feasible requests still get served");
+        assert_eq!(
+            shed.deadline_hits, shed.served,
+            "admitted requests never miss under ShedOnOverload"
+        );
     }
 
     #[test]

@@ -36,10 +36,36 @@ pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
     x.max(lo).min(hi)
 }
 
+/// Shannon rate `W * log2(1 + SNR)` in bit/s, SNR given in dB, with the
+/// channel parameters validated first: non-finite or non-positive
+/// bandwidth and non-finite or negative SNR_dB (the paper's Table-I
+/// setting is 30 dB; a negative value here is a sign/unit error, not a
+/// sub-0-dB channel) are rejected with a clear error instead of producing
+/// a NaN rate that would poison every downstream `tx_latency`.
+pub fn try_shannon_rate_bps(bandwidth_hz: f64, snr_db: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        bandwidth_hz.is_finite() && bandwidth_hz > 0.0,
+        "bandwidth must be finite and positive, got {bandwidth_hz} Hz"
+    );
+    anyhow::ensure!(
+        snr_db.is_finite() && snr_db >= 0.0,
+        "SNR must be finite and non-negative, got {snr_db} dB"
+    );
+    Ok(bandwidth_hz * (1.0 + 10f64.powf(snr_db / 10.0)).log2())
+}
+
 /// Shannon rate `W * log2(1 + SNR)` in bit/s, SNR given in dB.
+///
+/// Panics on invalid channel parameters (see [`try_shannon_rate_bps`]) —
+/// a loud failure at the call site instead of a silent NaN rate. Config
+/// loading validates through the fallible form first, so reaching the
+/// panic means a caller bypassed validation.
 #[inline]
 pub fn shannon_rate_bps(bandwidth_hz: f64, snr_db: f64) -> f64 {
-    bandwidth_hz * (1.0 + 10f64.powf(snr_db / 10.0)).log2()
+    match try_shannon_rate_bps(bandwidth_hz, snr_db) {
+        Ok(r) => r,
+        Err(e) => panic!("shannon_rate_bps: {e}"),
+    }
 }
 
 /// Mean of a slice (0.0 for empty — callers guard).
@@ -69,6 +95,24 @@ mod tests {
         // Table I: W = 10 MHz, SNR = 30 dB => R ~ 99.67 Mbit/s
         let r = shannon_rate_bps(10.0 * MHZ, 30.0);
         assert!((r - 99.67e6).abs() < 0.1e6, "{r}");
+    }
+
+    #[test]
+    fn shannon_rate_rejects_bad_channel_parameters() {
+        assert!(try_shannon_rate_bps(0.0, 30.0).is_err());
+        assert!(try_shannon_rate_bps(-10.0 * MHZ, 30.0).is_err());
+        assert!(try_shannon_rate_bps(f64::NAN, 30.0).is_err());
+        assert!(try_shannon_rate_bps(f64::INFINITY, 30.0).is_err());
+        assert!(try_shannon_rate_bps(10.0 * MHZ, f64::NAN).is_err());
+        assert!(try_shannon_rate_bps(10.0 * MHZ, -3.0).is_err());
+        let ok = try_shannon_rate_bps(10.0 * MHZ, 30.0).unwrap();
+        assert_eq!(ok.to_bits(), shannon_rate_bps(10.0 * MHZ, 30.0).to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be finite and positive")]
+    fn shannon_rate_panics_loudly_instead_of_nan() {
+        let _ = shannon_rate_bps(f64::NAN, 30.0);
     }
 
     #[test]

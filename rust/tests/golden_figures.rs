@@ -273,6 +273,111 @@ fn golden_zero_fault_chaos_is_bit_transparent() {
 }
 
 #[test]
+fn golden_zero_fault_channel_is_bit_transparent() {
+    use jdob::algo::jdob::JDob;
+    use jdob::algo::types::User;
+    use jdob::coordinator::engine::{ServeOutcome, ServingEngine};
+    use jdob::coordinator::request::InferenceRequest;
+    use jdob::energy::device::DeviceModel;
+    use jdob::runtime::ChannelModel;
+
+    // same fingerprint scheme as the chaos transparency golden above, so
+    // both tests pin the identical `serving_window_sim.csv`
+    fn logits_hash(logits: &[f32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for x in logits {
+            h = h.wrapping_mul(0x0100_0000_01b3).wrapping_add(x.to_bits() as u64);
+        }
+        h & ((1u64 << 48) - 1)
+    }
+
+    fn serving_csv(out: &ServeOutcome) -> String {
+        let mut s = String::from(
+            "user_id,offloaded,partition,modeled_latency_s,deadline_met,device_energy_j,logits_hash\n",
+        );
+        for r in &out.responses {
+            s.push_str(&format!(
+                "{},{},{},{:.17e},{},{:.17e},{}\n",
+                r.user_id,
+                r.offloaded as u8,
+                r.partition,
+                r.modeled_latency_s,
+                r.deadline_met as u8,
+                r.device_energy_j,
+                logits_hash(&r.logits),
+            ));
+        }
+        s.push_str(&format!(
+            "-1,0,0,{:.17e},0,{:.17e},{}\n",
+            out.actual_t_free_abs,
+            out.ledger.total_j(),
+            out.ledger.deadline_hits,
+        ));
+        s
+    }
+
+    let ctx = PlanningContext::default_analytic();
+    let dev = DeviceModel::from_config(&ctx.cfg);
+    let total = ctx.tables.total_work();
+    let elems: usize = ctx.profile.input_shape.iter().product();
+    let betas = [30.25, 30.25, 30.25, 0.5];
+    let reqs: Vec<InferenceRequest> = betas
+        .iter()
+        .enumerate()
+        .map(|(u, &beta)| InferenceRequest {
+            user_id: u,
+            input: (0..elems)
+                .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
+                .collect(),
+            deadline_s: User::deadline_from_beta(beta, &dev, total),
+        })
+        .collect();
+
+    // default engine: the implicit ChannelModel::none()
+    let bare = common::sim_backend();
+    let engine_plain = ServingEngine::new(ctx.clone(), &bare, Box::new(JDob::full()));
+    let out_plain = engine_plain.serve_window(&reqs, 0.0).expect("plain leg");
+
+    // explicit zero-fault channel attached via the builder
+    let bare2 = common::sim_backend();
+    let engine_ch = ServingEngine::new(ctx.clone(), &bare2, Box::new(JDob::full()))
+        .with_channel(ChannelModel::none());
+    let out_ch = engine_ch.serve_window(&reqs, 0.0).expect("channel leg");
+
+    let csv_plain = serving_csv(&out_plain);
+    let csv_ch = serving_csv(&out_ch);
+    assert_eq!(csv_plain, csv_ch, "zero-fault ChannelModel must be bit-transparent");
+    assert_eq!(
+        out_plain.actual_t_free_abs.to_bits(),
+        out_ch.actual_t_free_abs.to_bits(),
+        "actual horizon must be bitwise identical"
+    );
+    assert_eq!(out_plain.ledger.total_j().to_bits(), out_ch.ledger.total_j().to_bits());
+    assert_eq!(
+        out_plain.ledger.device_tx_j.to_bits(),
+        out_ch.ledger.device_tx_j.to_bits(),
+        "planned tx energy must be untouched by the fault-free channel"
+    );
+    assert_eq!(out_ch.ledger.retransmit_tx_j.to_bits(), 0.0f64.to_bits());
+    assert_eq!(
+        engine_ch.channel.stats().uploads,
+        0,
+        "fault-free channel fast path must never draw or count uploads"
+    );
+    for out in [&out_plain, &out_ch] {
+        assert_eq!(out.metrics.stragglers_evicted, 0);
+        assert_eq!(out.metrics.retransmits, 0);
+        assert_eq!(out.metrics.max_straggler_wait_s.to_bits(), 0.0f64.to_bits());
+        assert!(out.metrics.fault_log.is_empty());
+        assert!(out.responses.iter().all(|r| r.outcome.is_served()));
+    }
+    // the pre-channel golden still holds, bit for bit: attaching the
+    // zero-fault channel is behaviorally invisible
+    check_or_bless("serving_window_sim.csv", &csv_plain, 0.0);
+    check_or_bless("serving_window_sim.csv", &csv_ch, 0.0);
+}
+
+#[test]
 fn golden_runs_are_reproducible_in_process() {
     // The blessing scheme is only sound if two in-process runs agree
     // bitwise; pin that explicitly.

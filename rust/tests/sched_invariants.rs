@@ -17,18 +17,24 @@
 //! * under any `FaultPlan`, the execution-corrected `t_free` stays
 //!   monotone and never runs behind the last *actual* (chaos-skewed)
 //!   completion — through both correction paths (`observe_completion`
-//!   and the `ExecFeedback` channel).
+//!   and the `ExecFeedback` channel);
+//! * a shed arrival never consumes GPU horizon: removing the shed
+//!   arrivals from the trace and re-running without the shed wrapper
+//!   reproduces the identical windows and the identical `t_free`
+//!   trajectory.
 
 mod common;
 
 use common::ctx;
 use jdob::algo::jdob::JDob;
+use jdob::algo::types::User;
 use jdob::coordinator::engine::ServingEngine;
 use jdob::coordinator::request::InferenceRequest;
-use jdob::sched::admission::{AdmissionPolicy, EarliestSlack, SizeBound, TimeBound};
+use jdob::energy::device::DeviceModel;
+use jdob::sched::admission::{AdmissionPolicy, EarliestSlack, ShedOnOverload, SizeBound, TimeBound};
 use jdob::sched::clock::VirtualClock;
 use jdob::sched::pipeline::run_pipelined;
-use jdob::sched::scheduler::{run_events, Arrival, Scheduler, SliceSource};
+use jdob::sched::scheduler::{run_events, run_events_with_shed, Arrival, Scheduler, SliceSource};
 use jdob::sim::online::{poisson_arrivals, run_online};
 use jdob::util::rng::Rng;
 
@@ -348,4 +354,105 @@ fn parity_virtual_sim_and_pipelined_server_plans_identical() {
         stats.total_energy_j
     );
     assert_eq!(ledger.deadline_hits, stats.deadline_hits);
+}
+
+#[test]
+fn prop_shed_arrivals_never_consume_gpu_horizon() {
+    let mut total_shed = 0usize;
+    let mut total_served = 0usize;
+    for seed in 0..24u64 {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5_4ED);
+        let rate = rng.gen_range(20.0, 60.0);
+        let horizon = rng.gen_range(0.4, 1.2);
+        // tight low betas so the overload gate actually fires
+        let mut arr =
+            poisson_arrivals(&c, rate, horizon, (0.02, 12.0), &mut rng).expect("valid args");
+        // sentinel: a generously-deadlined closer so the trace never ends
+        // on a shed arrival — a trailing shed would legitimately move the
+        // final stream-closed instant between the two runs, which is a
+        // clock artifact, not a scheduling difference
+        let dev = DeviceModel::from_config(&c.cfg);
+        let total_work = c.tables.total_work();
+        let at = arr.last().map_or(0.0, |a| a.at) + 0.25;
+        arr.push(Arrival::new(
+            User {
+                id: arr.len(),
+                deadline: User::deadline_from_beta(50.0, &dev, total_work),
+                dev: dev.clone(),
+            },
+            at,
+        ));
+        let n = arr.len();
+        let window_s = rng.gen_range(0.01, 0.1);
+        let cap = 1 + rng.gen_index(16);
+        let guard = rng.gen_range(0.005, 0.08);
+
+        // run A: overload shedding on, collecting shed ids and windows
+        let solver = JDob::full();
+        let mut sched_a = Scheduler::new(
+            c.clone(),
+            &solver,
+            Box::new(ShedOnOverload::new(Box::new(TimeBound::new(window_s, cap)), guard)),
+        );
+        let mut clock_a = VirtualClock::new();
+        let mut source_a = SliceSource::new(arr.clone());
+        let mut shed_ids: Vec<usize> = Vec::new();
+        let mut windows_a: Vec<(WindowPrint, u64)> = Vec::new();
+        let mut shed_in_windows = 0usize;
+        run_events_with_shed(
+            &mut sched_a,
+            &mut clock_a,
+            &mut source_a,
+            &mut |_, p| {
+                shed_in_windows += p.shed;
+                windows_a.push((fingerprint(&p), p.t_free_abs.to_bits()));
+                true
+            },
+            &mut |a| shed_ids.push(a.user.id),
+        );
+        let shed: std::collections::HashSet<usize> = shed_ids.iter().copied().collect();
+        assert_eq!(shed.len(), shed_ids.len(), "seed {seed}: shed ids must be unique");
+        assert!(!shed.contains(&(n - 1)), "seed {seed}: the sentinel must be admitted");
+        assert_eq!(sched_a.stats().shed, shed_ids.len(), "seed {seed}: shed counter");
+        assert_eq!(
+            shed_in_windows,
+            shed_ids.len(),
+            "seed {seed}: every shed must drain into a window's shed counter"
+        );
+        assert_eq!(
+            sched_a.stats().served + shed_ids.len(),
+            n,
+            "seed {seed}: served + shed must partition the trace"
+        );
+
+        // run B: the shed arrivals removed from the trace, bare inner
+        // policy — if sheds consumed any GPU horizon, these runs diverge
+        let pruned: Vec<Arrival> =
+            arr.iter().filter(|a| !shed.contains(&a.user.id)).cloned().collect();
+        let mut sched_b =
+            Scheduler::new(c.clone(), &solver, Box::new(TimeBound::new(window_s, cap)));
+        let mut clock_b = VirtualClock::new();
+        let mut source_b = SliceSource::new(pruned);
+        let mut windows_b: Vec<(WindowPrint, u64)> = Vec::new();
+        let mut shed_in_b = 0usize;
+        run_events(&mut sched_b, &mut clock_b, &mut source_b, &mut |_, p| {
+            shed_in_b += p.shed;
+            windows_b.push((fingerprint(&p), p.t_free_abs.to_bits()));
+            true
+        });
+        assert_eq!(shed_in_b, 0, "seed {seed}: the bare policy sheds nothing");
+        assert_eq!(sched_b.stats().shed, 0, "seed {seed}");
+        assert_eq!(sched_b.stats().served, sched_a.stats().served, "seed {seed}");
+        // window closes, memberships, plans and the t_free trajectory
+        // (bitwise) are identical: a shed arrival leaves zero trace
+        assert_eq!(
+            windows_a, windows_b,
+            "seed {seed}: shed arrivals must never consume GPU horizon"
+        );
+        total_shed += shed_ids.len();
+        total_served += sched_a.stats().served;
+    }
+    assert!(total_shed > 0, "no seed ever shed: the property is vacuous");
+    assert!(total_served > 0, "no seed ever served: the property is vacuous");
 }
