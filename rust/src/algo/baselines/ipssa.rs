@@ -138,12 +138,7 @@ impl IpSsa {
             let violator = (0..users.len())
                 .filter(|&i| choices[i].n_tilde < n)
                 .filter(|&i| !le_eps(finish, users[i].deadline))
-                .min_by(|&a, &b| {
-                    users[a]
-                        .deadline
-                        .partial_cmp(&users[b].deadline)
-                        .expect("finite")
-                });
+                .min_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
             if let Some(i) = violator {
                 // fall back to local computing for the tightest violator
                 let v = ctx.tables.total_work();

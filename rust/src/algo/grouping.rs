@@ -103,7 +103,7 @@ pub fn optimal_grouping_reference(
         return None;
     }
     let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| users[a].deadline.partial_cmp(&users[b].deadline).expect("finite"));
+    order.sort_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
     let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
     optimal_grouping_generic(ctx, &sorted, &order, solver, t_free0)
 }
@@ -156,7 +156,7 @@ fn optimal_grouping_memo(
     let (best_idx, _) = frontier[m]
         .iter()
         .enumerate()
-        .min_by(|(_, a), (_, b)| a.energy.partial_cmp(&b.energy).expect("finite"))?;
+        .min_by(|(_, a), (_, b)| a.energy.total_cmp(&b.energy))?;
     let total_energy = frontier[m][best_idx].energy;
     let t_free_end = frontier[m][best_idx].t_free;
 
@@ -249,7 +249,7 @@ fn optimal_grouping_generic(
     let (best_idx, _) = frontier[m]
         .iter()
         .enumerate()
-        .min_by(|(_, a), (_, b)| a.energy.partial_cmp(&b.energy).expect("finite"))?;
+        .min_by(|(_, a), (_, b)| a.energy.total_cmp(&b.energy))?;
     let total_energy = frontier[m][best_idx].energy;
     let t_free_end = frontier[m][best_idx].t_free;
 
@@ -279,9 +279,7 @@ fn pareto_prune_by<T>(mut states: Vec<T>, key: impl Fn(&T) -> (f64, f64)) -> Vec
     states.sort_by(|a, b| {
         let (ea, ta) = key(a);
         let (eb, tb) = key(b);
-        ea.partial_cmp(&eb)
-            .expect("finite")
-            .then(ta.partial_cmp(&tb).expect("finite"))
+        ea.total_cmp(&eb).then(ta.total_cmp(&tb))
     });
     let mut out: Vec<T> = Vec::new();
     let mut best_tfree = f64::INFINITY;

@@ -67,9 +67,9 @@ pub(crate) fn slack_ascending_cmp(
 ) -> std::cmp::Ordering {
     let di = users[i].deadline - g[i];
     let dj = users[j].deadline - g[j];
-    di.partial_cmp(&dj)
-        .expect("finite slack")
-        .then(g[j].partial_cmp(&g[i]).expect("finite gamma"))
+    // total order: NaN slack (poisoned deadline/gamma) sorts deterministically
+    // instead of panicking the planner mid-window
+    di.total_cmp(&dj).then(g[j].total_cmp(&g[i]))
 }
 
 /// Build the peel order and threshold sequence (Alg. 1 lines 4-6).
@@ -109,7 +109,7 @@ pub fn build_setup_from_gammas(
             order.sort_by(|&i, &j| slack_ascending_cmp(users, g, i, j));
         }
         PeelOrder::GammaDescending => {
-            order.sort_by(|&i, &j| g[j].partial_cmp(&g[i]).expect("finite gamma"));
+            order.sort_by(|&i, &j| g[j].total_cmp(&g[i]));
         }
     }
 

@@ -196,12 +196,7 @@ impl PlannerWorkspace {
     pub fn new(ctx: &PlanningContext, users: &[User]) -> Self {
         let m = users.len();
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| {
-            users[a]
-                .deadline
-                .partial_cmp(&users[b].deadline)
-                .expect("finite")
-        });
+        order.sort_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
         let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
         Self {
             m,
@@ -386,12 +381,7 @@ impl PlannerWorkspace {
 
         // Selection order: (price, enumeration) — the sequential sweep's
         // strict-`<` keeps the first-enumerated among exact price ties.
-        cands.sort_unstable_by(|a, b| {
-            a.price
-                .partial_cmp(&b.price)
-                .expect("finite price")
-                .then(a.seq.cmp(&b.seq))
-        });
+        cands.sort_unstable_by(|a, b| a.price.total_cmp(&b.price).then(a.seq.cmp(&b.seq)));
         // Staircase prune: a candidate whose feasibility horizon does not
         // exceed an earlier (cheaper-or-tied) candidate's can never win.
         let mut stair = Vec::new();

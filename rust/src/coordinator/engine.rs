@@ -69,6 +69,7 @@
 //! [`ExecSkew`]: crate::runtime::ExecSkew
 
 use std::borrow::Borrow;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
@@ -79,6 +80,7 @@ use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::metrics::{GroupTelemetry, ServingMetrics};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestOutcome};
 use crate::energy::device::DeviceModel;
+use crate::obs::{emit_with, DvfsScope, Event, NullSink, TraceSink};
 use crate::runtime::chaos::{fault_class, FaultClass};
 use crate::runtime::netchaos::ChannelModel;
 use crate::runtime::InferenceBackend;
@@ -181,6 +183,11 @@ pub struct ServingEngine<'rt> {
     /// batch-form time. Defaults to [`ChannelModel::none`], whose path is
     /// bit-transparent (no RNG draw, no arithmetic on planned figures).
     pub channel: ChannelModel,
+    /// Executor-side trace sink (group launches/retries/replans, straggler
+    /// evictions, terminal request outcomes, per-window ledger snapshots).
+    /// [`NullSink`] by default: events are built inside [`emit_with`]
+    /// closures, so the disabled path never allocates.
+    sink: Arc<dyn TraceSink>,
 }
 
 impl<'rt> ServingEngine<'rt> {
@@ -195,6 +202,7 @@ impl<'rt> ServingEngine<'rt> {
             solver: Some(solver),
             recovery: RecoveryPolicy::default(),
             channel: ChannelModel::none(),
+            sink: Arc::new(NullSink),
         }
     }
 
@@ -208,6 +216,7 @@ impl<'rt> ServingEngine<'rt> {
             solver: None,
             recovery: RecoveryPolicy::default(),
             channel: ChannelModel::none(),
+            sink: Arc::new(NullSink),
         }
     }
 
@@ -222,6 +231,14 @@ impl<'rt> ServingEngine<'rt> {
     /// GPU+uplink fault runs.
     pub fn with_channel(mut self, channel: ChannelModel) -> Self {
         self.channel = channel;
+        self
+    }
+
+    /// Route executor-side trace events to `sink` (builder style). The
+    /// server passes the same sink the planner writes to, so one stream
+    /// carries both sides of every window.
+    pub fn with_sink(mut self, sink: Arc<dyn TraceSink>) -> Self {
+        self.sink = sink;
         self
     }
 
@@ -340,6 +357,36 @@ impl<'rt> ServingEngine<'rt> {
             .into_iter()
             .map(|r| r.expect("slot filled by the safety net above"))
             .collect();
+        if self.sink.enabled() {
+            for resp in &responses {
+                let (outcome, cause) = match &resp.outcome {
+                    RequestOutcome::Served => ("served", String::new()),
+                    RequestOutcome::Degraded => ("degraded", String::new()),
+                    RequestOutcome::Failed(msg) => ("failed", msg.clone()),
+                };
+                self.sink.emit(&Event::RequestOutcome {
+                    window_seq: planned.seq,
+                    user_id: resp.user_id,
+                    outcome: outcome.to_string(),
+                    cause,
+                    offloaded: resp.offloaded,
+                    partition: resp.partition,
+                    modeled_latency_s: resp.modeled_latency_s,
+                    deadline_met: resp.deadline_met,
+                });
+            }
+            self.sink.emit(&Event::LedgerSnapshot {
+                window_seq: planned.seq,
+                device_compute_j: st.ledger.device_compute_j,
+                device_tx_j: st.ledger.device_tx_j,
+                retransmit_tx_j: st.ledger.retransmit_tx_j,
+                edge_j: st.ledger.edge_j,
+                total_j: st.ledger.total_j(),
+                requests: st.ledger.requests,
+                deadline_hits: st.ledger.deadline_hits,
+                deadline_misses: st.ledger.deadline_misses,
+            });
+        }
         Ok(ServeOutcome {
             responses,
             ledger: st.ledger,
@@ -393,6 +440,15 @@ impl<'rt> ServingEngine<'rt> {
                     // all-local group: no edge batch, only cascade bookkeeping
                     st.gpu_free_abs = st.gpu_free_abs.max(planned.close + plan.t_free_end);
                     st.metrics.record_group(Self::telemetry(plan, member_ids.len(), 0));
+                    emit_with(&*self.sink, || Event::GroupLaunched {
+                        window_seq: planned.seq,
+                        users: member_ids.len(),
+                        batch_size: 0,
+                        partition: plan.partition,
+                        f_edge_hz: 0.0,
+                        edge_energy_j: plan.edge_energy,
+                        retries: 0,
+                    });
                     continue;
                 }
 
@@ -429,6 +485,23 @@ impl<'rt> ServingEngine<'rt> {
                 ) {
                     Ok(retries) => {
                         st.metrics.record_group(Self::telemetry(plan, member_ids.len(), retries));
+                        if self.sink.enabled() {
+                            self.sink.emit(&Event::GroupLaunched {
+                                window_seq: planned.seq,
+                                users: member_ids.len(),
+                                batch_size: plan.batch_size,
+                                partition: plan.partition,
+                                f_edge_hz: plan.f_edge,
+                                edge_energy_j: plan.edge_energy,
+                                retries,
+                            });
+                            self.sink.emit(&Event::DvfsChosen {
+                                window_seq: planned.seq,
+                                scope: DvfsScope::Edge,
+                                user_id: None,
+                                f_hz: plan.f_edge,
+                            });
+                        }
                     }
                     Err(cause) => {
                         // this group is lost; everything planned behind it
@@ -467,7 +540,15 @@ impl<'rt> ServingEngine<'rt> {
                         "{} straggler(s) evicted; replanning at the corrected horizon",
                         stranded.len()
                     ));
-                    self.replan_members(requests, planned, slots, st, replans_left, &stranded);
+                    self.replan_members(
+                        requests,
+                        planned,
+                        slots,
+                        st,
+                        replans_left,
+                        &stranded,
+                        "straggler eviction",
+                    );
                 }
             }
         }
@@ -538,6 +619,12 @@ impl<'rt> ServingEngine<'rt> {
                 // request bills it
                 st.wasted_tx_j[slots[wi]] += out.actual_tx_j;
                 st.metrics.stragglers_evicted += 1;
+                emit_with(&*self.sink, || Event::StragglerEvicted {
+                    window_seq: planned.seq,
+                    user_id: u.id,
+                    late_s: late,
+                    delivered: out.delivered,
+                });
                 st.metrics.fault_log.push(format!(
                     "user {}: upload {} (+{:.3} ms over plan, budget {:.3} ms); \
                      evicted from batch",
@@ -611,6 +698,11 @@ impl<'rt> ServingEngine<'rt> {
                             attempt += 1;
                             st.metrics.retries += 1;
                             st.gpu_free_abs += self.recovery.retry_backoff_s;
+                            emit_with(&*self.sink, || Event::GroupRetried {
+                                window_seq: planned.seq,
+                                attempt,
+                                cause: format!("{e:#}"),
+                            });
                         }
                         FaultClass::Hang { lost_s } => {
                             // abandoned at the virtual timeout — never
@@ -761,7 +853,8 @@ impl<'rt> ServingEngine<'rt> {
         replans_left: usize,
         cause: anyhow::Error,
     ) {
-        st.metrics.fault_log.push(format!("group execution degraded: {cause:#}"));
+        let msg = format!("group execution degraded: {cause:#}");
+        st.metrics.fault_log.push(msg.clone());
         let rem: Vec<usize> = (0..planned.eligible.len())
             .filter(|&eidx| st.responses[slots[planned.eligible_pos[eidx]]].is_none())
             .collect();
@@ -769,7 +862,7 @@ impl<'rt> ServingEngine<'rt> {
         if rem.is_empty() {
             return;
         }
-        self.replan_members(requests, planned, slots, st, replans_left, &rem);
+        self.replan_members(requests, planned, slots, st, replans_left, &rem, &msg);
     }
 
     /// Re-plan a set of still-unserved eligible members (`rem` holds
@@ -778,6 +871,7 @@ impl<'rt> ServingEngine<'rt> {
     /// group-failure remainder path and the straggler-eviction path; a
     /// no-op (the local loop absorbs the members) when no solver or no
     /// replan budget is available.
+    #[allow(clippy::too_many_arguments)]
     fn replan_members<Q: Borrow<InferenceRequest>>(
         &self,
         requests: &[Q],
@@ -786,6 +880,7 @@ impl<'rt> ServingEngine<'rt> {
         st: &mut WindowExec,
         replans_left: usize,
         rem: &[usize],
+        cause: &str,
     ) {
         let solver = if replans_left > 0 {
             self.solver.as_deref()
@@ -816,7 +911,14 @@ impl<'rt> ServingEngine<'rt> {
             })
             .collect();
         st.metrics.replans += 1;
-        let replanned = plan_window(&self.ctx, solver, &arrivals, close2, close2);
+        emit_with(&*self.sink, || Event::GroupReplanned {
+            window_seq: planned.seq,
+            members: rem.len(),
+            cause: cause.to_string(),
+        });
+        let mut replanned = plan_window(&self.ctx, solver, &arrivals, close2, close2);
+        // nested execution keeps reporting under the top-level window
+        replanned.seq = planned.seq;
         let slots2: Vec<usize> = rem
             .iter()
             .map(|&eidx| slots[planned.eligible_pos[eidx]])

@@ -1,34 +1,72 @@
 //! Minimal metrics registry: counters + latency summaries, no external
 //! deps, lock-free reads not needed at this scale (plans are per-window).
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Online latency summary: p50/p95/max over recorded samples.
-#[derive(Debug, Default, Clone)]
+///
+/// Quantile reads sort lazily and cache the sorted order, so a reporting
+/// loop calling `p50()`/`p95()` repeatedly pays the O(n log n) sort once
+/// per recorded sample batch instead of once per read.
+#[derive(Debug, Default)]
 pub struct LatencySummary {
     samples: Vec<f64>,
+    /// Sorted copy of `samples` (total order), built on first quantile
+    /// read and invalidated by `record`/`record_s`.
+    sorted: Mutex<Option<Vec<f64>>>,
+}
+
+impl Clone for LatencySummary {
+    fn clone(&self) -> Self {
+        Self {
+            samples: self.samples.clone(),
+            // the cache is cheap to rebuild; don't clone under the lock
+            sorted: Mutex::new(None),
+        }
+    }
 }
 
 impl LatencySummary {
     pub fn record(&mut self, d: Duration) {
-        self.samples.push(d.as_secs_f64());
+        self.record_s(d.as_secs_f64());
     }
 
     pub fn record_s(&mut self, s: f64) {
         self.samples.push(s);
+        // &mut self: no other thread holds the lock, so get_mut cannot
+        // block; a poisoned cache is just dropped and rebuilt
+        match self.sorted.get_mut() {
+            Ok(c) => *c = None,
+            Err(p) => *p.into_inner() = None,
+        }
     }
 
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// The raw recorded samples, in record order (exported into the
+    /// [`crate::obs`] registry histogram by `obs::export`).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
     fn quantile(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples.clone();
-        // total order: a stray NaN sample must not panic the serving path
-        v.sort_by(|a, b| a.total_cmp(b));
+        let mut guard = match self.sorted.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let v = guard.get_or_insert_with(|| {
+            let mut v = self.samples.clone();
+            // total order: a stray NaN sample must not panic the serving
+            // path (NaN sorts after every finite value)
+            v.sort_by(|a, b| a.total_cmp(b));
+            v
+        });
         let idx = ((v.len() - 1) as f64 * q).round() as usize;
         v[idx]
     }
@@ -41,8 +79,23 @@ impl LatencySummary {
         self.quantile(0.95)
     }
 
+    /// Largest finite-or-comparable sample, or `None` when nothing useful
+    /// was recorded (no samples, or all samples NaN). The honest variant
+    /// of [`max`](Self::max).
+    pub fn try_max(&self) -> Option<f64> {
+        self.samples
+            .iter()
+            .copied()
+            .filter(|v| !v.is_nan())
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Largest sample, with `0.0` standing in for "nothing recorded" —
+    /// kept for report formatting where a zero reads naturally. Callers
+    /// that must distinguish empty/all-NaN from a true zero use
+    /// [`try_max`](Self::try_max).
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+        self.try_max().unwrap_or(0.0)
     }
 
     pub fn mean(&self) -> f64 {
@@ -248,6 +301,33 @@ mod tests {
         s.record_s(0.020);
         // must not panic; NaN sorts to the end under total order
         let _ = (s.p50(), s.p95());
+    }
+
+    #[test]
+    fn try_max_distinguishes_empty_and_all_nan_from_zero() {
+        let mut s = LatencySummary::default();
+        assert_eq!(s.try_max(), None);
+        assert_eq!(s.max(), 0.0);
+        s.record_s(f64::NAN);
+        assert_eq!(s.try_max(), None, "all-NaN must not masquerade as 0.0");
+        s.record_s(0.015);
+        assert_eq!(s.try_max(), Some(0.015));
+        assert_eq!(s.max(), 0.015);
+    }
+
+    #[test]
+    fn sorted_cache_invalidates_on_record() {
+        let mut s = LatencySummary::default();
+        s.record_s(0.030);
+        assert!((s.p50() - 0.030).abs() < 1e-12);
+        // a new sample after a quantile read must be visible (the cached
+        // sorted order is invalidated, not served stale)
+        s.record_s(0.010);
+        assert!((s.p50() - 0.010).abs() < 1e-12 || (s.p50() - 0.030).abs() < 1e-12);
+        assert!((s.p95() - 0.030).abs() < 1e-12);
+        let c = s.clone();
+        assert_eq!(c.count(), 2);
+        assert!((c.p95() - 0.030).abs() < 1e-12);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -28,6 +29,10 @@ use crate::coordinator::engine::ServingEngine;
 use crate::coordinator::ledger::EnergyLedger;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse};
 use crate::energy::device::DeviceModel;
+use crate::obs::{
+    export_ledger, export_serving_metrics, register_serving_schema, Observability,
+    DEFAULT_TRACE_RING,
+};
 use crate::runtime::{default_backend, InferenceBackend};
 use crate::sched::admission::{AdmissionPolicy, TimeBound};
 use crate::sched::clock::WallClock;
@@ -53,9 +58,38 @@ pub struct Enqueued {
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: SyncSender<Enqueued>,
+    obs: Observability,
 }
 
 impl ServerHandle {
+    /// The observability bundle the server threads write into.
+    pub fn observability(&self) -> &Observability {
+        &self.obs
+    }
+
+    /// Operational exposition over the existing transport — no HTTP stack
+    /// in the offline vendor set, so "endpoints" are paths answered
+    /// in-process (a CLI or a thin socket shim routes strings here):
+    ///
+    /// * `/metrics` — Prometheus-style text;
+    /// * `/metrics.json` — the same registry as canonical JSON;
+    /// * `/trace/last_window` — JSONL of the most recent planned window's
+    ///   events (requires in-memory tracing, the default).
+    pub fn ops(&self, path: &str) -> Result<String, String> {
+        match path {
+            "/metrics" => Ok(self.obs.registry.render_text()),
+            "/metrics.json" => Ok(self.obs.registry.to_json().to_string()),
+            "/trace/last_window" => self
+                .obs
+                .ring
+                .as_ref()
+                .map(|r| r.last_window_jsonl())
+                .ok_or_else(|| "tracing is not in-memory; no last-window buffer".to_string()),
+            other => Err(format!(
+                "unknown ops route {other:?}; routes: /metrics, /metrics.json, /trace/last_window"
+            )),
+        }
+    }
     /// Submit a request and block until its response arrives.
     pub fn submit(&self, request: InferenceRequest) -> Result<InferenceResponse, String> {
         let reply_rx = self.submit_async(request)?;
@@ -198,12 +232,19 @@ fn planner_loop<F>(
     depth: usize,
     rx: Receiver<Enqueued>,
     epoch: Instant,
+    obs: Observability,
 ) -> anyhow::Result<EnergyLedger>
 where
     F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send,
 {
     let solver = solver_from_name(solver_name);
     let mut sched = Scheduler::new(ctx.clone(), solver.as_ref(), admission);
+    // observability: the scheduler streams planner-side series and window
+    // events; the full serving schema is pre-registered so /metrics lists
+    // every series (exec ones included) before the first request lands
+    register_serving_schema(&obs.registry);
+    sched.attach_registry(&obs.registry);
+    sched.set_sink(Arc::clone(&obs.sink));
     // execution feedback: the executor reports actual completion times so
     // the planner's t_free tracks a faulty/straggling GPU, not the model
     let fb = sched.attach_feedback();
@@ -234,7 +275,7 @@ where
                 a.user.id
             )));
         },
-        move |batches| executor_loop(ctx, make_backend, solver_name, fb, ready_tx, batches),
+        move |batches| executor_loop(ctx, make_backend, solver_name, fb, ready_tx, batches, obs),
     )
 }
 
@@ -251,6 +292,7 @@ fn executor_loop<F>(
     fb: ExecFeedback,
     ready: Sender<bool>,
     batches: Receiver<PlannedBatch<Enqueued>>,
+    obs: Observability,
 ) -> anyhow::Result<EnergyLedger>
 where
     F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>>,
@@ -274,7 +316,8 @@ where
         return Err(e.context("backend warmup"));
     }
     let _ = ready.send(true);
-    let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name));
+    let engine = ServingEngine::new(ctx, backend.as_ref(), solver_from_name(solver_name))
+        .with_sink(Arc::clone(&obs.sink));
     let mut cumulative = EnergyLedger::default();
     while let Ok(batch) = batches.recv() {
         let requests: Vec<&InferenceRequest> =
@@ -284,6 +327,10 @@ where
         match result {
             Ok(out) => {
                 fb.report(out.actual_t_free_abs);
+                // window-local structs: exactly one export per window, so
+                // the cumulative registry series never double-count
+                export_serving_metrics(&obs.registry, &out.metrics);
+                export_ledger(&obs.registry, &out.ledger);
                 cumulative.merge(&out.ledger);
                 for (a, resp) in batch.window.into_iter().zip(out.responses) {
                     // a terminal Failed outcome has no result to return:
@@ -336,14 +383,55 @@ pub fn start_with_admission<F>(
 where
     F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static,
 {
+    // default observability: metrics + a bounded in-memory event ring for
+    // `/trace/last_window` — cheap enough to be on unconditionally
+    start_observable(
+        ctx,
+        make_backend,
+        solver_name,
+        admission,
+        depth,
+        Observability::in_memory(DEFAULT_TRACE_RING),
+    )
+}
+
+/// [`start_with_admission`] with an explicit [`Observability`] bundle —
+/// pass [`Observability::with_jsonl`] to stream every trace event to disk
+/// (chaos runs, CI artifacts) or [`Observability::disabled`] for the
+/// zero-overhead configuration. The bundle stays readable through
+/// [`ServerHandle::observability`] / [`ServerHandle::ops`] while the
+/// server runs and after it drains.
+pub fn start_observable<F>(
+    ctx: PlanningContext,
+    make_backend: F,
+    solver_name: &'static str,
+    admission: Box<dyn AdmissionPolicy>,
+    depth: usize,
+    obs: Observability,
+) -> (ServerHandle, JoinHandle<anyhow::Result<EnergyLedger>>)
+where
+    F: FnOnce(&PlanningContext) -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
     let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
     // clock epoch precedes the handle: every submit stamp is >= epoch
     let epoch = Instant::now();
+    let thread_obs = obs.clone();
     let join = std::thread::Builder::new()
         .name("jdob-planner".into())
-        .spawn(move || planner_loop(ctx, make_backend, solver_name, admission, depth, rx, epoch))
+        .spawn(move || {
+            planner_loop(
+                ctx,
+                make_backend,
+                solver_name,
+                admission,
+                depth,
+                rx,
+                epoch,
+                thread_obs,
+            )
+        })
         .expect("spawning planner thread");
-    (ServerHandle { tx }, join)
+    (ServerHandle { tx, obs }, join)
 }
 
 /// Start a server over an explicit backend factory (run on the executor
@@ -394,6 +482,31 @@ mod tests {
             let s = solver_from_name(name);
             assert_eq!(s.name(), name);
         }
+    }
+
+    #[test]
+    fn ops_routes_resolve() {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        let h = ServerHandle {
+            tx,
+            obs: Observability::in_memory(8),
+        };
+        register_serving_schema(&h.observability().registry);
+        let text = h.ops("/metrics").expect("/metrics");
+        assert!(text.contains("jdob_windows_total"), "{text}");
+        let json = h.ops("/metrics.json").expect("/metrics.json");
+        assert!(json.contains("jdob_exec_requests_total"), "{json}");
+        // in-memory tracing is on: the route answers (empty before traffic)
+        assert_eq!(h.ops("/trace/last_window").expect("/trace"), "");
+        let err = h.ops("/nope").unwrap_err();
+        assert!(err.contains("/metrics"), "{err}");
+        // disabled bundle: the trace route reports itself unavailable
+        let (tx, _rx) = mpsc::sync_channel(1);
+        let h = ServerHandle {
+            tx,
+            obs: Observability::disabled(),
+        };
+        assert!(h.ops("/trace/last_window").is_err());
     }
 
     #[test]

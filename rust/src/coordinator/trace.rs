@@ -101,10 +101,16 @@ pub fn window_trace(ctx: &PlanningContext, planned: &PlannedWindow) -> Vec<Span>
 
 /// Render a fixed-width ASCII Gantt: one row per user, `width` columns over
 /// [0, horizon]. d = device compute, u = uplink, E = edge batch, L = local.
+///
+/// Spans with a non-finite start or end (a NaN latency from a corrupted
+/// model table or a fault-injected clock) are *skipped and counted*, never
+/// cast: `NaN as usize` would silently land on cell 0 and paint garbage.
+/// The footer reports how many were dropped.
 pub fn render_gantt(spans: &[Span], horizon: f64, width: usize) -> String {
     let mut users: Vec<usize> = spans.iter().map(|s| s.user).collect();
     users.sort_unstable();
     users.dedup();
+    let mut skipped = 0usize;
     let mut out = String::new();
     out.push_str(&format!(
         "        0 ms {:>width$}\n",
@@ -114,6 +120,10 @@ pub fn render_gantt(spans: &[Span], horizon: f64, width: usize) -> String {
     for &u in &users {
         let mut row = vec![b'.'; width];
         for s in spans.iter().filter(|s| s.user == u) {
+            if !s.start.is_finite() || !s.end.is_finite() {
+                skipped += 1;
+                continue;
+            }
             let c = match s.phase {
                 Phase::DeviceCompute => b'd',
                 Phase::Uplink => b'u',
@@ -132,6 +142,9 @@ pub fn render_gantt(spans: &[Span], horizon: f64, width: usize) -> String {
         ));
     }
     out.push_str("        d=device compute  u=uplink  E=edge batch  L=local\n");
+    if skipped > 0 {
+        out.push_str(&format!("        ({skipped} non-finite span(s) skipped)\n"));
+    }
     out
 }
 
@@ -229,11 +242,33 @@ mod tests {
             .filter(|s| s.phase == Phase::EdgeBatch)
             .map(|s| (s.start, s.end))
             .collect();
-        edges.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0));
         edges.dedup_by(|a, b| (a.0 - b.0).abs() < 1e-12 && (a.1 - b.1).abs() < 1e-12);
         for w in edges.windows(2) {
             assert!(w[1].0 >= w[0].1 - 1e-9, "edge batches overlap: {edges:?}");
         }
+    }
+
+    #[test]
+    fn gantt_skips_and_reports_nonfinite_spans() {
+        let (ctx, users, plan) = setup();
+        let mut spans = plan_trace(&ctx, &users, &plan, 0.0);
+        spans.push(Span {
+            user: 0,
+            phase: Phase::Uplink,
+            start: f64::NAN,
+            end: 0.5,
+        });
+        spans.push(Span {
+            user: 1,
+            phase: Phase::EdgeBatch,
+            start: 0.0,
+            end: f64::INFINITY,
+        });
+        // must not panic, must not paint the poisoned spans, must say so
+        let g = render_gantt(&spans, plan.t_free_end, 60);
+        assert!(g.contains("2 non-finite span(s) skipped"), "{g}");
+        assert!(g.contains("user   0"));
     }
 
     #[test]

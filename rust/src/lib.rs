@@ -40,6 +40,11 @@
 //! both sides honor the same contract (1-based blocks, zero-pad batching to
 //! buckets, lossless padding), pinned by `rust/tests/integration_runtime.rs`.
 //!
+//! Telemetry goes through [`obs`]: a dependency-free metrics registry
+//! (Prometheus-style text + JSON exposition) and typed window-trace events
+//! behind a zero-overhead-when-disabled [`obs::TraceSink`], emitted
+//! identically by the sim and the live server.
+//!
 //! Entry points: [`algo::jdob`] for planning, [`coordinator::server`]
 //! for serving, `bench::figures` for regenerating the paper's evaluation.
 
@@ -49,6 +54,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

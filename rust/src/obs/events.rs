@@ -1,0 +1,701 @@
+//! Typed trace events emitted by the serving stack.
+//!
+//! One enum, one wire format: every event serializes to a single-line JSON
+//! object (`{"event": "<kind>", ...fields}`) and parses back losslessly.
+//! The same schema is emitted by the online sim (planner-side events) and
+//! the live pipelined server (planner + executor events), so traces from
+//! both are diffable with the same tooling.
+//!
+//! JSON has no NaN/Inf literal, but chaos runs produce non-finite timings
+//! and the trace must carry them rather than lie or abort. Non-finite f64
+//! fields serialize as the strings `"NaN"` / `"inf"` / `"-inf"` and the
+//! event object gains `"flagged_nonfinite": true` so downstream tooling can
+//! filter degraded records. `f64::NAN`'s canonical bit pattern round-trips
+//! exactly; finite floats round-trip bit-exactly through the shortest-form
+//! serializer in [`crate::util::json`].
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Which frequency knob a [`Event::DvfsChosen`] record refers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DvfsScope {
+    /// The shared edge GPU frequency picked for a batch group.
+    Edge,
+    /// A single device's local CPU frequency from the closed-form split.
+    Device,
+}
+
+impl DvfsScope {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DvfsScope::Edge => "edge",
+            DvfsScope::Device => "device",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "edge" => Ok(DvfsScope::Edge),
+            "device" => Ok(DvfsScope::Device),
+            other => Err(format!("unknown dvfs scope {other:?}")),
+        }
+    }
+}
+
+/// A structured trace record. See `obs/README.md` for the schema table.
+///
+/// `window_seq` is the 1-based sequence number the scheduler stamps on each
+/// planned window; executor-side events inherit it so a window's plan,
+/// execution and ledger lines can be joined from a flat JSONL stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A window was closed and planned (scheduler, L2).
+    WindowPlanned {
+        seq: u64,
+        close: f64,
+        rel_t_free: f64,
+        t_free_abs: f64,
+        requests: usize,
+        eligible: usize,
+        groups: usize,
+        planned_energy_j: f64,
+        shed: usize,
+    },
+    /// An arrival passed admission (scheduler gate).
+    RequestAdmitted {
+        user_id: usize,
+        at: f64,
+        absolute_deadline: f64,
+    },
+    /// An arrival was shed by the admission policy (scheduler gate).
+    RequestShed {
+        user_id: usize,
+        at: f64,
+        absolute_deadline: f64,
+    },
+    /// A batch group hit the backend (engine, L3). `batch_size == 0` means
+    /// an all-local group that never touched the edge.
+    GroupLaunched {
+        window_seq: u64,
+        users: usize,
+        batch_size: usize,
+        partition: usize,
+        f_edge_hz: f64,
+        edge_energy_j: f64,
+        retries: usize,
+    },
+    /// A transient backend fault triggered an in-place retry (engine).
+    GroupRetried {
+        window_seq: u64,
+        attempt: usize,
+        cause: String,
+    },
+    /// Surviving members of a failed/evicted group were re-planned (engine).
+    GroupReplanned {
+        window_seq: u64,
+        members: usize,
+        cause: String,
+    },
+    /// A straggler exceeded the wait budget and was evicted (engine).
+    StragglerEvicted {
+        window_seq: u64,
+        user_id: usize,
+        late_s: f64,
+        delivered: bool,
+    },
+    /// A DVFS frequency decision, edge- or device-scoped.
+    DvfsChosen {
+        window_seq: u64,
+        scope: DvfsScope,
+        /// `Some(uid)` for device-scoped picks, `None` for the shared edge.
+        user_id: Option<usize>,
+        f_hz: f64,
+    },
+    /// Terminal per-request outcome after window execution (engine).
+    RequestOutcome {
+        window_seq: u64,
+        user_id: usize,
+        /// `"served"`, `"degraded"` or `"failed"`.
+        outcome: String,
+        cause: String,
+        offloaded: bool,
+        partition: usize,
+        modeled_latency_s: f64,
+        deadline_met: bool,
+    },
+    /// Per-window energy ledger snapshot (engine, after execution).
+    LedgerSnapshot {
+        window_seq: u64,
+        device_compute_j: f64,
+        device_tx_j: f64,
+        retransmit_tx_j: f64,
+        edge_j: f64,
+        total_j: f64,
+        requests: usize,
+        deadline_hits: usize,
+        deadline_misses: usize,
+    },
+    /// The planner found the hand-off queue full and blocked (pipeline).
+    PlannerStalled { window_seq: u64 },
+}
+
+/// Non-finite-safe f64 → Json (strings for NaN/±Inf, see module docs).
+fn jf(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        Json::Str("NaN".into())
+    } else if x > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn ju(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn get_f64(v: &Json, key: &str) -> Result<f64, String> {
+    match v.get(key).map_err(|e| e.to_string())? {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => Err(format!("field {key:?}: non-numeric string {other:?}")),
+        },
+        _ => Err(format!("field {key:?}: expected number")),
+    }
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .and_then(|j| j.as_usize())
+        .map_err(|e| format!("field {key:?}: {e}"))
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    Ok(get_usize(v, key)? as u64)
+}
+
+fn get_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(|j| j.as_str().map(str::to_string))
+        .map_err(|e| format!("field {key:?}: {e}"))
+}
+
+fn get_bool(v: &Json, key: &str) -> Result<bool, String> {
+    v.get(key)
+        .and_then(|j| j.as_bool())
+        .map_err(|e| format!("field {key:?}: {e}"))
+}
+
+impl Event {
+    /// Stable kind tag (the `"event"` field on the wire).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::WindowPlanned { .. } => "window_planned",
+            Event::RequestAdmitted { .. } => "request_admitted",
+            Event::RequestShed { .. } => "request_shed",
+            Event::GroupLaunched { .. } => "group_launched",
+            Event::GroupRetried { .. } => "group_retried",
+            Event::GroupReplanned { .. } => "group_replanned",
+            Event::StragglerEvicted { .. } => "straggler_evicted",
+            Event::DvfsChosen { .. } => "dvfs_chosen",
+            Event::RequestOutcome { .. } => "request_outcome",
+            Event::LedgerSnapshot { .. } => "ledger_snapshot",
+            Event::PlannerStalled { .. } => "planner_stalled",
+        }
+    }
+
+    /// The window this event belongs to, where applicable. Admission-gate
+    /// events fire before a window exists and return `None`.
+    pub fn window_seq(&self) -> Option<u64> {
+        match self {
+            Event::WindowPlanned { seq, .. } => Some(*seq),
+            Event::RequestAdmitted { .. } | Event::RequestShed { .. } => None,
+            Event::GroupLaunched { window_seq, .. }
+            | Event::GroupRetried { window_seq, .. }
+            | Event::GroupReplanned { window_seq, .. }
+            | Event::StragglerEvicted { window_seq, .. }
+            | Event::DvfsChosen { window_seq, .. }
+            | Event::RequestOutcome { window_seq, .. }
+            | Event::LedgerSnapshot { window_seq, .. }
+            | Event::PlannerStalled { window_seq } => Some(*window_seq),
+        }
+    }
+
+    /// True if any f64 payload field is non-finite (the serialized object
+    /// then carries `"flagged_nonfinite": true`).
+    pub fn has_nonfinite(&self) -> bool {
+        let fs: &[f64] = &match self {
+            Event::WindowPlanned {
+                close,
+                rel_t_free,
+                t_free_abs,
+                planned_energy_j,
+                ..
+            } => vec![*close, *rel_t_free, *t_free_abs, *planned_energy_j],
+            Event::RequestAdmitted {
+                at,
+                absolute_deadline,
+                ..
+            }
+            | Event::RequestShed {
+                at,
+                absolute_deadline,
+                ..
+            } => vec![*at, *absolute_deadline],
+            Event::GroupLaunched {
+                f_edge_hz,
+                edge_energy_j,
+                ..
+            } => vec![*f_edge_hz, *edge_energy_j],
+            Event::GroupRetried { .. }
+            | Event::GroupReplanned { .. }
+            | Event::PlannerStalled { .. } => vec![],
+            Event::StragglerEvicted { late_s, .. } => vec![*late_s],
+            Event::DvfsChosen { f_hz, .. } => vec![*f_hz],
+            Event::RequestOutcome {
+                modeled_latency_s, ..
+            } => vec![*modeled_latency_s],
+            Event::LedgerSnapshot {
+                device_compute_j,
+                device_tx_j,
+                retransmit_tx_j,
+                edge_j,
+                total_j,
+                ..
+            } => vec![
+                *device_compute_j,
+                *device_tx_j,
+                *retransmit_tx_j,
+                *edge_j,
+                *total_j,
+            ],
+        };
+        fs.iter().any(|x| !x.is_finite())
+    }
+
+    /// Serialize to the wire object. Deterministic for a given event
+    /// (fields land in a `BTreeMap`, so key order is canonical).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("event", Json::Str(self.kind().into()))];
+        match self {
+            Event::WindowPlanned {
+                seq,
+                close,
+                rel_t_free,
+                t_free_abs,
+                requests,
+                eligible,
+                groups,
+                planned_energy_j,
+                shed,
+            } => {
+                pairs.push(("seq", ju(*seq as usize)));
+                pairs.push(("close", jf(*close)));
+                pairs.push(("rel_t_free", jf(*rel_t_free)));
+                pairs.push(("t_free_abs", jf(*t_free_abs)));
+                pairs.push(("requests", ju(*requests)));
+                pairs.push(("eligible", ju(*eligible)));
+                pairs.push(("groups", ju(*groups)));
+                pairs.push(("planned_energy_j", jf(*planned_energy_j)));
+                pairs.push(("shed", ju(*shed)));
+            }
+            Event::RequestAdmitted {
+                user_id,
+                at,
+                absolute_deadline,
+            }
+            | Event::RequestShed {
+                user_id,
+                at,
+                absolute_deadline,
+            } => {
+                pairs.push(("user_id", ju(*user_id)));
+                pairs.push(("at", jf(*at)));
+                pairs.push(("absolute_deadline", jf(*absolute_deadline)));
+            }
+            Event::GroupLaunched {
+                window_seq,
+                users,
+                batch_size,
+                partition,
+                f_edge_hz,
+                edge_energy_j,
+                retries,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("users", ju(*users)));
+                pairs.push(("batch_size", ju(*batch_size)));
+                pairs.push(("partition", ju(*partition)));
+                pairs.push(("f_edge_hz", jf(*f_edge_hz)));
+                pairs.push(("edge_energy_j", jf(*edge_energy_j)));
+                pairs.push(("retries", ju(*retries)));
+            }
+            Event::GroupRetried {
+                window_seq,
+                attempt,
+                cause,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("attempt", ju(*attempt)));
+                pairs.push(("cause", Json::Str(cause.clone())));
+            }
+            Event::GroupReplanned {
+                window_seq,
+                members,
+                cause,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("members", ju(*members)));
+                pairs.push(("cause", Json::Str(cause.clone())));
+            }
+            Event::StragglerEvicted {
+                window_seq,
+                user_id,
+                late_s,
+                delivered,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("user_id", ju(*user_id)));
+                pairs.push(("late_s", jf(*late_s)));
+                pairs.push(("delivered", Json::Bool(*delivered)));
+            }
+            Event::DvfsChosen {
+                window_seq,
+                scope,
+                user_id,
+                f_hz,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("scope", Json::Str(scope.as_str().into())));
+                pairs.push((
+                    "user_id",
+                    match user_id {
+                        Some(u) => ju(*u),
+                        None => Json::Null,
+                    },
+                ));
+                pairs.push(("f_hz", jf(*f_hz)));
+            }
+            Event::RequestOutcome {
+                window_seq,
+                user_id,
+                outcome,
+                cause,
+                offloaded,
+                partition,
+                modeled_latency_s,
+                deadline_met,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("user_id", ju(*user_id)));
+                pairs.push(("outcome", Json::Str(outcome.clone())));
+                pairs.push(("cause", Json::Str(cause.clone())));
+                pairs.push(("offloaded", Json::Bool(*offloaded)));
+                pairs.push(("partition", ju(*partition)));
+                pairs.push(("modeled_latency_s", jf(*modeled_latency_s)));
+                pairs.push(("deadline_met", Json::Bool(*deadline_met)));
+            }
+            Event::LedgerSnapshot {
+                window_seq,
+                device_compute_j,
+                device_tx_j,
+                retransmit_tx_j,
+                edge_j,
+                total_j,
+                requests,
+                deadline_hits,
+                deadline_misses,
+            } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+                pairs.push(("device_compute_j", jf(*device_compute_j)));
+                pairs.push(("device_tx_j", jf(*device_tx_j)));
+                pairs.push(("retransmit_tx_j", jf(*retransmit_tx_j)));
+                pairs.push(("edge_j", jf(*edge_j)));
+                pairs.push(("total_j", jf(*total_j)));
+                pairs.push(("requests", ju(*requests)));
+                pairs.push(("deadline_hits", ju(*deadline_hits)));
+                pairs.push(("deadline_misses", ju(*deadline_misses)));
+            }
+            Event::PlannerStalled { window_seq } => {
+                pairs.push(("window_seq", ju(*window_seq as usize)));
+            }
+        }
+        if self.has_nonfinite() {
+            pairs.push(("flagged_nonfinite", Json::Bool(true)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse one wire object back into an [`Event`]. Inverse of
+    /// [`Event::to_json`]; `flagged_nonfinite` is derived, not stored.
+    pub fn from_json(v: &Json) -> Result<Event, String> {
+        let kind = get_str(v, "event")?;
+        match kind.as_str() {
+            "window_planned" => Ok(Event::WindowPlanned {
+                seq: get_u64(v, "seq")?,
+                close: get_f64(v, "close")?,
+                rel_t_free: get_f64(v, "rel_t_free")?,
+                t_free_abs: get_f64(v, "t_free_abs")?,
+                requests: get_usize(v, "requests")?,
+                eligible: get_usize(v, "eligible")?,
+                groups: get_usize(v, "groups")?,
+                planned_energy_j: get_f64(v, "planned_energy_j")?,
+                shed: get_usize(v, "shed")?,
+            }),
+            "request_admitted" => Ok(Event::RequestAdmitted {
+                user_id: get_usize(v, "user_id")?,
+                at: get_f64(v, "at")?,
+                absolute_deadline: get_f64(v, "absolute_deadline")?,
+            }),
+            "request_shed" => Ok(Event::RequestShed {
+                user_id: get_usize(v, "user_id")?,
+                at: get_f64(v, "at")?,
+                absolute_deadline: get_f64(v, "absolute_deadline")?,
+            }),
+            "group_launched" => Ok(Event::GroupLaunched {
+                window_seq: get_u64(v, "window_seq")?,
+                users: get_usize(v, "users")?,
+                batch_size: get_usize(v, "batch_size")?,
+                partition: get_usize(v, "partition")?,
+                f_edge_hz: get_f64(v, "f_edge_hz")?,
+                edge_energy_j: get_f64(v, "edge_energy_j")?,
+                retries: get_usize(v, "retries")?,
+            }),
+            "group_retried" => Ok(Event::GroupRetried {
+                window_seq: get_u64(v, "window_seq")?,
+                attempt: get_usize(v, "attempt")?,
+                cause: get_str(v, "cause")?,
+            }),
+            "group_replanned" => Ok(Event::GroupReplanned {
+                window_seq: get_u64(v, "window_seq")?,
+                members: get_usize(v, "members")?,
+                cause: get_str(v, "cause")?,
+            }),
+            "straggler_evicted" => Ok(Event::StragglerEvicted {
+                window_seq: get_u64(v, "window_seq")?,
+                user_id: get_usize(v, "user_id")?,
+                late_s: get_f64(v, "late_s")?,
+                delivered: get_bool(v, "delivered")?,
+            }),
+            "dvfs_chosen" => Ok(Event::DvfsChosen {
+                window_seq: get_u64(v, "window_seq")?,
+                scope: DvfsScope::from_str(&get_str(v, "scope")?)?,
+                user_id: match v.get("user_id").map_err(|e| e.to_string())? {
+                    Json::Null => None,
+                    j => Some(j.as_usize().map_err(|e| e.to_string())?),
+                },
+                f_hz: get_f64(v, "f_hz")?,
+            }),
+            "request_outcome" => Ok(Event::RequestOutcome {
+                window_seq: get_u64(v, "window_seq")?,
+                user_id: get_usize(v, "user_id")?,
+                outcome: get_str(v, "outcome")?,
+                cause: get_str(v, "cause")?,
+                offloaded: get_bool(v, "offloaded")?,
+                partition: get_usize(v, "partition")?,
+                modeled_latency_s: get_f64(v, "modeled_latency_s")?,
+                deadline_met: get_bool(v, "deadline_met")?,
+            }),
+            "ledger_snapshot" => Ok(Event::LedgerSnapshot {
+                window_seq: get_u64(v, "window_seq")?,
+                device_compute_j: get_f64(v, "device_compute_j")?,
+                device_tx_j: get_f64(v, "device_tx_j")?,
+                retransmit_tx_j: get_f64(v, "retransmit_tx_j")?,
+                edge_j: get_f64(v, "edge_j")?,
+                total_j: get_f64(v, "total_j")?,
+                requests: get_usize(v, "requests")?,
+                deadline_hits: get_usize(v, "deadline_hits")?,
+                deadline_misses: get_usize(v, "deadline_misses")?,
+            }),
+            "planner_stalled" => Ok(Event::PlannerStalled {
+                window_seq: get_u64(v, "window_seq")?,
+            }),
+            other => Err(format!("unknown event kind {other:?}")),
+        }
+    }
+
+    /// The set of wire field names for this event's kind (the JSON object
+    /// keys minus the derived `flagged_nonfinite`). Used by schema-parity
+    /// tests comparing sim and live traces.
+    pub fn field_names(&self) -> Vec<String> {
+        match self.to_json() {
+            Json::Obj(m) => m
+                .keys()
+                .filter(|k| k.as_str() != "flagged_nonfinite")
+                .cloned()
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Serialize events to JSONL (one canonical JSON object per line).
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL stream back into events. Inverse of [`to_jsonl`].
+pub fn parse_jsonl(text: &str) -> Result<Vec<Event>, String> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let v = crate::util::json::Json::parse(l).map_err(|e| e.to_string())?;
+            Event::from_json(&v)
+        })
+        .collect()
+}
+
+/// Exhaustive sample of every event kind, used by round-trip and schema
+/// tests (kept here so adding a variant forces updating the samples).
+pub fn sample_events() -> Vec<Event> {
+    vec![
+        Event::WindowPlanned {
+            seq: 1,
+            close: 0.05,
+            rel_t_free: 0.0125,
+            t_free_abs: 0.0625,
+            requests: 4,
+            eligible: 3,
+            groups: 2,
+            planned_energy_j: 0.75,
+            shed: 1,
+        },
+        Event::RequestAdmitted {
+            user_id: 2,
+            at: 0.011,
+            absolute_deadline: 0.211,
+        },
+        Event::RequestShed {
+            user_id: 7,
+            at: 0.013,
+            absolute_deadline: 0.063,
+        },
+        Event::GroupLaunched {
+            window_seq: 1,
+            users: 3,
+            batch_size: 3,
+            partition: 4,
+            f_edge_hz: 1.0e9,
+            edge_energy_j: 0.25,
+            retries: 1,
+        },
+        Event::GroupRetried {
+            window_seq: 1,
+            attempt: 2,
+            cause: "transient: injected fault".into(),
+        },
+        Event::GroupReplanned {
+            window_seq: 1,
+            members: 2,
+            cause: "straggler eviction".into(),
+        },
+        Event::StragglerEvicted {
+            window_seq: 1,
+            user_id: 5,
+            late_s: 0.031,
+            delivered: false,
+        },
+        Event::DvfsChosen {
+            window_seq: 1,
+            scope: DvfsScope::Edge,
+            user_id: None,
+            f_hz: 1.25e9,
+        },
+        Event::DvfsChosen {
+            window_seq: 1,
+            scope: DvfsScope::Device,
+            user_id: Some(2),
+            f_hz: 1.5e8,
+        },
+        Event::RequestOutcome {
+            window_seq: 1,
+            user_id: 2,
+            outcome: "served".into(),
+            cause: String::new(),
+            offloaded: true,
+            partition: 4,
+            modeled_latency_s: 0.042,
+            deadline_met: true,
+        },
+        Event::LedgerSnapshot {
+            window_seq: 1,
+            device_compute_j: 0.125,
+            device_tx_j: 0.0625,
+            retransmit_tx_j: 0.0,
+            edge_j: 0.25,
+            total_j: 0.4375,
+            requests: 3,
+            deadline_hits: 2,
+            deadline_misses: 1,
+        },
+        Event::PlannerStalled { window_seq: 2 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_round_trips_exactly() {
+        let events = sample_events();
+        let wire = to_jsonl(&events);
+        let back = parse_jsonl(&wire).expect("parse back");
+        assert_eq!(back, events);
+        assert_eq!(to_jsonl(&back), wire, "re-serialization must be byte-stable");
+    }
+
+    #[test]
+    fn nonfinite_fields_are_flagged_and_round_trip() {
+        let e = Event::StragglerEvicted {
+            window_seq: 3,
+            user_id: 1,
+            late_s: f64::NAN,
+            delivered: false,
+        };
+        assert!(e.has_nonfinite());
+        let line = e.to_json().to_string();
+        assert!(line.contains("\"late_s\":\"NaN\""), "{line}");
+        assert!(line.contains("\"flagged_nonfinite\":true"), "{line}");
+        let back = parse_jsonl(&line).expect("parse")[0].clone();
+        match back {
+            Event::StragglerEvicted { late_s, .. } => {
+                assert_eq!(late_s.to_bits(), f64::NAN.to_bits());
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // ±Inf take the string path too
+        let inf = Event::DvfsChosen {
+            window_seq: 1,
+            scope: DvfsScope::Edge,
+            user_id: None,
+            f_hz: f64::INFINITY,
+        };
+        let back = parse_jsonl(&inf.to_json().to_string()).unwrap();
+        assert_eq!(back[0], inf);
+    }
+
+    #[test]
+    fn window_seq_joins_plan_and_exec_records() {
+        for e in sample_events() {
+            match e {
+                Event::RequestAdmitted { .. } | Event::RequestShed { .. } => {
+                    assert_eq!(e.window_seq(), None)
+                }
+                _ => assert!(e.window_seq().is_some(), "{} must carry a seq", e.kind()),
+            }
+        }
+    }
+}

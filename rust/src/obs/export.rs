@@ -1,0 +1,231 @@
+//! Bridges from the existing ad-hoc telemetry structs into the
+//! [`MetricsRegistry`], so the online sim and the live pipelined server
+//! expose *one* metric schema.
+//!
+//! Naming convention: planner-side series (admission gate + window solver,
+//! updated by the scheduler thread) have no stage prefix; executor-side
+//! series (what actually happened on the backend) are prefixed `jdob_exec_`.
+//! The sim has no executor, so its exec series legitimately stay at zero —
+//! but they are *registered* up front by [`register_serving_schema`], so
+//! `render_text()` from a sim run and a live run list the identical metric
+//! set and differ only in values.
+
+use super::metrics::{Counter, Gauge, Histogram, MetricsRegistry, LATENCY_BUCKETS_S};
+use crate::coordinator::ledger::EnergyLedger;
+use crate::coordinator::metrics::ServingMetrics;
+use crate::sched::OnlineStats;
+
+/// Planner-side handles, registered once and updated lock-free by the
+/// scheduler on every gate decision / planned window.
+#[derive(Debug, Clone)]
+pub struct PlannerMetrics {
+    pub windows: Counter,
+    pub admitted: Counter,
+    pub shed: Counter,
+    pub offloaded: Counter,
+    pub planned_deadline_hits: Counter,
+    pub stalls: Counter,
+    pub planned_energy_j: Gauge,
+    pub t_free_abs_s: Gauge,
+    pub modeled_latency: Histogram,
+}
+
+impl PlannerMetrics {
+    pub fn register(reg: &MetricsRegistry) -> Self {
+        Self {
+            windows: reg.counter("jdob_windows_total", "batch windows planned"),
+            admitted: reg.counter("jdob_requests_admitted_total", "arrivals past the admission gate"),
+            shed: reg.counter("jdob_requests_shed_total", "arrivals shed by the admission gate"),
+            offloaded: reg.counter("jdob_requests_offloaded_total", "planned requests with an offloaded split"),
+            planned_deadline_hits: reg.counter(
+                "jdob_planned_deadline_hits_total",
+                "planned requests whose modeled latency meets the deadline",
+            ),
+            stalls: reg.counter(
+                "jdob_planner_stalls_total",
+                "windows that found the planner-to-executor queue full",
+            ),
+            planned_energy_j: reg.gauge("jdob_planned_energy_joules", "cumulative planned system energy"),
+            t_free_abs_s: reg.gauge("jdob_t_free_seconds", "absolute time the edge GPU frees up"),
+            modeled_latency: reg.histogram(
+                "jdob_modeled_latency_seconds",
+                "planned per-request latency",
+                LATENCY_BUCKETS_S,
+            ),
+        }
+    }
+}
+
+/// Executor-side handles (per-window execution telemetry + energy ledger).
+#[derive(Debug, Clone)]
+pub struct ExecMetrics {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub batched_samples: Counter,
+    pub local_samples: Counter,
+    pub retries: Counter,
+    pub degraded: Counter,
+    pub replans: Counter,
+    pub deadline_misses: Counter,
+    pub failed: Counter,
+    pub stragglers_evicted: Counter,
+    pub retransmits: Counter,
+    pub wall_latency: Histogram,
+    pub ledger_device_compute_j: Gauge,
+    pub ledger_device_tx_j: Gauge,
+    pub ledger_retransmit_tx_j: Gauge,
+    pub ledger_edge_j: Gauge,
+    pub ledger_deadline_hits: Counter,
+    pub ledger_deadline_misses: Counter,
+}
+
+impl ExecMetrics {
+    pub fn register(reg: &MetricsRegistry) -> Self {
+        Self {
+            requests: reg.counter("jdob_exec_requests_total", "requests executed"),
+            batches: reg.counter("jdob_exec_batches_total", "edge batches launched"),
+            batched_samples: reg.counter("jdob_exec_batched_samples_total", "samples served via edge batches"),
+            local_samples: reg.counter("jdob_exec_local_samples_total", "samples served fully on-device"),
+            retries: reg.counter("jdob_exec_retries_total", "transient-fault retries burned"),
+            degraded: reg.counter("jdob_exec_degraded_total", "requests rerouted off their planned path"),
+            replans: reg.counter("jdob_exec_replans_total", "remainder replans after group failures"),
+            deadline_misses: reg.counter(
+                "jdob_exec_deadline_misses_total",
+                "planned deadline promises actual execution missed",
+            ),
+            failed: reg.counter("jdob_exec_failed_total", "requests with a terminal failed outcome"),
+            stragglers_evicted: reg.counter("jdob_exec_stragglers_evicted_total", "uploads evicted at batch-form time"),
+            retransmits: reg.counter("jdob_exec_retransmits_total", "uplink retransmission attempts"),
+            wall_latency: reg.histogram(
+                "jdob_exec_wall_latency_seconds",
+                "measured per-request wall latency",
+                LATENCY_BUCKETS_S,
+            ),
+            ledger_device_compute_j: reg.gauge("jdob_energy_device_compute_joules", "cumulative device compute energy"),
+            ledger_device_tx_j: reg.gauge("jdob_energy_device_tx_joules", "cumulative device transmission energy (retransmits included)"),
+            ledger_retransmit_tx_j: reg.gauge("jdob_energy_retransmit_tx_joules", "slice of tx energy beyond plan"),
+            ledger_edge_j: reg.gauge("jdob_energy_edge_joules", "cumulative edge GPU energy"),
+            ledger_deadline_hits: reg.counter("jdob_deadline_hits_total", "requests meeting their deadline (ledger)"),
+            ledger_deadline_misses: reg.counter("jdob_deadline_misses_total", "requests missing their deadline (ledger)"),
+        }
+    }
+}
+
+/// Pre-register every serving series so exposition lists the full schema
+/// before (or without) traffic — this is what makes a sim `/metrics` dump
+/// and a live one structurally identical.
+pub fn register_serving_schema(reg: &MetricsRegistry) {
+    let _ = PlannerMetrics::register(reg);
+    let _ = ExecMetrics::register(reg);
+}
+
+/// Fold one window's [`ServingMetrics`] (a *per-window* struct: the engine
+/// produces a fresh one per window) into the cumulative registry series.
+pub fn export_serving_metrics(reg: &MetricsRegistry, m: &ServingMetrics) {
+    let h = ExecMetrics::register(reg);
+    h.requests.add(m.requests as u64);
+    h.batches.add(m.batches as u64);
+    h.batched_samples.add(m.batched_samples as u64);
+    h.local_samples.add(m.local_samples as u64);
+    h.retries.add(m.retries as u64);
+    h.degraded.add(m.degraded_requests as u64);
+    h.replans.add(m.replans as u64);
+    h.deadline_misses.add(m.exec_deadline_misses as u64);
+    h.failed.add(m.failed_requests as u64);
+    h.stragglers_evicted.add(m.stragglers_evicted as u64);
+    h.retransmits.add(m.retransmits as u64);
+    for &s in m.wall_latency.samples() {
+        h.wall_latency.observe(s);
+    }
+}
+
+/// Fold one window's [`EnergyLedger`] into the cumulative registry series.
+/// Callers must pass the *window-local* ledger (not a running merge), or
+/// energy would be double-counted.
+pub fn export_ledger(reg: &MetricsRegistry, l: &EnergyLedger) {
+    let h = ExecMetrics::register(reg);
+    h.ledger_device_compute_j.add(l.device_compute_j);
+    h.ledger_device_tx_j.add(l.device_tx_j);
+    h.ledger_retransmit_tx_j.add(l.retransmit_tx_j);
+    h.ledger_edge_j.add(l.edge_j);
+    h.ledger_deadline_hits.add(l.deadline_hits as u64);
+    h.ledger_deadline_misses.add(l.deadline_misses as u64);
+}
+
+/// Fold a whole online-sim run's [`OnlineStats`] into the registry. Used
+/// by callers that ran an unobserved sim and want the end-state exported;
+/// observed runs (a scheduler with attached [`PlannerMetrics`]) already
+/// stream these incrementally and must not also call this.
+pub fn export_online_stats(reg: &MetricsRegistry, s: &OnlineStats) {
+    let h = PlannerMetrics::register(reg);
+    h.windows.add(s.windows as u64);
+    h.admitted.add(s.served as u64);
+    h.shed.add(s.shed as u64);
+    h.offloaded.add(s.offloaded as u64);
+    h.planned_deadline_hits.add(s.deadline_hits as u64);
+    h.planned_energy_j.add(s.total_energy_j);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_is_identical_with_and_without_traffic() {
+        let quiet = MetricsRegistry::new();
+        register_serving_schema(&quiet);
+
+        let busy = MetricsRegistry::new();
+        register_serving_schema(&busy);
+        let mut m = ServingMetrics {
+            requests: 3,
+            batches: 1,
+            batched_samples: 2,
+            local_samples: 1,
+            retries: 1,
+            ..Default::default()
+        };
+        m.wall_latency.record_s(0.015);
+        export_serving_metrics(&busy, &m);
+        let mut l = EnergyLedger::default();
+        l.record_request(0.5, 0.25, true);
+        l.record_edge(0.125);
+        export_ledger(&busy, &l);
+
+        let names = |text: &str| -> Vec<String> {
+            text.lines()
+                .filter(|ln| ln.starts_with("# TYPE "))
+                .map(|ln| ln.split_whitespace().nth(2).unwrap().to_string())
+                .collect()
+        };
+        assert_eq!(
+            names(&quiet.render_text()),
+            names(&busy.render_text()),
+            "metric schema must not depend on traffic"
+        );
+        let text = busy.render_text();
+        assert!(text.contains("jdob_exec_requests_total 3"), "{text}");
+        assert!(text.contains("jdob_energy_edge_joules 0.125"), "{text}");
+        assert!(text.contains("jdob_deadline_hits_total 1"), "{text}");
+    }
+
+    #[test]
+    fn online_stats_export_covers_planner_series() {
+        let reg = MetricsRegistry::new();
+        let s = OnlineStats {
+            served: 10,
+            deadline_hits: 9,
+            total_energy_j: 1.5,
+            offloaded: 6,
+            windows: 4,
+            mean_latency_s: 0.02,
+            shed: 2,
+        };
+        export_online_stats(&reg, &s);
+        let text = reg.render_text();
+        assert!(text.contains("jdob_windows_total 4"), "{text}");
+        assert!(text.contains("jdob_requests_admitted_total 10"), "{text}");
+        assert!(text.contains("jdob_requests_shed_total 2"), "{text}");
+        assert!(text.contains("jdob_planned_energy_joules 1.5"), "{text}");
+    }
+}

@@ -1,0 +1,434 @@
+//! Metrics registry: counters, gauges and fixed-bucket histograms with
+//! Prometheus-style text exposition and JSON export — no external deps.
+//!
+//! Design constraints (the same discipline as the exec arena):
+//! * **updates are lock-free and allocation-free** — registration hands out
+//!   cheap cloneable handles ([`Counter`], [`Gauge`], [`Histogram`]) backed
+//!   by atomics; the registry's mutex is only taken at registration and at
+//!   exposition time, never on the serving hot path;
+//! * **NaN-safe** — a non-finite observation can never poison a bucket, a
+//!   sum or a gauge: it is counted on the histogram's own `nan_count` and
+//!   on the registry-wide `jdob_telemetry_nan_total` counter instead, so
+//!   degraded/chaotic telemetry is *flagged*, not fatal and not silent;
+//! * **deterministic exposition** — metrics render in name order and f64s
+//!   print through Rust's shortest-round-trip formatting, so a seeded run
+//!   produces a byte-stable `render_text()` (pinned by a golden test).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Lock-free add of an f64 delta onto an atomic bit-store.
+fn add_f64(cell: &AtomicU64, dv: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + dv).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotone integer counter handle. Cloning shares the underlying cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, by: u64) {
+        self.0.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// f64 gauge handle (bits in an `AtomicU64`). Non-finite values are
+/// rejected and counted on the registry's NaN counter instead of being
+/// stored — a NaN gauge would silently poison every later `add`.
+#[derive(Debug, Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+    nan: Counter,
+}
+
+impl Gauge {
+    fn new(nan: Counter) -> Self {
+        Self {
+            bits: Arc::new(AtomicU64::new(0f64.to_bits())),
+            nan,
+        }
+    }
+
+    pub fn set(&self, v: f64) {
+        if v.is_finite() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        } else {
+            self.nan.inc();
+        }
+    }
+
+    pub fn add(&self, dv: f64) {
+        if dv.is_finite() {
+            add_f64(&self.bits, dv);
+        } else {
+            self.nan.inc();
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    /// Ascending finite upper bounds; an implicit `+Inf` bucket follows.
+    le: Vec<f64>,
+    /// `le.len() + 1` buckets (last = `+Inf`), *non-cumulative* counts.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    /// Non-finite observations flagged here (and registry-wide), never
+    /// folded into `count`/`sum`/buckets.
+    nan_count: AtomicU64,
+}
+
+/// Fixed-bucket histogram handle. Cloning shares the underlying cells.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    inner: Arc<HistogramInner>,
+    nan: Counter,
+}
+
+impl Histogram {
+    fn new(le: &[f64], nan: Counter) -> Self {
+        debug_assert!(
+            le.windows(2).all(|w| w[0] < w[1]) && le.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        let buckets = (0..=le.len()).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            inner: Arc::new(HistogramInner {
+                le: le.to_vec(),
+                buckets,
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+                nan_count: AtomicU64::new(0),
+            }),
+            nan,
+        }
+    }
+
+    /// Record one observation. Non-finite values are flagged (histogram
+    /// `nan_count` + registry NaN counter) and otherwise ignored — the
+    /// serving path must render telemetry, never abort on it.
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            self.inner.nan_count.fetch_add(1, Ordering::Relaxed);
+            self.nan.inc();
+            return;
+        }
+        let idx = self
+            .inner
+            .le
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.inner.le.len());
+        self.inner.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.inner.sum_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.inner.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn nan_count(&self) -> u64 {
+        self.inner.nan_count.load(Ordering::Relaxed)
+    }
+}
+
+/// Default latency buckets (seconds): 1 ms .. 10 s, roughly logarithmic.
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Name of the registry-wide non-finite-telemetry counter every registry
+/// carries from construction.
+pub const NAN_TOTAL: &str = "jdob_telemetry_nan_total";
+
+/// The registry: a name → metric map behind a mutex that is only locked at
+/// registration and exposition time. Handles returned by the `counter`/
+/// `gauge`/`histogram` accessors update lock-free and allocation-free.
+///
+/// Registration is get-or-create: asking for an existing name returns a
+/// handle to the same cells (so planner and executor threads share series
+/// by name). Asking for an existing name *as a different kind* is a caller
+/// bug; it is debug-asserted and returns a detached handle (never exported)
+/// so release builds degrade gracefully instead of panicking mid-serve.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, (Metric, &'static str)>>,
+    nan_total: Counter,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        let nan_total = Counter::default();
+        let mut metrics = BTreeMap::new();
+        metrics.insert(
+            NAN_TOTAL.to_string(),
+            (
+                Metric::Counter(nan_total.clone()),
+                "non-finite telemetry observations flagged (never folded into any series)",
+            ),
+        );
+        Self {
+            metrics: Mutex::new(metrics),
+            nan_total,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, (Metric, &'static str)>> {
+        // telemetry must keep working even if a panic poisoned the map
+        match self.metrics.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Registry-wide count of flagged non-finite observations.
+    pub fn nan_total(&self) -> u64 {
+        self.nan_total.get()
+    }
+
+    pub fn counter(&self, name: &str, help: &'static str) -> Counter {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((Metric::Counter(c), _)) => c.clone(),
+            Some(_) => {
+                debug_assert!(false, "metric {name} already registered with another kind");
+                Counter::default()
+            }
+            None => {
+                let c = Counter::default();
+                m.insert(name.to_string(), (Metric::Counter(c.clone()), help));
+                c
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &'static str) -> Gauge {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((Metric::Gauge(g), _)) => g.clone(),
+            Some(_) => {
+                debug_assert!(false, "metric {name} already registered with another kind");
+                Gauge::new(self.nan_total.clone())
+            }
+            None => {
+                let g = Gauge::new(self.nan_total.clone());
+                m.insert(name.to_string(), (Metric::Gauge(g.clone()), help));
+                g
+            }
+        }
+    }
+
+    /// Get-or-register a histogram. `le` only applies at first
+    /// registration; later callers share the existing buckets.
+    pub fn histogram(&self, name: &str, help: &'static str, le: &[f64]) -> Histogram {
+        let mut m = self.lock();
+        match m.get(name) {
+            Some((Metric::Histogram(h), _)) => h.clone(),
+            Some(_) => {
+                debug_assert!(false, "metric {name} already registered with another kind");
+                Histogram::new(le, self.nan_total.clone())
+            }
+            None => {
+                let h = Histogram::new(le, self.nan_total.clone());
+                m.insert(name.to_string(), (Metric::Histogram(h.clone()), help));
+                h
+            }
+        }
+    }
+
+    /// Prometheus-style text exposition. Deterministic: name order, f64s
+    /// through shortest-round-trip formatting.
+    pub fn render_text(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        for (name, (metric, help)) in m.iter() {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} {}\n", metric.kind()));
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+                Metric::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, le) in h.inner.le.iter().enumerate() {
+                        cum += h.inner.buckets[i].load(Ordering::Relaxed);
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    cum += h.inner.buckets[h.inner.le.len()].load(Ordering::Relaxed);
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                    out.push_str(&format!("{name}_nan_count {}\n", h.nan_count()));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON export of the same data (one object keyed by metric name).
+    pub fn to_json(&self) -> Json {
+        let m = self.lock();
+        let mut obj = BTreeMap::new();
+        for (name, (metric, _)) in m.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::obj(vec![
+                    ("type", Json::Str("counter".into())),
+                    ("value", Json::Num(c.get() as f64)),
+                ]),
+                Metric::Gauge(g) => Json::obj(vec![
+                    ("type", Json::Str("gauge".into())),
+                    ("value", Json::Num(g.get())),
+                ]),
+                Metric::Histogram(h) => {
+                    let mut buckets = Vec::new();
+                    let mut cum = 0u64;
+                    for (i, le) in h.inner.le.iter().enumerate() {
+                        cum += h.inner.buckets[i].load(Ordering::Relaxed);
+                        buckets.push(Json::obj(vec![
+                            ("le", Json::Num(*le)),
+                            ("count", Json::Num(cum as f64)),
+                        ]));
+                    }
+                    Json::obj(vec![
+                        ("type", Json::Str("histogram".into())),
+                        ("buckets", Json::Arr(buckets)),
+                        ("sum", Json::Num(h.sum())),
+                        ("count", Json::Num(h.count() as f64)),
+                        ("nan_count", Json::Num(h.nan_count() as f64)),
+                    ])
+                }
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("jdob_test_total", "test");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name -> same cells
+        assert_eq!(reg.counter("jdob_test_total", "test").get(), 5);
+
+        let g = reg.gauge("jdob_test_gauge", "test");
+        g.set(1.5);
+        g.add(0.25);
+        assert!((g.get() - 1.75).abs() < 1e-12);
+
+        let h = reg.histogram("jdob_test_seconds", "test", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(2.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 2.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_observations_are_flagged_not_fatal() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("jdob_nan_seconds", "test", LATENCY_BUCKETS_S);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        h.observe(0.01);
+        assert_eq!(h.count(), 1, "non-finite must not enter count");
+        assert_eq!(h.nan_count(), 2);
+        assert!((h.sum() - 0.01).abs() < 1e-15, "sum must stay unpoisoned");
+
+        let g = reg.gauge("jdob_nan_gauge", "test");
+        g.set(2.0);
+        g.set(f64::NAN);
+        g.add(f64::INFINITY);
+        assert_eq!(g.get(), 2.0, "gauge must keep its last finite value");
+        assert_eq!(reg.nan_total(), 4);
+        let text = reg.render_text();
+        assert!(text.contains("jdob_telemetry_nan_total 4"), "{text}");
+        assert!(text.contains("jdob_nan_seconds_nan_count 2"), "{text}");
+    }
+
+    #[test]
+    fn render_text_is_deterministic_and_cumulative() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("jdob_lat_seconds", "test", &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.05);
+        h.observe(0.5);
+        let t = reg.render_text();
+        assert!(t.contains("jdob_lat_seconds_bucket{le=\"0.1\"} 2"), "{t}");
+        assert!(t.contains("jdob_lat_seconds_bucket{le=\"1\"} 3"), "{t}");
+        assert!(t.contains("jdob_lat_seconds_bucket{le=\"+Inf\"} 3"), "{t}");
+        assert!(t.contains("jdob_lat_seconds_count 3"), "{t}");
+        assert_eq!(t, reg.render_text(), "exposition must be byte-stable");
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let reg = MetricsRegistry::new();
+        reg.counter("jdob_a_total", "a").add(7);
+        reg.gauge("jdob_b", "b").set(0.5);
+        reg.histogram("jdob_c_seconds", "c", &[1.0]).observe(0.2);
+        let j = Json::parse(&reg.to_json().to_string()).expect("valid JSON");
+        assert_eq!(j.get("jdob_a_total").unwrap().get("value").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(
+            j.get("jdob_c_seconds").unwrap().get("count").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+}

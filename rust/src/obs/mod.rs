@@ -1,0 +1,132 @@
+//! Unified observability layer: metrics exposition + structured window
+//! tracing + energy accounting export, with zero external dependencies and
+//! zero cost when disabled.
+//!
+//! Three pieces, one schema:
+//!
+//! * [`metrics`] — a [`MetricsRegistry`] handing out lock-free
+//!   [`Counter`]/[`Gauge`]/[`Histogram`] handles, rendered as
+//!   Prometheus-style text ([`MetricsRegistry::render_text`]) or JSON
+//!   ([`MetricsRegistry::to_json`]);
+//! * [`events`] + [`sink`] — typed [`Event`]s flowing into a
+//!   [`TraceSink`] ([`NullSink`] zero-overhead default, [`JsonlSink`]
+//!   file stream, [`RingSink`] in-memory buffer behind the live server's
+//!   `/trace/last_window` route, [`TeeSink`] fan-out);
+//! * [`export`] — bridges folding the existing `ServingMetrics` /
+//!   `EnergyLedger` / `OnlineStats` structs into the registry so the
+//!   online sim and the live pipelined server expose identical schemas.
+//!
+//! The zero-overhead argument, in one paragraph: every emission site is
+//! `emit_with(&*sink, || Event::...)`. The closure that builds the event —
+//! including any `String` formatting — runs only if `sink.enabled()`, and
+//! [`NullSink::enabled`] is a constant `false`; registry handles are
+//! `Option`s on the scheduler and never registered unless observability is
+//! attached. So the disabled path is one virtual call plus one branch per
+//! site and **zero heap allocations**, which `tests/perf_smoke.rs` pins
+//! with the crate's counting global allocator.
+
+pub mod events;
+pub mod export;
+pub mod metrics;
+pub mod sink;
+
+pub use events::{parse_jsonl, to_jsonl, DvfsScope, Event};
+pub use export::{
+    export_ledger, export_online_stats, export_serving_metrics, register_serving_schema,
+    ExecMetrics, PlannerMetrics,
+};
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, LATENCY_BUCKETS_S};
+pub use sink::{emit_with, JsonlSink, NullSink, RingSink, TeeSink, TraceSink};
+
+use std::sync::Arc;
+
+/// Default capacity of the live server's event ring buffer.
+pub const DEFAULT_TRACE_RING: usize = 1024;
+
+/// One bundle of observability state shared across the serving threads:
+/// the metrics registry, the trace sink, and (when tracing in-memory) a
+/// typed handle onto the ring buffer for the exposition route.
+#[derive(Clone)]
+pub struct Observability {
+    pub registry: Arc<MetricsRegistry>,
+    pub sink: Arc<dyn TraceSink>,
+    /// Present when `sink` is (or tees into) a ring buffer; backs
+    /// `/trace/last_window`.
+    pub ring: Option<Arc<RingSink>>,
+}
+
+impl std::fmt::Debug for Observability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Observability")
+            .field("ring", &self.ring.as_ref().map(|r| r.len()))
+            .field("enabled", &self.sink.enabled())
+            .finish()
+    }
+}
+
+impl Default for Observability {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl Observability {
+    /// Registry only; tracing off ([`NullSink`]). The zero-overhead config.
+    pub fn disabled() -> Self {
+        Self {
+            registry: Arc::new(MetricsRegistry::new()),
+            sink: Arc::new(NullSink),
+            ring: None,
+        }
+    }
+
+    /// Registry + in-memory ring of the most recent `cap` events. The live
+    /// server's default.
+    pub fn in_memory(cap: usize) -> Self {
+        let ring = Arc::new(RingSink::new(cap));
+        Self {
+            registry: Arc::new(MetricsRegistry::new()),
+            sink: ring.clone(),
+            ring: Some(ring),
+        }
+    }
+
+    /// Ring buffer plus a JSONL stream on disk (chaos/CI artifacts).
+    pub fn with_jsonl(cap: usize, path: impl AsRef<std::path::Path>) -> std::io::Result<Self> {
+        let ring = Arc::new(RingSink::new(cap));
+        let jsonl = Arc::new(JsonlSink::append(path)?);
+        Self::assemble_tee(ring, jsonl)
+    }
+
+    fn assemble_tee(ring: Arc<RingSink>, jsonl: Arc<JsonlSink>) -> std::io::Result<Self> {
+        let sink = Arc::new(TeeSink::new(vec![
+            ring.clone() as Arc<dyn TraceSink>,
+            jsonl as Arc<dyn TraceSink>,
+        ]));
+        Ok(Self {
+            registry: Arc::new(MetricsRegistry::new()),
+            sink,
+            ring: Some(ring),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_bundle_reports_disabled() {
+        let obs = Observability::disabled();
+        assert!(!obs.sink.enabled());
+        assert!(obs.ring.is_none());
+    }
+
+    #[test]
+    fn in_memory_bundle_traces() {
+        let obs = Observability::in_memory(8);
+        assert!(obs.sink.enabled());
+        emit_with(&*obs.sink, || events::sample_events()[0].clone());
+        assert_eq!(obs.ring.as_ref().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! Trace sinks: where [`Event`]s go.
+//!
+//! The contract that keeps tracing free when unused: every emission site in
+//! the serving stack goes through [`emit_with`], which takes a *closure*
+//! that builds the event. [`NullSink::enabled`] returns `false`, so with the
+//! default sink the closure — and every `String`/`Vec` inside the event —
+//! is never constructed. The perf-smoke counting-allocator fence pins this
+//! at exactly zero steady-state heap allocations.
+//!
+//! Sinks are `Send + Sync` and shared as `Arc<dyn TraceSink>` between the
+//! planner and executor threads of the pipelined server, so one flat,
+//! interleaved stream captures both sides of each window.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::events::{to_jsonl, Event};
+
+/// A destination for trace events. Implementations must never panic and
+/// must tolerate concurrent emission from multiple threads.
+pub trait TraceSink: Send + Sync {
+    /// Cheap gate checked before event construction. Default `true`.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Record one event. Only called when [`TraceSink::enabled`] is true.
+    fn emit(&self, event: &Event);
+}
+
+/// Build the event lazily and emit it only if the sink is enabled. This is
+/// the only emission helper the serving stack uses: on [`NullSink`] the
+/// closure never runs, so tracing costs one virtual call and a branch.
+#[inline]
+pub fn emit_with<F: FnOnce() -> Event>(sink: &dyn TraceSink, build: F) {
+    if sink.enabled() {
+        sink.emit(&build());
+    }
+}
+
+/// The zero-overhead default: drops everything, reports itself disabled.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn emit(&self, _event: &Event) {}
+}
+
+/// Append-only JSONL writer (one canonical JSON object per line). Write
+/// errors are swallowed by design: telemetry must never take down serving.
+pub struct JsonlSink {
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl JsonlSink {
+    pub fn new(writer: impl Write + Send + 'static) -> Self {
+        Self {
+            out: Mutex::new(Box::new(writer)),
+        }
+    }
+
+    /// Create (truncate) `path`, creating parent directories as needed.
+    pub fn create(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Self::new(std::io::BufWriter::new(std::fs::File::create(
+            path,
+        )?)))
+    }
+
+    /// Open `path` for appending (chaos matrices accumulate one file
+    /// across many cases), creating parent directories as needed.
+    pub fn append(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        Ok(Self::new(std::io::BufWriter::new(f)))
+    }
+}
+
+impl TraceSink for JsonlSink {
+    fn emit(&self, event: &Event) {
+        let mut guard = match self.out.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        // best-effort: a full disk must not abort the serving path
+        let _ = writeln!(guard, "{}", event.to_json());
+        let _ = guard.flush();
+    }
+}
+
+/// Bounded in-memory ring buffer. The live server's default sink: cheap
+/// enough to leave on, and the source for the `/trace/last_window`
+/// exposition route.
+pub struct RingSink {
+    cap: usize,
+    buf: Mutex<VecDeque<Event>>,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            buf: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, VecDeque<Event>> {
+        match self.buf.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Snapshot of the retained events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        self.lock().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Events belonging to the most recent window still in the buffer
+    /// (highest `window_seq`), oldest first. Gate events without a window
+    /// sequence are excluded.
+    pub fn last_window(&self) -> Vec<Event> {
+        let buf = self.lock();
+        let Some(last) = buf.iter().filter_map(Event::window_seq).max() else {
+            return Vec::new();
+        };
+        buf.iter()
+            .filter(|e| e.window_seq() == Some(last))
+            .cloned()
+            .collect()
+    }
+
+    /// JSONL rendering of [`RingSink::last_window`].
+    pub fn last_window_jsonl(&self) -> String {
+        to_jsonl(&self.last_window())
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&self, event: &Event) {
+        let mut buf = self.lock();
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(event.clone());
+    }
+}
+
+/// Fan-out to several sinks (e.g. ring buffer for the ops route plus a
+/// JSONL artifact for CI). Enabled iff any child is.
+pub struct TeeSink {
+    sinks: Vec<Arc<dyn TraceSink>>,
+}
+
+impl TeeSink {
+    pub fn new(sinks: Vec<Arc<dyn TraceSink>>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl TraceSink for TeeSink {
+    fn enabled(&self) -> bool {
+        self.sinks.iter().any(|s| s.enabled())
+    }
+
+    fn emit(&self, event: &Event) {
+        for s in &self.sinks {
+            if s.enabled() {
+                s.emit(event);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::sample_events;
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_skips_construction() {
+        let sink = NullSink;
+        let mut built = false;
+        emit_with(&sink, || {
+            built = true;
+            sample_events()[0].clone()
+        });
+        assert!(!built, "NullSink must never build the event");
+    }
+
+    #[test]
+    fn ring_sink_caps_and_returns_last_window() {
+        let ring = RingSink::new(4);
+        for e in sample_events() {
+            emit_with(&ring, || e.clone());
+        }
+        assert_eq!(ring.len(), 4, "ring must retain only `cap` events");
+        let last = ring.last_window();
+        assert!(!last.is_empty());
+        assert!(last.iter().all(|e| e.window_seq() == Some(2)));
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let shared = Arc::new(Mutex::new(Vec::<u8>::new()));
+        struct VecWriter(Arc<Mutex<Vec<u8>>>);
+        impl Write for VecWriter {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let sink = JsonlSink::new(VecWriter(shared.clone()));
+        let events = sample_events();
+        for e in &events {
+            sink.emit(e);
+        }
+        let text = String::from_utf8(shared.lock().unwrap().clone()).unwrap();
+        let back = super::super::events::parse_jsonl(&text).expect("parse");
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn tee_fans_out_and_respects_enabled() {
+        let a = Arc::new(RingSink::new(16));
+        let b = Arc::new(RingSink::new(16));
+        let tee = TeeSink::new(vec![a.clone(), Arc::new(NullSink), b.clone()]);
+        assert!(tee.enabled());
+        emit_with(&tee, || sample_events()[0].clone());
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 1);
+        let off = TeeSink::new(vec![Arc::new(NullSink)]);
+        assert!(!off.enabled());
+    }
+}

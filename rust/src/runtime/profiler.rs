@@ -47,7 +47,9 @@ pub fn profile_edge(rt: &dyn InferenceBackend, reps: usize) -> Result<EdgeProfil
                     t0.elapsed().as_secs_f64()
                 })
                 .collect();
-            times.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            // total order: a NaN timing (clock skew, fault injection) must
+            // not panic the profiler — it sorts last and never wins median
+            times.sort_by(|a, b| a.total_cmp(b));
             row.push(times[times.len() / 2]);
         }
         latency_s.push(row);

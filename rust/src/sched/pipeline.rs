@@ -23,6 +23,7 @@
 
 use std::sync::mpsc;
 
+use crate::obs::{emit_with, Event};
 use crate::sched::clock::Clock;
 use crate::sched::scheduler::{
     run_events_with_shed, Arrival, ArrivalSource, PlannedWindow, Scheduler,
@@ -97,12 +98,34 @@ where
             .name("jdob-executor".into())
             .spawn_scoped(s, move || execute(rx))
             .expect("spawning executor stage");
+        // cloned up front: the sink/counter must outlive the &mut sched
+        // borrow the event loop takes below
+        let sink = sched.sink();
+        let stall_counter = sched.stall_counter();
         if ready.recv().unwrap_or(false) {
             run_events_with_shed(
                 sched,
                 clock,
                 source,
-                &mut |window, planned| tx.send(PlannedBatch { window, planned }).is_ok(),
+                &mut |window, planned| {
+                    // try_send first so a full queue (executor running
+                    // `depth` windows behind) is observable as a planner
+                    // stall before we fall back to the same blocking send
+                    // as before
+                    match tx.try_send(PlannedBatch { window, planned }) {
+                        Ok(()) => true,
+                        Err(mpsc::TrySendError::Full(b)) => {
+                            if let Some(c) = &stall_counter {
+                                c.inc();
+                            }
+                            emit_with(&*sink, || Event::PlannerStalled {
+                                window_seq: b.planned.seq,
+                            });
+                            tx.send(b).is_ok()
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => false,
+                    }
+                },
                 shed,
             );
         }

@@ -23,6 +23,9 @@ use std::sync::Arc;
 use crate::algo::grouping::{optimal_grouping_ws, GroupedPlan};
 use crate::algo::types::{GroupSolver, PlanningContext, User, UserId};
 use crate::algo::workspace::PlannerWorkspace;
+use crate::obs::{
+    emit_with, Counter, DvfsScope, Event, MetricsRegistry, NullSink, PlannerMetrics, TraceSink,
+};
 use crate::sched::admission::{AdmissionPolicy, AdmitDecision, AdmitQuery};
 use crate::sched::clock::Clock;
 use crate::util::TIME_EPS;
@@ -141,6 +144,11 @@ impl UserOutcome {
 /// stage needs to run it, and everything accounting needs to bill it.
 #[derive(Debug, Clone)]
 pub struct PlannedWindow {
+    /// 1-based window sequence number stamped by [`Scheduler::plan`]
+    /// (0 = planned statelessly via [`plan_window`]). Trace events from
+    /// the planner and the executor carry it as `window_seq`, so one flat
+    /// JSONL stream can be joined per window.
+    pub seq: u64,
     /// When the window closed (s since epoch); deadlines inside `eligible`
     /// and all times inside `grouped` are relative to this instant.
     pub close: f64,
@@ -277,6 +285,9 @@ pub fn plan_window<P>(
     }
 
     PlannedWindow {
+        // stateless planning has no run-scoped sequence; Scheduler::plan
+        // stamps the real one
+        seq: 0,
         close,
         rel_t_free,
         t_free_abs: t_free_out,
@@ -399,6 +410,13 @@ pub struct Scheduler<'s> {
     /// Sheds since the last planned window, drained into
     /// [`PlannedWindow::shed`] by [`Scheduler::plan`].
     pending_shed: usize,
+    /// Trace sink for planner-side events ([`NullSink`] by default: one
+    /// virtual call + branch per site, zero allocations — events are built
+    /// inside [`emit_with`] closures that never run when disabled).
+    sink: Arc<dyn TraceSink>,
+    /// Planner-side metric handles; `None` (no overhead) until a registry
+    /// is attached via [`Scheduler::attach_registry`].
+    obs: Option<PlannerMetrics>,
 }
 
 impl<'s> Scheduler<'s> {
@@ -418,7 +436,33 @@ impl<'s> Scheduler<'s> {
             latency_sum_s: 0.0,
             total_work,
             pending_shed: 0,
+            sink: Arc::new(NullSink),
+            obs: None,
         }
+    }
+
+    /// Route planner-side trace events ([`Event::WindowPlanned`],
+    /// admission verdicts, device DVFS picks) to `sink`.
+    pub fn set_sink(&mut self, sink: Arc<dyn TraceSink>) {
+        self.sink = sink;
+    }
+
+    /// The current trace sink (shared handle — the pipeline clones it so
+    /// the executor stage writes into the same stream).
+    pub fn sink(&self) -> Arc<dyn TraceSink> {
+        Arc::clone(&self.sink)
+    }
+
+    /// Register planner-side metric series on `reg` and stream into them
+    /// on every gate decision and planned window.
+    pub fn attach_registry(&mut self, reg: &MetricsRegistry) {
+        self.obs = Some(PlannerMetrics::register(reg));
+    }
+
+    /// Handle onto the planner-stall counter, if a registry is attached
+    /// (bumped by the pipeline when the executor hand-off queue is full).
+    pub fn stall_counter(&self) -> Option<Counter> {
+        self.obs.as_ref().map(|o| o.stalls.clone())
     }
 
     /// Current absolute GPU-busy horizon.
@@ -479,9 +523,29 @@ impl<'s> Scheduler<'s> {
             min_local_s: a.user.dev.min_latency(self.total_work),
         };
         let d = self.policy.admit(&q);
-        if d == AdmitDecision::Shed {
-            self.stats.shed += 1;
-            self.pending_shed += 1;
+        match d {
+            AdmitDecision::Shed => {
+                self.stats.shed += 1;
+                self.pending_shed += 1;
+                if let Some(pm) = &self.obs {
+                    pm.shed.inc();
+                }
+                emit_with(&*self.sink, || Event::RequestShed {
+                    user_id: a.user.id,
+                    at: a.at,
+                    absolute_deadline: a.absolute_deadline,
+                });
+            }
+            AdmitDecision::Admit => {
+                if let Some(pm) = &self.obs {
+                    pm.admitted.inc();
+                }
+                emit_with(&*self.sink, || Event::RequestAdmitted {
+                    user_id: a.user.id,
+                    at: a.at,
+                    absolute_deadline: a.absolute_deadline,
+                });
+            }
         }
         d
     }
@@ -506,6 +570,7 @@ impl<'s> Scheduler<'s> {
         );
         self.t_free = planned.t_free_abs;
         self.stats.windows += 1;
+        planned.seq = self.stats.windows as u64;
         self.stats.total_energy_j += planned.planned_energy_j;
         for oc in &planned.outcomes {
             self.stats.served += 1;
@@ -515,6 +580,41 @@ impl<'s> Scheduler<'s> {
         }
         if self.stats.served > 0 {
             self.stats.mean_latency_s = self.latency_sum_s / self.stats.served as f64;
+        }
+        if let Some(pm) = &self.obs {
+            pm.windows.inc();
+            pm.planned_energy_j.add(planned.planned_energy_j);
+            pm.t_free_abs_s.set(self.t_free);
+            for oc in &planned.outcomes {
+                pm.modeled_latency.observe(oc.latency_s);
+                if oc.offloaded {
+                    pm.offloaded.inc();
+                }
+                if oc.deadline_met {
+                    pm.planned_deadline_hits.inc();
+                }
+            }
+        }
+        emit_with(&*self.sink, || Event::WindowPlanned {
+            seq: planned.seq,
+            close: planned.close,
+            rel_t_free: planned.rel_t_free,
+            t_free_abs: planned.t_free_abs,
+            requests: planned.outcomes.len(),
+            eligible: planned.eligible.len(),
+            groups: planned.grouped.as_ref().map_or(0, |g| g.groups.len()),
+            planned_energy_j: planned.planned_energy_j,
+            shed: planned.shed,
+        });
+        if self.sink.enabled() {
+            for oc in &planned.outcomes {
+                self.sink.emit(&Event::DvfsChosen {
+                    window_seq: planned.seq,
+                    scope: DvfsScope::Device,
+                    user_id: Some(oc.user_id),
+                    f_hz: oc.f_dev,
+                });
+            }
         }
         planned
     }

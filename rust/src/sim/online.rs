@@ -125,6 +125,29 @@ pub fn run_online_with_policy(
     sched.into_stats()
 }
 
+/// [`run_online_with_policy`] with observability attached: the scheduler
+/// streams planner-side metrics into `obs.registry` and window events into
+/// `obs.sink` as it plans. The full serving schema is pre-registered, so a
+/// sim run's `render_text()` lists the identical metric set as a live
+/// server's `/metrics` (executor series legitimately zero — the sim
+/// executes nothing).
+pub fn run_online_observed(
+    ctx: &PlanningContext,
+    arrivals: Vec<Arrival>,
+    solver: &dyn GroupSolver,
+    policy: Box<dyn AdmissionPolicy>,
+    obs: &crate::obs::Observability,
+) -> OnlineStats {
+    crate::obs::register_serving_schema(&obs.registry);
+    let mut sched = Scheduler::new(ctx.clone(), solver, policy);
+    sched.attach_registry(&obs.registry);
+    sched.set_sink(std::sync::Arc::clone(&obs.sink));
+    let mut clock = VirtualClock::new();
+    let mut source = SliceSource::new(arrivals);
+    run_events(&mut sched, &mut clock, &mut source, &mut |_, _| true);
+    sched.into_stats()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +237,39 @@ mod tests {
             narrow.total_energy_j
         );
         assert!(wide.windows < narrow.windows);
+    }
+
+    #[test]
+    fn observed_run_streams_planner_series_and_events() {
+        let c = ctx();
+        let mut rng = Rng::seed_from_u64(9);
+        let arr = poisson_arrivals(&c, 30.0, 2.0, (8.0, 20.0), &mut rng).unwrap();
+        let obs = crate::obs::Observability::in_memory(4096);
+        let stats = run_online_observed(
+            &c,
+            arr.clone(),
+            &JDob::full(),
+            Box::new(TimeBound::unbounded(0.05)),
+            &obs,
+        );
+        let text = obs.registry.render_text();
+        assert!(
+            text.contains(&format!("jdob_windows_total {}\n", stats.windows)),
+            "{text}"
+        );
+        assert!(
+            text.contains(&format!("jdob_requests_admitted_total {}\n", stats.served)),
+            "{text}"
+        );
+        // exec series present (schema parity) but untouched: the sim runs
+        // nothing on a backend
+        assert!(text.contains("jdob_exec_requests_total 0\n"), "{text}");
+        let ring = obs.ring.as_ref().unwrap();
+        assert!(!ring.is_empty(), "window events must be traced");
+        // the observed run must not perturb the planning result
+        let unobserved = run_online(&c, &arr, &JDob::full(), 0.05);
+        assert_eq!(stats.served, unobserved.served);
+        assert!((stats.total_energy_j - unobserved.total_energy_j).abs() < 1e-12);
     }
 
     #[test]

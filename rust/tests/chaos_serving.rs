@@ -21,17 +21,24 @@
 //! (`last_run.log`, `uplink_run.log`, `combined_run.log`); on a CI
 //! failure the directory is uploaded as an artifact, and the last line
 //! of the failing log names the (mode, policy, seed) cell to pin.
+//! Every case also runs with full `jdob::obs` tracing: planner + executor
+//! events stream to `target/chaos/<matrix>_trace.jsonl`, so the artifact
+//! carries the complete per-window event history (admissions, launches,
+//! retries, replans, evictions, ledgers) of a failing run, not just the
+//! one-line summaries.
 
 mod common;
 
 use std::io::Write as _;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use jdob::algo::jdob::JDob;
 use jdob::coordinator::engine::{RecoveryPolicy, ServingEngine};
 use jdob::coordinator::ledger::EnergyLedger;
 use jdob::coordinator::metrics::ServingMetrics;
 use jdob::coordinator::request::InferenceRequest;
+use jdob::obs::{JsonlSink, NullSink, TraceSink};
 use jdob::runtime::{
     ChannelModel, ChannelStats, ChaosBackend, ChaosStats, FaultPlan, InferenceBackend,
     UplinkFaultPlan,
@@ -141,24 +148,35 @@ struct CaseResult {
 /// loop (virtual clock) with execution on a chaos-wrapped SimBackend,
 /// feeding actual completion times back to the planner.
 fn run_case(mode: &str, policy_name: &str, seed: u64) -> CaseResult {
-    run_chaos_case(Some(mode), None, policy_name, seed)
+    run_chaos_case(Some(mode), None, policy_name, seed, "gpu_trace.jsonl")
 }
 
 /// The general form: GPU faults, uplink faults, or both at once. `None`
-/// on an axis keeps that axis fault-free.
+/// on an axis keeps that axis fault-free. `trace_file` names the JSONL
+/// event log (under `target/chaos/`) this case appends its full planner +
+/// executor trace to — one file per matrix so the parallel test binaries
+/// never interleave writes; the CI failure artifact picks them all up.
 fn run_chaos_case(
     gpu_mode: Option<&str>,
     uplink_mode: Option<&str>,
     policy_name: &str,
     seed: u64,
+    trace_file: &str,
 ) -> CaseResult {
     let ctx = common::small_exec_ctx();
+    // best-effort tracing: an unwritable target/ dir degrades to NullSink
+    // rather than failing the chaos case itself
+    let sink: Arc<dyn TraceSink> = match JsonlSink::append(log_path(trace_file)) {
+        Ok(s) => Arc::new(s),
+        Err(_) => Arc::new(NullSink),
+    };
     let gpu_plan = match gpu_mode {
         Some(m) => fault_plan(m, seed),
         None => FaultPlan::none(),
     };
     let backend = ChaosBackend::new(common::small_sim_backend(&ctx), gpu_plan);
-    let mut engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()));
+    let mut engine = ServingEngine::new(ctx.clone(), &backend, Box::new(JDob::full()))
+        .with_sink(Arc::clone(&sink));
     if let Some(m) = uplink_mode {
         // decorrelate the uplink RNG stream from the GPU one
         engine = engine
@@ -177,6 +195,7 @@ fn run_chaos_case(
 
     let solver = JDob::full();
     let mut sched = Scheduler::new(ctx.clone(), &solver, policy(policy_name));
+    sched.set_sink(Arc::clone(&sink));
     let fb = sched.attach_feedback();
     let mut clock = VirtualClock::new();
     let mut source = SliceSource::new(arrivals);
@@ -322,6 +341,7 @@ fn assert_case_invariants(mode: &str, policy_name: &str, seed: u64, r: &CaseResu
 fn seeded_chaos_matrix_terminates_with_terminal_outcomes() {
     // fresh log for this run (best effort; the file is diagnostic only)
     let _ = std::fs::remove_file(log_path("last_run.log"));
+    let _ = std::fs::remove_file(log_path("gpu_trace.jsonl"));
     let seeds = seeds();
     let mut per_mode_stats = std::collections::HashMap::<&str, (u64, u64, u64, usize)>::new();
     for mode in MODES {
@@ -384,6 +404,7 @@ fn uplink_log_fields(r: &CaseResult) -> String {
 #[test]
 fn seeded_uplink_chaos_matrix_keeps_batches_on_schedule() {
     let _ = std::fs::remove_file(log_path("uplink_run.log"));
+    let _ = std::fs::remove_file(log_path("uplink_trace.jsonl"));
     let seeds = seeds();
     // per uplink mode: (uploads, fades, drops+retransmits, drifted, evicted)
     let mut per_mode = std::collections::HashMap::<&str, (u64, u64, u64, u64, usize)>::new();
@@ -391,7 +412,7 @@ fn seeded_uplink_chaos_matrix_keeps_batches_on_schedule() {
     for mode in UPLINK_MODES {
         for policy_name in POLICIES {
             for &seed in &seeds {
-                let r = run_chaos_case(None, Some(mode), policy_name, seed);
+                let r = run_chaos_case(None, Some(mode), policy_name, seed, "uplink_trace.jsonl");
                 log_line(
                     "uplink_run.log",
                     &format!("uplink={mode} policy={policy_name} seed={seed} {}", uplink_log_fields(&r)),
@@ -429,6 +450,7 @@ fn seeded_uplink_chaos_matrix_keeps_batches_on_schedule() {
 #[test]
 fn combined_gpu_uplink_fault_matrix_terminates() {
     let _ = std::fs::remove_file(log_path("combined_run.log"));
+    let _ = std::fs::remove_file(log_path("combined_trace.jsonl"));
     let seeds = combined_seeds();
     let mut gpu_faults = 0u64;
     let mut uplink_faults = 0u64;
@@ -438,7 +460,13 @@ fn combined_gpu_uplink_fault_matrix_terminates() {
             // multiplying the grid by a third axis
             let policy_name = POLICIES[(gi + ui) % POLICIES.len()];
             for &seed in &seeds {
-                let r = run_chaos_case(Some(gpu_mode), Some(uplink_mode), policy_name, seed);
+                let r = run_chaos_case(
+                    Some(gpu_mode),
+                    Some(uplink_mode),
+                    policy_name,
+                    seed,
+                    "combined_trace.jsonl",
+                );
                 log_line(
                     "combined_run.log",
                     &format!(

@@ -1,0 +1,269 @@
+//! Observability-layer integration: the `jdob::obs` metrics + tracing
+//! stack driven end to end through the real planner, sim, and live
+//! pipelined server.
+//!
+//! What tier-1 pins here:
+//!
+//! * NaN telemetry is *contained*, never propagated: a non-finite span
+//!   reaching the Gantt renderer is skipped-and-reported, a non-finite
+//!   latency sample reaching the registry lands in `_nan_count` /
+//!   `jdob_telemetry_nan_total` instead of poisoning `_sum`;
+//! * the JSONL event codec round-trips byte-stably (emit → parse →
+//!   re-emit is the identity on bytes);
+//! * the Prometheus-style exposition format is golden-snapshotted
+//!   byte-exactly (`tests/golden/metrics_exposition.txt`, re-bless with
+//!   `JDOB_BLESS=1` only when an exposition change is intentional);
+//! * an observed online *sim* run and a live *server* run expose the
+//!   identical metric schema — same names, same kinds — differing only
+//!   in values, and the server's ops routes (`/metrics`,
+//!   `/metrics.json`, `/trace/last_window`) all answer.
+
+mod common;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use common::ctx;
+use jdob::algo::jdob::JDob;
+use jdob::algo::types::User;
+use jdob::coordinator::request::InferenceRequest;
+use jdob::coordinator::server::start_observable;
+use jdob::coordinator::trace::{render_gantt, window_trace, Phase, Span};
+use jdob::energy::device::DeviceModel;
+use jdob::obs::events::sample_events;
+use jdob::obs::{
+    parse_jsonl, to_jsonl, ExecMetrics, MetricsRegistry, Observability, PlannerMetrics,
+    LATENCY_BUCKETS_S,
+};
+use jdob::runtime::default_backend;
+use jdob::sched::admission::{EarliestSlack, TimeBound};
+use jdob::sched::scheduler::{plan_window, Arrival};
+use jdob::sim::online::{poisson_arrivals, run_online_observed};
+use jdob::util::json::Json;
+use jdob::util::rng::Rng;
+
+fn mk_requests(
+    c: &jdob::algo::types::PlanningContext,
+    m: usize,
+    beta: f64,
+) -> Vec<InferenceRequest> {
+    let dev = DeviceModel::from_config(&c.cfg);
+    let deadline = User::deadline_from_beta(beta, &dev, c.tables.total_work());
+    let elems: usize = c.profile.input_shape.iter().product();
+    (0..m)
+        .map(|u| InferenceRequest {
+            user_id: u,
+            input: (0..elems)
+                .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
+                .collect(),
+            deadline_s: deadline,
+        })
+        .collect()
+}
+
+#[test]
+fn nan_spans_from_a_real_window_never_poison_the_gantt() {
+    // A genuine planned window (not a hand-built span list): trace it,
+    // then poison the span set the way a corrupted model table would —
+    // the renderer must neither panic nor cast NaN to a cell index.
+    let c = ctx();
+    let dev = DeviceModel::from_config(&c.cfg);
+    let total = c.tables.total_work();
+    let arrivals: Vec<Arrival> = [0.6, 0.7, 25.0, 28.0]
+        .iter()
+        .enumerate()
+        .map(|(id, &beta)| {
+            Arrival::new(
+                User {
+                    id,
+                    deadline: User::deadline_from_beta(beta, &dev, total),
+                    dev: dev.clone(),
+                },
+                0.0,
+            )
+        })
+        .collect();
+    let solver = JDob::full();
+    let planned = plan_window(&c, &solver, &arrivals, 0.0, 0.0);
+    let mut spans = window_trace(&c, &planned);
+    assert!(!spans.is_empty(), "window must produce a trace");
+    let horizon = spans.iter().map(|s| s.end).fold(0.0, f64::max);
+    let clean = render_gantt(&spans, horizon, 64);
+    assert!(!clean.contains("non-finite"), "clean trace must not warn:\n{clean}");
+
+    spans.push(Span {
+        user: 0,
+        phase: Phase::Uplink,
+        start: f64::NAN,
+        end: f64::NAN,
+    });
+    let g = render_gantt(&spans, horizon, 64);
+    assert!(g.contains("1 non-finite span(s) skipped"), "{g}");
+    // the healthy rows survive untouched
+    for line in clean.lines() {
+        assert!(g.contains(line), "poisoning dropped healthy row {line:?}");
+    }
+}
+
+#[test]
+fn nan_latency_is_flagged_not_aggregated() {
+    let reg = MetricsRegistry::new();
+    let h = reg.histogram("jdob_exec_wall_latency_seconds", "latency", LATENCY_BUCKETS_S);
+    let g = reg.gauge("jdob_t_free_seconds", "gpu-free horizon");
+    g.set(1.5);
+    h.observe(0.01);
+    h.observe(f64::NAN);
+    g.set(f64::NAN); // ignored + counted; the last good value must survive
+    let text = reg.render_text();
+    assert!(text.contains("jdob_exec_wall_latency_seconds_count 1\n"), "{text}");
+    assert!(text.contains("jdob_exec_wall_latency_seconds_sum 0.01\n"), "{text}");
+    assert!(text.contains("jdob_exec_wall_latency_seconds_nan_count 1\n"), "{text}");
+    assert!(text.contains("jdob_t_free_seconds 1.5\n"), "{text}");
+    assert!(text.contains("jdob_telemetry_nan_total 2\n"), "{text}");
+    // the JSON exposition stays parseable — no bare NaN token can leak in
+    Json::parse(&reg.to_json().to_string()).expect("metrics JSON parses");
+}
+
+#[test]
+fn jsonl_round_trip_is_byte_stable() {
+    let events = sample_events();
+    let first = to_jsonl(&events);
+    let parsed = parse_jsonl(&first).expect("parse what we emitted");
+    assert_eq!(parsed, events, "decode must reproduce the typed events");
+    let second = to_jsonl(&parsed);
+    assert_eq!(first, second, "emit → parse → emit must be byte-stable");
+    assert_eq!(to_jsonl(&[]), "", "empty trace is the empty string");
+}
+
+/// Byte-exact golden compare with the same bless protocol as
+/// `golden_figures.rs`: blessed on first run (or `JDOB_BLESS=1`), compared
+/// exactly thereafter. Exposition is an interchange format — a scrape
+/// parser downstream sees bytes, so the fence is byte-level, not numeric.
+fn check_or_bless_text(name: &str, got: &str) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let path = dir.join(name);
+    if std::env::var_os("JDOB_BLESS").is_some() || !path.exists() {
+        std::fs::create_dir_all(&dir).expect("mkdir tests/golden");
+        std::fs::write(&path, got).expect("write golden");
+        eprintln!("blessed golden {} ({} bytes)", path.display(), got.len());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        got, want,
+        "{name}: render_text() drifted byte-wise; re-bless with JDOB_BLESS=1 \
+         only if the exposition format change is intentional"
+    );
+}
+
+#[test]
+fn metrics_exposition_matches_golden_snapshot() {
+    // Deterministic fills through the same handle structs the serving
+    // stack uses, including one NaN observation so the flag lines are
+    // part of the pinned format.
+    let reg = MetricsRegistry::new();
+    let pm = PlannerMetrics::register(&reg);
+    let em = ExecMetrics::register(&reg);
+    pm.windows.add(3);
+    pm.admitted.add(7);
+    pm.shed.add(1);
+    pm.offloaded.add(5);
+    pm.planned_deadline_hits.add(7);
+    pm.planned_energy_j.set(1.5);
+    pm.t_free_abs_s.set(0.25);
+    pm.modeled_latency.observe(0.004);
+    pm.modeled_latency.observe(0.03);
+    em.requests.add(7);
+    em.batches.add(2);
+    em.batched_samples.add(5);
+    em.local_samples.add(2);
+    em.wall_latency.observe(0.05);
+    em.wall_latency.observe(f64::NAN);
+    em.ledger_device_compute_j.set(0.5);
+    em.ledger_device_tx_j.set(0.25);
+    em.ledger_edge_j.set(0.125);
+    em.ledger_deadline_hits.add(6);
+    em.ledger_deadline_misses.add(1);
+    check_or_bless_text("metrics_exposition.txt", &reg.render_text());
+}
+
+#[test]
+fn sim_and_live_server_expose_identical_schema() {
+    let c = ctx();
+
+    // Sim side: an observed online run in virtual time.
+    let obs_sim = Observability::in_memory(4096);
+    let mut rng = Rng::seed_from_u64(0x0B5);
+    let arrivals = poisson_arrivals(&c, 25.0, 0.25, (5.0, 40.0), &mut rng).expect("trace");
+    let solver = JDob::full();
+    let stats = run_online_observed(
+        &c,
+        arrivals,
+        &solver,
+        Box::new(TimeBound::unbounded(0.05)),
+        &obs_sim,
+    );
+    assert!(stats.windows > 0);
+
+    // Live side: the pipelined server over SimBackend, real time.
+    let obs_srv = Observability::in_memory(4096);
+    let (handle, join) = start_observable(
+        c.clone(),
+        |c| default_backend(&c.profile, &c.cfg.buckets, None),
+        "J-DOB",
+        Box::new(EarliestSlack::new(0.05, 4, 0.01)),
+        2,
+        obs_srv.clone(),
+    );
+    let reqs = mk_requests(&c, 4, 30.25);
+    let rxs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| handle.submit_async(r).expect("submit"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(300))
+            .expect("response within timeout")
+            .expect("served ok");
+    }
+
+    // Ops routes answer while the server is still up.
+    let text = handle.ops("/metrics").expect("/metrics");
+    assert!(text.contains("# TYPE jdob_windows_total counter"), "{text}");
+    let json = handle.ops("/metrics.json").expect("/metrics.json");
+    Json::parse(&json).expect("/metrics.json parses");
+    let trace = handle.ops("/trace/last_window").expect("/trace/last_window");
+    let events = parse_jsonl(&trace).expect("last-window JSONL parses");
+    assert!(!events.is_empty(), "a served window must leave trace events");
+    let seqs: BTreeSet<u64> = events.iter().filter_map(|e| e.window_seq()).collect();
+    assert!(seqs.len() <= 1, "last_window mixed window seqs: {seqs:?}");
+    handle.ops("/nope").expect_err("unknown route must be rejected");
+    drop(handle);
+    join.join().expect("planner joins").expect("planner ok");
+
+    // Identical schema: the exact same `# TYPE name kind` set on both
+    // sides — the register_serving_schema contract.
+    let type_lines = |text: &str| -> BTreeSet<String> {
+        text.lines()
+            .filter(|l| l.starts_with("# TYPE "))
+            .map(str::to_string)
+            .collect()
+    };
+    let sim_text = obs_sim.registry.render_text();
+    let srv_text = obs_srv.registry.render_text();
+    assert_eq!(
+        type_lines(&sim_text),
+        type_lines(&srv_text),
+        "sim and live exposition must list the same metric schema"
+    );
+    // the live run actually executed (all exports flushed before join)...
+    assert!(srv_text.contains("jdob_exec_requests_total 4\n"), "{srv_text}");
+    // ...while the sim has no executor, so its exec series stay at zero
+    assert!(sim_text.contains("jdob_exec_requests_total 0\n"), "{sim_text}");
+    assert!(
+        sim_text.contains(&format!("jdob_windows_total {}\n", stats.windows)),
+        "{sim_text}"
+    );
+    // both sides also traced: the sim ring holds planner events
+    assert!(!obs_sim.ring.as_ref().unwrap().is_empty());
+}

@@ -25,6 +25,15 @@
 //! * a warmup fence — after `warmup()` pre-sized the arenas, even the
 //!   *first* call must not allocate (the run_pipelined window-0 property);
 //! * a *timed* throughput guard with a very generous floor.
+//!
+//! Observability fence (the `obs` layer's zero-overhead contract):
+//! * with the default [`NullSink`] every `emit_with` site must perform
+//!   **zero** heap allocations — the event-building closure (including its
+//!   `format!`) must never run — and live metric-handle updates
+//!   (counter/gauge/histogram, NaN observations included) must be
+//!   allocation-free too, since they sit on the serving hot path.
+//!
+//! [`NullSink`]: jdob::obs::NullSink
 
 mod common;
 
@@ -37,6 +46,7 @@ use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal
 use jdob::algo::jdob::JDob;
 use jdob::algo::{CountingSolver, PlannerWorkspace};
 use jdob::model::ModelProfile;
+use jdob::obs::{emit_with, Event, MetricsRegistry, NullSink, TraceSink, LATENCY_BUCKETS_S};
 use jdob::runtime::{InferenceBackend, SimBackend};
 use jdob::util::rng::Rng;
 
@@ -188,6 +198,39 @@ fn perf_smoke_exec_warmup_presizes_first_call() {
     let before = allocs();
     be.run_block_into(n, &input3, 3, &mut out).unwrap();
     assert_eq!(allocs() - before, 0, "padded post-warmup run_block_into allocated");
+}
+
+#[test]
+#[ignore = "release-mode perf smoke; CI runs it via --ignored"]
+fn perf_smoke_trace_disabled_zero_alloc() {
+    // The exact call shape the serving stack uses: an `Arc<dyn TraceSink>`
+    // holding a NullSink, events built lazily inside emit_with closures.
+    let sink: std::sync::Arc<dyn TraceSink> = std::sync::Arc::new(NullSink);
+    let reg = MetricsRegistry::new();
+    let counter = reg.counter("jdob_fence_total", "fence");
+    let gauge = reg.gauge("jdob_fence_gauge", "fence");
+    let hist = reg.histogram("jdob_fence_seconds", "fence", LATENCY_BUCKETS_S);
+    // no settling pass: the disabled path must be allocation-free from the
+    // very first call — there is nothing to warm up
+    let before = allocs();
+    for i in 0..10_000u64 {
+        emit_with(&*sink, || Event::GroupRetried {
+            window_seq: i,
+            attempt: 1,
+            // this format! must never run; if it does, the fence trips
+            cause: format!("expensive cause that must never be built {i}"),
+        });
+        counter.inc();
+        gauge.set(i as f64);
+        hist.observe(0.004);
+        // non-finite observations are flagged via atomics, never allocated
+        hist.observe(f64::NAN);
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "disabled tracing / metric-handle updates allocated on the hot path"
+    );
 }
 
 #[test]
