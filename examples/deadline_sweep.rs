@@ -36,9 +36,9 @@ fn main() -> anyhow::Result<()> {
             betas.join("/"),
             plan.partition,
             plan.batch_size,
-            plan.f_edge / 1e9,
-            plan.total_energy * 1e3,
-            plan.t_free_end * 1e3
+            plan.f_edge_hz / 1e9,
+            plan.total_energy_j * 1e3,
+            plan.t_free_end_s * 1e3
         );
     }
 

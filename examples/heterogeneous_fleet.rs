@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "  user {}: deadline {:>5.0} ms, uplink {:>6.1} Mbit/s, kappa {:.2}x",
             u.id,
-            u.deadline * 1e3,
+            u.deadline_s * 1e3,
             u.dev.rate_bps / 1e6,
             u.dev.kappa / 1e-28
         );
@@ -33,10 +33,10 @@ fn main() -> anyhow::Result<()> {
         "\nJ-DOB: ñ = {}, batch = {}, f_e = {:.2} GHz — {:.2} mJ/user vs LC {:.2} mJ/user ({:.1}% saved)",
         plan.partition,
         plan.batch_size,
-        plan.f_edge / 1e9,
-        plan.energy_per_user() * 1e3,
-        lc.energy_per_user() * 1e3,
-        100.0 * (1.0 - plan.total_energy / lc.total_energy)
+        plan.f_edge_hz / 1e9,
+        plan.energy_per_user_j() * 1e3,
+        lc.energy_per_user_j() * 1e3,
+        100.0 * (1.0 - plan.total_energy_j / lc.total_energy_j)
     );
     println!("\nper-user decisions (offloaders should skew to fast links / hungry chips):");
     for (u, up) in users.iter().zip(&plan.users) {
@@ -44,8 +44,8 @@ fn main() -> anyhow::Result<()> {
             "  user {}: {:<8} f_m = {:.2} GHz, {:>6.2} mJ  (uplink {:>6.1} Mbit/s, kappa {:.2}x)",
             u.id,
             if up.offloaded { "OFFLOAD" } else { "local" },
-            up.f_dev / 1e9,
-            up.device_energy() * 1e3,
+            up.f_dev_hz / 1e9,
+            up.device_energy_j() * 1e3,
             u.dev.rate_bps / 1e6,
             u.dev.kappa / 1e-28
         );
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
 
     // sanity: every user meets its deadline
     for (u, up) in users.iter().zip(&plan.users) {
-        anyhow::ensure!(up.finish_time <= u.deadline + 1e-9, "user {} misses", u.id);
+        anyhow::ensure!(up.finish_time_s <= u.deadline_s + 1e-9, "user {} misses", u.id);
     }
     println!("\nall deadlines met.");
     Ok(())

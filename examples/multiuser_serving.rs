@@ -41,11 +41,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dev = DeviceModel::from_config(&ctx.cfg);
-    let deadline = User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
+    let deadline_s = User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
     let elems: usize = ctx.profile.input_shape.iter().product();
     println!(
         "serving {} users x {} rounds with {} (beta = {beta}, deadline = {:.0} ms)",
-        m, rounds, solver, deadline * 1e3
+        m, rounds, solver, deadline_s * 1e3
     );
 
     let policy = WindowPolicy {
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
                     .submit_async(InferenceRequest {
                         user_id: u,
                         input,
-                        deadline_s: deadline,
+                        deadline_s: deadline_s,
                     })
                     .expect("submit");
                 (u, t0, rx)

@@ -43,9 +43,9 @@ fn main() -> anyhow::Result<()> {
             rate,
             jd.served,
             jd.windows,
-            jd.energy_per_user() * 1e3,
-            lc.energy_per_user() * 1e3,
-            100.0 * (1.0 - jd.energy_per_user() / lc.energy_per_user()),
+            jd.energy_per_user_j() * 1e3,
+            lc.energy_per_user_j() * 1e3,
+            100.0 * (1.0 - jd.energy_per_user_j() / lc.energy_per_user_j()),
             100.0 * jd.hit_rate(),
             100.0 * jd.offloaded as f64 / jd.served.max(1) as f64,
         );
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             "{:>16} {:>10} {:>12.3} {:>8.1}% {:>12.2}",
             row.policy,
             row.stats.windows,
-            row.stats.energy_per_user() * 1e3,
+            row.stats.energy_per_user_j() * 1e3,
             100.0 * row.stats.hit_rate(),
             row.stats.mean_latency_s * 1e3,
         );

@@ -22,15 +22,15 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Eight users sharing the paper's beta = 2.13 deadline tightness.
     let dev = DeviceModel::from_config(&ctx.cfg);
-    let deadline = User::deadline_from_beta(2.13, &dev, ctx.tables.total_work());
+    let deadline_s = User::deadline_from_beta(2.13, &dev, ctx.tables.total_work());
     let users: Vec<User> = (0..8)
         .map(|id| User {
             id,
-            deadline,
+            deadline_s,
             dev: dev.clone(),
         })
         .collect();
-    println!("group: M = {}, deadline = {:.1} ms\n", users.len(), deadline * 1e3);
+    println!("group: M = {}, deadline = {:.1} ms\n", users.len(), deadline_s * 1e3);
 
     // 3. Solve with J-DOB (Algorithm 1 + 2).
     let plan = JDob::full()
@@ -40,23 +40,23 @@ fn main() -> anyhow::Result<()> {
     println!("J-DOB strategy:");
     println!("  partition point ñ = {} (blocks 1..{} local, rest at edge)", plan.partition, plan.partition);
     println!("  offloading set    = {:?} (batch size {})", plan.offload_ids(), plan.batch_size);
-    println!("  edge frequency    = {:.2} GHz", plan.f_edge / 1e9);
+    println!("  edge frequency    = {:.2} GHz", plan.f_edge_hz / 1e9);
     for up in &plan.users {
         println!(
             "    user {}: {} @ {:.2} GHz, energy {:.2} mJ, finishes at {:.1} ms",
             up.id,
             if up.offloaded { "offload" } else { "local  " },
-            up.f_dev / 1e9,
-            up.device_energy() * 1e3,
-            up.finish_time * 1e3
+            up.f_dev_hz / 1e9,
+            up.device_energy_j() * 1e3,
+            up.finish_time_s * 1e3
         );
     }
     println!(
         "  total energy {:.2} mJ ({:.2} mJ/user), edge {:.2} mJ, GPU busy until {:.1} ms\n",
-        plan.total_energy * 1e3,
-        plan.energy_per_user() * 1e3,
-        plan.edge_energy * 1e3,
-        plan.t_free_end * 1e3
+        plan.total_energy_j * 1e3,
+        plan.energy_per_user_j() * 1e3,
+        plan.edge_energy_j * 1e3,
+        plan.t_free_end_s * 1e3
     );
 
     // 4. Compare the full benchmark roster.
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             Some(p) => println!(
                 "  {:<22} {:>8.2} mJ/user  (ñ={}, B_o={})",
                 solver.name(),
-                p.energy_per_user() * 1e3,
+                p.energy_per_user_j() * 1e3,
                 p.partition,
                 p.batch_size
             ),

@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench ablations`
 
 use std::sync::Arc;
-use std::time::Instant;
+use jdob::util::benchkit;
 
 use jdob::algo::bruteforce::BruteForce;
 use jdob::algo::jdob::JDob;
@@ -34,7 +34,7 @@ fn random_users(ctx: &PlanningContext, m: usize, range: (f64, f64), rng: &mut Rn
             let beta = rng.gen_range(range.0, range.1);
             User {
                 id,
-                deadline: User::deadline_from_beta(beta, &dev, total),
+                deadline_s: User::deadline_from_beta(beta, &dev, total),
                 dev,
             }
         })
@@ -47,14 +47,14 @@ fn solve_with_order(ctx: &PlanningContext, users: &[User], ord: PeelOrder) -> Op
     for n_tilde in 0..ctx.n() {
         let setup = build_setup_ordered(ctx, users, n_tilde, ord);
         if let Some(p) = sweep(ctx, users, n_tilde, &setup, 0.0, false, "abl") {
-            if best.map_or(true, |b| p.total_energy < b) {
-                best = Some(p.total_energy);
+            if best.map_or(true, |b| p.total_energy_j < b) {
+                best = Some(p.total_energy_j);
             }
         }
     }
     // all-local candidate
     let lc = jdob::algo::baselines::LocalComputing::solve(ctx, users, 0.0)
-        .map(|p| p.total_energy);
+        .map(|p| p.total_energy_j);
     match (best, lc) {
         (Some(a), Some(b)) => Some(a.min(b)),
         (a, b) => a.or(b),
@@ -88,7 +88,7 @@ fn main() {
             let dev = DeviceModel::from_config(&ctx.cfg);
             User {
                 id,
-                deadline: User::deadline_from_beta(2.13, &dev, ctx.tables.total_work()),
+                deadline_s: User::deadline_from_beta(2.13, &dev, ctx.tables.total_work()),
                 dev,
             }
         })
@@ -103,7 +103,7 @@ fn main() {
     let users: Vec<User> = (0..10)
         .map(|id| User {
             id,
-            deadline: User::deadline_from_beta(2.13, &dev, ctx.tables.total_work()),
+            deadline_s: User::deadline_from_beta(2.13, &dev, ctx.tables.total_work()),
             dev: dev.clone(),
         })
         .collect();
@@ -114,11 +114,11 @@ fn main() {
         let profile = ModelProfile::default_eval();
         let edge = Arc::new(AnalyticEdge::from_config(&cfg, &profile));
         let c2 = PlanningContext::new(cfg, profile, edge);
-        let t0 = Instant::now();
+        let t0 = benchkit::now();
         let mut e = 0.0;
         let reps = 50;
         for _ in 0..reps {
-            e = JDob::full().solve(&c2, &users, 0.0).unwrap().energy_per_user();
+            e = JDob::full().solve(&c2, &users, 0.0).unwrap().energy_per_user_j();
         }
         println!(
             "  {:>8}   {:>15.4}   {:>10.1?}",
@@ -142,8 +142,8 @@ fn main() {
             "  {:>6}   {:>9.2}   {:>13.3}   {:>14.1}%",
             b0,
             (b0 + 32.0) / (b0 + 1.0),
-            jd.energy_per_user() * 1e3,
-            100.0 * (1.0 - jd.total_energy / lc.total_energy)
+            jd.energy_per_user_j() * 1e3,
+            100.0 * (1.0 - jd.total_energy_j / lc.total_energy_j)
         );
     }
 
@@ -156,8 +156,8 @@ fn main() {
         let trials = 20;
         for _ in 0..trials {
             let users = random_users(&ctx, m, (0.5, 10.0), &mut rng);
-            let bf = BruteForce::solve(&ctx, &users, 0.0).unwrap().total_energy;
-            let jd = JDob::full().solve(&ctx, &users, 0.0).unwrap().total_energy;
+            let bf = BruteForce::solve(&ctx, &users, 0.0).unwrap().total_energy_j;
+            let jd = JDob::full().solve(&ctx, &users, 0.0).unwrap().total_energy_j;
             let gap = (jd - bf) / bf;
             worst = worst.max(gap);
             sum += gap;

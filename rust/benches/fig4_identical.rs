@@ -3,7 +3,7 @@
 //! the wall time of regenerating each figure.
 //! Run: `cargo bench --bench fig4_identical`
 
-use std::time::Instant;
+use jdob::util::benchkit;
 
 use jdob::algo::types::PlanningContext;
 use jdob::bench::figures::fig4_report;
@@ -14,7 +14,7 @@ fn main() {
     let counts: Vec<usize> = vec![1, 2, 4, 6, 8, 10, 14, 18, 22, 26, 30];
     for beta in [2.13, 30.25] {
         header(&format!("Fig. 4 (beta = {beta})"));
-        let t0 = Instant::now();
+        let t0 = benchkit::now();
         let report = fig4_report(&ctx, beta, &counts, None).expect("fig4");
         print!("{report}");
         println!("regenerated in {:?}\n", t0.elapsed());

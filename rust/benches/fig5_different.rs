@@ -4,7 +4,7 @@
 //! FIG5_TRIALS (env) or 10 to keep wall time sane.
 //! Run: `cargo bench --bench fig5_different`
 
-use std::time::Instant;
+use jdob::util::benchkit;
 
 use jdob::algo::types::PlanningContext;
 use jdob::bench::figures::fig5_report;
@@ -18,7 +18,7 @@ fn main() {
     let ctx = PlanningContext::default_analytic();
     for m in [10usize, 20] {
         header(&format!("Fig. 5 (M = {m}, {trials} trials)"));
-        let t0 = Instant::now();
+        let t0 = benchkit::now();
         let report = fig5_report(&ctx, m, trials, None).expect("fig5");
         print!("{report}");
         println!("regenerated in {:?}\n", t0.elapsed());

@@ -94,7 +94,7 @@ fn main() {
     for &m in og_sizes {
         let mut rng = Rng::seed_from_u64(2024 + m as u64);
         let users = uniform_beta_users(&ctx, m, (0.0, 10.0), &mut rng);
-        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         let t0 = min_d * 0.4;
 
         // counted run (one plan each way); the reference leg — timed *and*
@@ -108,7 +108,7 @@ fn main() {
             let reference =
                 optimal_grouping_reference(&ctx, &users, &counting, t0).expect("feasible");
             let rel =
-                (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
+                (memo.total_energy_j - reference.total_energy_j).abs() / reference.total_energy_j;
             assert!(rel < 1e-12);
             Some(counting.calls())
         } else {
@@ -164,7 +164,7 @@ fn main() {
     header("horizon re-planning at M = 32 (one window, 4 GPU horizons, shared workspace)");
     let mut rng = Rng::seed_from_u64(77);
     let users = uniform_beta_users(&ctx, 32, (0.0, 10.0), &mut rng);
-    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
     let horizons: Vec<f64> = [0.0, 0.2, 0.4, 0.6].iter().map(|f| min_d * f).collect();
     let mut ws = PlannerWorkspace::new(&ctx, &users);
     let mut ref_calls = 0u64;

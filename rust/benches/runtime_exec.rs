@@ -20,7 +20,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{Duration, Instant};
+use jdob::util::benchkit;
+use std::time::Duration;
 
 use jdob::config::SystemConfig;
 use jdob::model::ModelProfile;
@@ -184,7 +185,7 @@ fn main() {
     let first_input = vec![0.1f32; 8 * arena.in_elems(1)];
     let time_first = |be: &SimBackend| {
         let mut o = Vec::new();
-        let t0 = Instant::now();
+        let t0 = benchkit::now();
         be.run_block_into(1, &first_input, 8, &mut o).unwrap();
         t0.elapsed().as_secs_f64()
     };

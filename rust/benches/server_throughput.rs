@@ -11,7 +11,7 @@
 //! Run: `cargo bench --bench server_throughput`
 //! (set JDOB_BENCH_QUICK=1 to skip the largest fleet)
 
-use std::time::Instant;
+use jdob::util::benchkit;
 
 use jdob::algo::jdob::JDob;
 use jdob::algo::types::{PlanningContext, User};
@@ -40,10 +40,10 @@ fn trace(c: &PlanningContext, m: usize, seed: u64) -> Vec<Arrival<InferenceReque
     (0..m)
         .map(|id| {
             let beta = rng.gen_range(2.0, 20.0);
-            let deadline = User::deadline_from_beta(beta, &dev, total);
+            let deadline_s = User::deadline_from_beta(beta, &dev, total);
             let user = User {
                 id,
-                deadline,
+                deadline_s,
                 dev: dev.clone(),
             };
             let input: Vec<f32> = (0..elems)
@@ -55,7 +55,7 @@ fn trace(c: &PlanningContext, m: usize, seed: u64) -> Vec<Arrival<InferenceReque
                 InferenceRequest {
                     user_id: id,
                     input,
-                    deadline_s: deadline,
+                    deadline_s: deadline_s,
                 },
             )
         })
@@ -75,7 +75,7 @@ fn run_sequential(
     let mut clock = VirtualClock::new();
     let mut source = SliceSource::new(arrivals);
     let mut served = 0usize;
-    let t0 = Instant::now();
+    let t0 = benchkit::now();
     run_events(&mut sched, &mut clock, &mut source, &mut |window, planned| {
         let reqs: Vec<&InferenceRequest> = window.iter().map(|a| &a.payload).collect();
         let out = engine.execute_window(&reqs, &planned).expect("executes");
@@ -100,7 +100,7 @@ fn run_pipeline(
     // construct the backend outside the timed region, exactly like the
     // sequential variant — only scheduling + execution are compared
     let rt = backend(&exec_c);
-    let t0 = Instant::now();
+    let t0 = benchkit::now();
     let served = run_pipelined(&mut sched, &mut clock, &mut source, depth, move |rx| {
         let engine = ServingEngine::executor(exec_c, &rt);
         let mut served = 0usize;

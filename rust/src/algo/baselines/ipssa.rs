@@ -25,7 +25,7 @@ pub struct IpSsa;
 struct IpChoice {
     /// Chosen partition point (N = stay local).
     n_tilde: usize,
-    f_dev: f64,
+    f_dev_hz: f64,
     /// Prefix-compute + upload completion (offloaders only).
     arrival: f64,
 }
@@ -40,32 +40,32 @@ impl IpSsa {
             let v = ctx.tables.prefix_work(n_tilde);
             let choice = if n_tilde == n {
                 // local computing
-                let Some(f) = user.dev.freq_for_deadline(v, user.deadline) else {
+                let Some(f) = user.dev.freq_for_deadline(v, user.deadline_s) else {
                     continue;
                 };
-                let e = user.dev.compute_energy(v, f);
+                let e = user.dev.compute_energy_j(v, f);
                 (
                     e,
                     IpChoice {
                         n_tilde,
-                        f_dev: f,
+                        f_dev_hz: f,
                         arrival: f64::NAN,
                     },
                 )
             } else {
                 let tail = ctx.edge.phi(n_tilde, 1) / f_emax;
                 let o_bits = ctx.tables.o(n_tilde);
-                let budget = user.deadline - user.dev.tx_latency(o_bits) - tail;
+                let budget = user.deadline_s - user.dev.tx_latency_s(o_bits) - tail;
                 let Some(f) = user.dev.freq_for_deadline(v, budget) else {
                     continue;
                 };
-                let e = user.dev.compute_energy(v, f) + user.dev.tx_energy(o_bits);
-                let arrival = user.dev.compute_latency(v, f) + user.dev.tx_latency(o_bits);
+                let e = user.dev.compute_energy_j(v, f) + user.dev.tx_energy_j(o_bits);
+                let arrival = user.dev.compute_latency_s(v, f) + user.dev.tx_latency_s(o_bits);
                 (
                     e,
                     IpChoice {
                         n_tilde,
-                        f_dev: f,
+                        f_dev_hz: f,
                         arrival,
                     },
                 )
@@ -93,7 +93,7 @@ impl IpSsa {
             return None;
         }
         let mut t = t_free;
-        let mut edge_energy = 0.0;
+        let mut edge_energy_j = 0.0;
         for layer in 1..=n {
             // participants: users whose partition point precedes this layer
             let joiners: Vec<usize> = (0..users.len())
@@ -109,16 +109,16 @@ impl IpSsa {
             }
             let a_n = ctx.tables.a[layer - 1];
             t += ctx.edge.d(layer, b_n) * a_n / f_emax;
-            edge_energy += ctx.edge.c(layer, b_n) * a_n * f_emax * f_emax;
+            edge_energy_j += ctx.edge.c(layer, b_n) * a_n * f_emax * f_emax;
         }
-        Some((t, edge_energy))
+        Some((t, edge_energy_j))
     }
 
     pub fn solve(ctx: &PlanningContext, users: &[User], t_free: f64) -> Option<Plan> {
         if users.is_empty() {
             return None;
         }
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         if min_deadline < t_free - TIME_EPS {
             return None;
         }
@@ -131,24 +131,24 @@ impl IpSsa {
         // offloaders to local computing until everyone fits.
         loop {
             let sched = Self::aggregate_schedule(ctx, users, &choices, t_free);
-            let (finish, edge_energy) = match sched {
+            let (finish, edge_energy_j) = match sched {
                 None => (t_free, 0.0),
                 Some(x) => x,
             };
             let violator = (0..users.len())
                 .filter(|&i| choices[i].n_tilde < n)
-                .filter(|&i| !le_eps(finish, users[i].deadline))
-                .min_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
+                .filter(|&i| !le_eps(finish, users[i].deadline_s))
+                .min_by(|&a, &b| users[a].deadline_s.total_cmp(&users[b].deadline_s));
             if let Some(i) = violator {
                 // fall back to local computing for the tightest violator
                 let v = ctx.tables.total_work();
                 let f = users[i]
                     .dev
-                    .freq_for_deadline(v, users[i].deadline)
+                    .freq_for_deadline(v, users[i].deadline_s)
                     .expect("LC feasible by premise");
                 choices[i] = IpChoice {
                     n_tilde: n,
-                    f_dev: f,
+                    f_dev_hz: f,
                     arrival: f64::NAN,
                 };
                 continue;
@@ -156,33 +156,33 @@ impl IpSsa {
 
             // Assemble the plan.
             let mut user_plans = Vec::with_capacity(users.len());
-            let mut total = edge_energy;
+            let mut total = edge_energy_j;
             for (user, c) in users.iter().zip(&choices) {
                 let offloaded = c.n_tilde < n;
-                let (e_cp, e_tx, finish_time) = if offloaded {
+                let (e_cp, e_tx, finish_time_s) = if offloaded {
                     let v = ctx.tables.prefix_work(c.n_tilde);
                     let o_bits = ctx.tables.o(c.n_tilde);
                     (
-                        user.dev.compute_energy(v, c.f_dev),
-                        user.dev.tx_energy(o_bits),
+                        user.dev.compute_energy_j(v, c.f_dev_hz),
+                        user.dev.tx_energy_j(o_bits),
                         finish,
                     )
                 } else {
                     let v = ctx.tables.total_work();
                     (
-                        user.dev.compute_energy(v, c.f_dev),
+                        user.dev.compute_energy_j(v, c.f_dev_hz),
                         0.0,
-                        user.dev.compute_latency(v, c.f_dev),
+                        user.dev.compute_latency_s(v, c.f_dev_hz),
                     )
                 };
                 total += e_cp + e_tx;
                 user_plans.push(UserPlan {
                     id: user.id,
                     offloaded,
-                    f_dev: clamp(c.f_dev, user.dev.f_min, user.dev.f_max),
-                    energy_compute: e_cp,
-                    energy_tx: e_tx,
-                    finish_time,
+                    f_dev_hz: clamp(c.f_dev_hz, user.dev.f_min_hz, user.dev.f_max_hz),
+                    energy_compute_j: e_cp,
+                    energy_tx_j: e_tx,
+                    finish_time_s,
                 });
             }
             let b_o = user_plans.iter().filter(|u| u.offloaded).count();
@@ -204,12 +204,12 @@ impl IpSsa {
             };
             return Some(Plan {
                 partition,
-                f_edge: if b_o > 0 { ctx.edge.f_max() } else { f64::NAN },
+                f_edge_hz: if b_o > 0 { ctx.edge.f_max() } else { f64::NAN },
                 batch_size: b_o,
                 users: user_plans,
-                edge_energy,
-                total_energy: total,
-                t_free_end: if b_o > 0 { finish } else { t_free },
+                edge_energy_j,
+                total_energy_j: total,
+                t_free_end_s: if b_o > 0 { finish } else { t_free },
                 algo: "IP-SSA".into(),
             });
         }
@@ -244,7 +244,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -257,7 +257,7 @@ mod tests {
             let plan = IpSsa::solve(&c, &users, 0.0).unwrap();
             for (u, up) in users.iter().zip(&plan.users) {
                 assert!(
-                    up.finish_time <= u.deadline + 1e-9,
+                    up.finish_time_s <= u.deadline_s + 1e-9,
                     "M={m} user {} misses deadline",
                     u.id
                 );
@@ -274,10 +274,10 @@ mod tests {
         let ipssa = IpSsa::solve(&c, &users, 0.0).unwrap();
         let lc = LocalComputing::solve(&c, &users, 0.0).unwrap();
         assert!(
-            ipssa.total_energy > lc.total_energy,
+            ipssa.total_energy_j > lc.total_energy_j,
             "ipssa {} <= lc {}",
-            ipssa.total_energy,
-            lc.total_energy
+            ipssa.total_energy_j,
+            lc.total_energy_j
         );
     }
 
@@ -290,7 +290,7 @@ mod tests {
                 let ipssa = IpSsa::solve(&c, &users, 0.0).unwrap();
                 let jdob = JDob::full().solve(&c, &users, 0.0).unwrap();
                 assert!(
-                    jdob.total_energy <= ipssa.total_energy * (1.0 + 1e-9),
+                    jdob.total_energy_j <= ipssa.total_energy_j * (1.0 + 1e-9),
                     "M={m} beta={beta}"
                 );
             }
@@ -301,11 +301,11 @@ mod tests {
     fn respects_busy_gpu() {
         let c = ctx();
         let users = users_beta(&[5.0; 4], &c);
-        let t_busy = users[0].deadline * 0.98;
+        let t_busy = users[0].deadline_s * 0.98;
         if let Some(plan) = IpSsa::solve(&c, &users, t_busy) {
             // whatever offloads must still finish by its deadline
             for (u, up) in users.iter().zip(&plan.users) {
-                assert!(up.finish_time <= u.deadline + 1e-9);
+                assert!(up.finish_time_s <= u.deadline_s + 1e-9);
             }
         }
     }

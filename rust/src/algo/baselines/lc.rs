@@ -49,15 +49,15 @@ mod tests {
         let mk = |beta: f64| {
             vec![User {
                 id: 0,
-                deadline: User::deadline_from_beta(beta, &dev, total),
+                deadline_s: User::deadline_from_beta(beta, &dev, total),
                 dev: dev.clone(),
             }]
         };
         let tight = LocalComputing::solve(&ctx, &mk(0.0), 0.0).unwrap();
         let loose = LocalComputing::solve(&ctx, &mk(30.0), 0.0).unwrap();
         // tight: f = f_max; loose: f = f_min -> energy ratio (f_max/f_min)^2
-        let ratio = tight.total_energy / loose.total_energy;
-        let expect = (dev.f_max / dev.f_min).powi(2);
+        let ratio = tight.total_energy_j / loose.total_energy_j;
+        let expect = (dev.f_max_hz / dev.f_min_hz).powi(2);
         assert!((ratio - expect).abs() / expect < 1e-9, "{ratio} vs {expect}");
         validate_plan(&ctx, &mk(0.0), &tight, 0.0).unwrap();
     }
@@ -68,12 +68,12 @@ mod tests {
         let dev = DeviceModel::from_config(&ctx.cfg);
         let users = vec![User {
             id: 0,
-            deadline: 1.0,
+            deadline_s: 1.0,
             dev,
         }];
         let p = LocalComputing::solve(&ctx, &users, 123.0).unwrap();
-        assert_eq!(p.t_free_end, 123.0); // untouched
+        assert_eq!(p.t_free_end_s, 123.0); // untouched
         assert_eq!(p.batch_size, 0);
-        assert_eq!(p.edge_energy, 0.0);
+        assert_eq!(p.edge_energy_j, 0.0);
     }
 }

@@ -21,7 +21,7 @@ impl BruteForce {
         if m == 0 {
             return None;
         }
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         if min_deadline < t_free - TIME_EPS {
             return None;
         }
@@ -33,7 +33,7 @@ impl BruteForce {
         let mut best: Option<Plan> = None;
         let consider = |cand: Option<Plan>, best: &mut Option<Plan>| {
             if let Some(p) = cand {
-                if best.as_ref().map_or(true, |b| p.total_energy < b.total_energy) {
+                if best.as_ref().map_or(true, |b| p.total_energy_j < b.total_energy_j) {
                     *best = Some(p);
                 }
             }
@@ -93,7 +93,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -108,12 +108,12 @@ mod tests {
                 let jd = JDob::full().solve(&c, &users, 0.0).unwrap();
                 validate_plan(&c, &users, &bf, 0.0).unwrap();
                 // identical deadlines: the greedy peeling is exact
-                let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+                let gap = (jd.total_energy_j - bf.total_energy_j) / bf.total_energy_j;
                 assert!(
                     gap <= 1e-6,
                     "M={m} beta={beta}: jdob {:.6e} vs bf {:.6e} (gap {gap:.3e})",
-                    jd.total_energy,
-                    bf.total_energy
+                    jd.total_energy_j,
+                    bf.total_energy_j
                 );
             }
         }
@@ -127,7 +127,7 @@ mod tests {
             let users = users_beta(&bs, &c);
             let bf = BruteForce::solve(&c, &users, 0.0).unwrap();
             let jd = JDob::full().solve(&c, &users, 0.0).unwrap();
-            let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+            let gap = (jd.total_energy_j - bf.total_energy_j) / bf.total_energy_j;
             // J-DOB is near-optimal; allow a small greedy-batching gap
             assert!(gap <= 0.05, "betas {bs:?}: gap {gap:.4}");
         }
@@ -137,7 +137,7 @@ mod tests {
     fn bruteforce_respects_tfree() {
         let c = ctx();
         let users = users_beta(&[4.0, 4.0], &c);
-        let t_busy = users[0].deadline * 0.95;
+        let t_busy = users[0].deadline_s * 0.95;
         if let Some(plan) = BruteForce::solve(&c, &users, t_busy) {
             validate_plan(&c, &users, &plan, t_busy).unwrap();
         }

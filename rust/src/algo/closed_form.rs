@@ -12,7 +12,7 @@ use crate::util::{clamp, le_eps, TIME_EPS};
 #[inline]
 pub fn gamma(ctx: &PlanningContext, user: &User, n_tilde: usize) -> f64 {
     let v = ctx.tables.prefix_work(n_tilde);
-    ctx.tables.o(n_tilde) / user.dev.rate_bps + user.dev.zeta * user.dev.g * v / user.dev.f_max
+    ctx.tables.o(n_tilde) / user.dev.rate_bps + user.dev.zeta * user.dev.g * v / user.dev.f_max_hz
 }
 
 /// Γ_m for an offloading user (Eq. 19 top): the exact frequency at which the
@@ -42,7 +42,7 @@ pub fn gamma_cap_offload(
 #[inline]
 pub fn gamma_cap_local(ctx: &PlanningContext, user: &User) -> f64 {
     let v = ctx.tables.total_work();
-    user.dev.zeta * user.dev.g * v / user.deadline
+    user.dev.zeta * user.dev.g * v / user.deadline_s
 }
 
 /// The decoupled per-user optimum (Eq. 20-22) for a fixed (ñ, M'_o, f_e).
@@ -68,7 +68,7 @@ pub fn solve_fixed(
         .iter()
         .zip(offload)
         .filter(|(_, &o)| o)
-        .map(|(u, _)| u.deadline)
+        .map(|(u, _)| u.deadline_s)
         .fold(f64::INFINITY, f64::min);
 
     let (phi, psi) = if b_o > 0 {
@@ -90,51 +90,51 @@ pub fn solve_fixed(
     for (user, &off) in users.iter().zip(offload) {
         if off {
             let cap = gamma_cap_offload(ctx, user, n_tilde, l_o, phi_over_fe)?;
-            if cap > user.dev.f_max * (1.0 + 1e-12) {
+            if cap > user.dev.f_max_hz * (1.0 + 1e-12) {
                 return None; // cannot arrive in time even at f_max
             }
-            let f_m = clamp(cap.max(user.dev.f_min), user.dev.f_min, user.dev.f_max);
+            let f_m = clamp(cap.max(user.dev.f_min_hz), user.dev.f_min_hz, user.dev.f_max_hz);
             let v = ctx.tables.prefix_work(n_tilde);
             let o_bits = ctx.tables.o(n_tilde);
-            let arrival = user.dev.compute_latency(v, f_m) + user.dev.tx_latency(o_bits);
+            let arrival = user.dev.compute_latency_s(v, f_m) + user.dev.tx_latency_s(o_bits);
             // Numerical guard: arrival must respect the batching deadline.
             if !le_eps(arrival + phi_over_fe, l_o) {
                 return None;
             }
-            let e_cp = user.dev.compute_energy(v, f_m);
-            let e_tx = user.dev.tx_energy(o_bits);
+            let e_cp = user.dev.compute_energy_j(v, f_m);
+            let e_tx = user.dev.tx_energy_j(o_bits);
             max_arrival = max_arrival.max(arrival);
             total += e_cp + e_tx;
             user_plans.push(UserPlan {
                 id: user.id,
                 offloaded: true,
-                f_dev: f_m,
-                energy_compute: e_cp,
-                energy_tx: e_tx,
-                finish_time: f64::NAN, // filled below once batch start is known
+                f_dev_hz: f_m,
+                energy_compute_j: e_cp,
+                energy_tx_j: e_tx,
+                finish_time_s: f64::NAN, // filled below once batch start is known
             });
         } else {
             let cap = gamma_cap_local(ctx, user);
-            if cap > user.dev.f_max * (1.0 + 1e-12) {
+            if cap > user.dev.f_max_hz * (1.0 + 1e-12) {
                 return None; // cannot meet own deadline locally (excluded by paper's premise)
             }
-            let f_m = clamp(cap.max(user.dev.f_min), user.dev.f_min, user.dev.f_max);
+            let f_m = clamp(cap.max(user.dev.f_min_hz), user.dev.f_min_hz, user.dev.f_max_hz);
             let v = ctx.tables.total_work();
-            let e_cp = user.dev.compute_energy(v, f_m);
+            let e_cp = user.dev.compute_energy_j(v, f_m);
             total += e_cp;
             user_plans.push(UserPlan {
                 id: user.id,
                 offloaded: false,
-                f_dev: f_m,
-                energy_compute: e_cp,
-                energy_tx: 0.0,
-                finish_time: user.dev.compute_latency(v, f_m),
+                f_dev_hz: f_m,
+                energy_compute_j: e_cp,
+                energy_tx_j: 0.0,
+                finish_time_s: user.dev.compute_latency_s(v, f_m),
             });
         }
     }
 
     // Edge energy + Eq. 22: t_free* = max(t_free, max arrival) + phi/f_e.
-    let (edge_energy, t_free_end, batch_finish) = if b_o > 0 {
+    let (edge_energy_j, t_free_end_s, batch_finish) = if b_o > 0 {
         let start = t_free.max(max_arrival);
         let finish = start + phi_over_fe;
         if !le_eps(finish, l_o) {
@@ -144,20 +144,20 @@ pub fn solve_fixed(
     } else {
         (0.0, t_free, 0.0)
     };
-    total += edge_energy;
+    total += edge_energy_j;
 
     for up in user_plans.iter_mut().filter(|u| u.offloaded) {
-        up.finish_time = batch_finish;
+        up.finish_time_s = batch_finish;
     }
 
     Some(Plan {
         partition: n_tilde,
-        f_edge: if b_o > 0 { f_e } else { f64::NAN },
+        f_edge_hz: if b_o > 0 { f_e } else { f64::NAN },
         batch_size: b_o,
         users: user_plans,
-        edge_energy,
-        total_energy: total,
-        t_free_end,
+        edge_energy_j,
+        total_energy_j: total,
+        t_free_end_s,
         algo: algo.to_string(),
     })
 }
@@ -174,7 +174,7 @@ mod tests {
     fn user(id: usize, beta: f64, ctx: &PlanningContext) -> User {
         let dev = DeviceModel::from_config(&ctx.cfg);
         let t = User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
-        User { id, deadline: t, dev }
+        User { id, deadline_s: t, dev }
     }
 
     #[test]
@@ -186,7 +186,7 @@ mod tests {
         assert!((g0 - c.tables.o(0) / u.dev.rate_bps).abs() < 1e-12);
         // gamma at N includes the full local work
         let gn = gamma(&c, &u, c.n());
-        assert!(gn > u.dev.min_latency(c.tables.total_work()));
+        assert!(gn > u.dev.min_latency_s(c.tables.total_work()));
     }
 
     #[test]
@@ -196,15 +196,15 @@ mod tests {
         let offload = vec![false; 3];
         let plan = solve_fixed(&c, &users, &offload, c.n(), 1e9, 0.0, "t").unwrap();
         assert_eq!(plan.batch_size, 0);
-        assert_eq!(plan.edge_energy, 0.0);
+        assert_eq!(plan.edge_energy_j, 0.0);
         // each user runs at the clamp of v_N/T
         for (u, up) in users.iter().zip(&plan.users) {
             let expect = u
                 .dev
-                .freq_for_deadline(c.tables.total_work(), u.deadline)
+                .freq_for_deadline(c.tables.total_work(), u.deadline_s)
                 .unwrap();
-            assert!((up.f_dev - expect).abs() < 1.0);
-            assert!(up.finish_time <= u.deadline + 1e-9);
+            assert!((up.f_dev_hz - expect).abs() < 1.0);
+            assert!(up.finish_time_s <= u.deadline_s + 1e-9);
         }
     }
 
@@ -215,10 +215,10 @@ mod tests {
         let offload = vec![true; 4];
         let plan = solve_fixed(&c, &users, &offload, 0, c.cfg.f_edge_max_hz, 0.0, "t").unwrap();
         for up in &plan.users {
-            assert_eq!(up.energy_compute, 0.0);
-            assert!(up.energy_tx > 0.0);
+            assert_eq!(up.energy_compute_j, 0.0);
+            assert!(up.energy_tx_j > 0.0);
         }
-        assert!(plan.edge_energy > 0.0);
+        assert!(plan.edge_energy_j > 0.0);
         assert_eq!(plan.batch_size, 4);
     }
 
@@ -237,7 +237,7 @@ mod tests {
         let c = ctx();
         let users: Vec<User> = (0..2).map(|i| user(i, 1.0, &c)).collect();
         let offload = vec![true; 2];
-        let t_dead = users[0].deadline;
+        let t_dead = users[0].deadline_s;
         // GPU busy until after the deadline -> Eq. 6 violated
         let plan = solve_fixed(&c, &users, &offload, 4, c.cfg.f_edge_max_hz, t_dead, "t");
         assert!(plan.is_none());
@@ -249,11 +249,11 @@ mod tests {
         let users: Vec<User> = (0..3).map(|i| user(i, 8.0, &c)).collect();
         let offload = vec![true, true, false];
         let plan = solve_fixed(&c, &users, &offload, 3, 1.5e9, 0.01, "t").unwrap();
-        // offloaded users all finish with the batch, exactly at t_free_end
+        // offloaded users all finish with the batch, exactly at t_free_end_s
         for up in plan.users.iter().filter(|u| u.offloaded) {
-            assert!((up.finish_time - plan.t_free_end).abs() < 1e-12);
+            assert!((up.finish_time_s - plan.t_free_end_s).abs() < 1e-12);
         }
-        assert!(plan.t_free_end >= 0.01);
+        assert!(plan.t_free_end_s >= 0.01);
     }
 
     #[test]
@@ -263,8 +263,8 @@ mod tests {
         let offload = vec![true; 4];
         let hi = solve_fixed(&c, &users, &offload, 0, 2.1e9, 0.0, "t").unwrap();
         let lo = solve_fixed(&c, &users, &offload, 0, 1.0e9, 0.0, "t").unwrap();
-        assert!(lo.edge_energy < hi.edge_energy);
+        assert!(lo.edge_energy_j < hi.edge_energy_j);
         // at ñ=0 device compute is zero, so total tracks edge + tx
-        assert!(lo.total_energy < hi.total_energy);
+        assert!(lo.total_energy_j < hi.total_energy_j);
     }
 }

@@ -67,15 +67,15 @@ impl UserRow {
             o_over_r: o_bits / u.dev.rate_bps,
             cycles: u.dev.zeta * u.dev.g * v,
             e_coef: u.dev.kappa * u.dev.q * v,
-            e_tx: u.dev.tx_energy(o_bits),
-            f_min: u.dev.f_min,
-            f_max: u.dev.f_max,
+            e_tx: u.dev.tx_energy_j(o_bits),
+            f_min: u.dev.f_min_hz,
+            f_max: u.dev.f_max_hz,
             // LC energy at the user's deadline-optimal frequency; None if
             // even f_max misses the deadline (the user must offload).
             lc: u
                 .dev
-                .freq_for_deadline(v_total, u.deadline)
-                .map(|f| u.dev.compute_energy(v_total, f)),
+                .freq_for_deadline(v_total, u.deadline_s)
+                .map(|f| u.dev.compute_energy_j(v_total, f)),
         }
     }
 }
@@ -378,7 +378,7 @@ pub fn solve_fast_with(
     if users.is_empty() {
         return None;
     }
-    let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
     if min_deadline < t_free - TIME_EPS {
         return None;
     }
@@ -440,7 +440,7 @@ pub fn solve_fast_with(
     });
 
     match (offload_plan, all_local) {
-        (Some(a), Some(b)) => Some(if a.total_energy <= b.total_energy { a } else { b }),
+        (Some(a), Some(b)) => Some(if a.total_energy_j <= b.total_energy_j { a } else { b }),
         (a, b) => a.or(b),
     }
 }
@@ -467,7 +467,7 @@ mod tests {
                 let beta = rng.gen_range(0.2, 20.0);
                 User {
                     id,
-                    deadline: User::deadline_from_beta(beta, &dev, total),
+                    deadline_s: User::deadline_from_beta(beta, &dev, total),
                     dev,
                 }
             })
@@ -486,12 +486,12 @@ mod tests {
                 let fast = solve_fast(&c, &users, t_free, true, false, "J-DOB");
                 match (&slow, &fast) {
                     (Some(s), Some(f)) => {
-                        let rel = (s.total_energy - f.total_energy).abs() / s.total_energy;
+                        let rel = (s.total_energy_j - f.total_energy_j).abs() / s.total_energy_j;
                         assert!(
                             rel < 1e-9,
                             "trial {trial}: slow {} vs fast {}",
-                            s.total_energy,
-                            f.total_energy
+                            s.total_energy_j,
+                            f.total_energy_j
                         );
                         assert_eq!(s.partition, f.partition, "trial {trial}");
                         assert_eq!(s.batch_size, f.batch_size, "trial {trial}");
@@ -519,7 +519,7 @@ mod tests {
                 let fast = solve_fast(&c, &users, 0.0, dvfs, binary, "x");
                 match (&slow, &fast) {
                     (Some(s), Some(f)) => {
-                        assert!((s.total_energy - f.total_energy).abs() / s.total_energy < 1e-9);
+                        assert!((s.total_energy_j - f.total_energy_j).abs() / s.total_energy_j < 1e-9);
                     }
                     (None, None) => {}
                     _ => panic!("feasibility disagreement"),
@@ -534,16 +534,16 @@ mod tests {
         let mut rng = Rng::seed_from_u64(0x9A12);
         for trial in 0..5 {
             let users = random_users(&c, 40, &mut rng);
-            for t_free in [0.0, users[0].deadline * 0.3] {
+            for t_free in [0.0, users[0].deadline_s * 0.3] {
                 let seq = solve_fast_with(&c, &users, t_free, true, false, "s", usize::MAX);
                 let par = solve_fast_with(&c, &users, t_free, true, false, "s", 1);
                 match (&seq, &par) {
                     (Some(a), Some(b)) => {
-                        assert_eq!(a.total_energy.to_bits(), b.total_energy.to_bits(), "{trial}");
+                        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits(), "{trial}");
                         assert_eq!(a.partition, b.partition, "{trial}");
                         assert_eq!(a.batch_size, b.batch_size, "{trial}");
                         assert_eq!(a.offload_ids(), b.offload_ids(), "{trial}");
-                        assert_eq!(a.t_free_end.to_bits(), b.t_free_end.to_bits(), "{trial}");
+                        assert_eq!(a.t_free_end_s.to_bits(), b.t_free_end_s.to_bits(), "{trial}");
                     }
                     (None, None) => {}
                     _ => panic!("trial {trial}: feasibility disagreement"),

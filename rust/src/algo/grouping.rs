@@ -33,14 +33,14 @@ pub struct GroupedPlan {
     /// (users in the group — by position into the deadline-sorted order —
     /// and the group's inner plan), in processing order.
     pub groups: Vec<(Vec<usize>, Plan)>,
-    pub total_energy: f64,
-    pub t_free_end: f64,
+    pub total_energy_j: f64,
+    pub t_free_end_s: f64,
 }
 
 impl GroupedPlan {
-    pub fn energy_per_user(&self) -> f64 {
+    pub fn energy_per_user_j(&self) -> f64 {
         let m: usize = self.groups.iter().map(|(idx, _)| idx.len()).sum();
-        self.total_energy / m as f64
+        self.total_energy_j / m as f64
     }
 }
 
@@ -103,7 +103,7 @@ pub fn optimal_grouping_reference(
         return None;
     }
     let mut order: Vec<usize> = (0..m).collect();
-    order.sort_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
+    order.sort_by(|&a, &b| users[a].deadline_s.total_cmp(&users[b].deadline_s));
     let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
     optimal_grouping_generic(ctx, &sorted, &order, solver, t_free0)
 }
@@ -140,7 +140,7 @@ fn optimal_grouping_memo(
                 if let Some(sol) = ws.solve_group(ctx, jdob, j, i, st.t_free) {
                     states.push(MState {
                         energy: st.energy + sol.energy,
-                        t_free: sol.t_free_end,
+                        t_free: sol.t_free_end_s,
                         back: Some((j, sidx, sol.choice)),
                     });
                 }
@@ -157,8 +157,8 @@ fn optimal_grouping_memo(
         .iter()
         .enumerate()
         .min_by(|(_, a), (_, b)| a.energy.total_cmp(&b.energy))?;
-    let total_energy = frontier[m][best_idx].energy;
-    let t_free_end = frontier[m][best_idx].t_free;
+    let total_energy_j = frontier[m][best_idx].energy;
+    let t_free_end_s = frontier[m][best_idx].t_free;
 
     // reconstruct the chain, then materialize forward against each group's
     // incoming horizon (the predecessor state's t_free)
@@ -189,8 +189,8 @@ fn optimal_grouping_memo(
     }
     Some(GroupedPlan {
         groups,
-        total_energy,
-        t_free_end,
+        total_energy_j,
+        t_free_end_s,
     })
 }
 
@@ -232,8 +232,8 @@ fn optimal_grouping_generic(
             for (sidx, st) in frontier[j].iter().enumerate() {
                 if let Some(plan) = solver.solve(ctx, group, st.t_free) {
                     states.push(DpState {
-                        energy: st.energy + plan.total_energy,
-                        t_free: plan.t_free_end,
+                        energy: st.energy + plan.total_energy_j,
+                        t_free: plan.t_free_end_s,
                         back: Some((j, plan, sidx)),
                     });
                 }
@@ -250,8 +250,8 @@ fn optimal_grouping_generic(
         .iter()
         .enumerate()
         .min_by(|(_, a), (_, b)| a.energy.total_cmp(&b.energy))?;
-    let total_energy = frontier[m][best_idx].energy;
-    let t_free_end = frontier[m][best_idx].t_free;
+    let total_energy_j = frontier[m][best_idx].energy;
+    let t_free_end_s = frontier[m][best_idx].t_free;
 
     // reconstruct groups, moving each winning plan out of its state
     let mut groups_rev: Vec<(Vec<usize>, Plan)> = Vec::new();
@@ -269,8 +269,8 @@ fn optimal_grouping_generic(
     groups_rev.reverse();
     Some(GroupedPlan {
         groups: groups_rev,
-        total_energy,
-        t_free_end,
+        total_energy_j,
+        t_free_end_s,
     })
 }
 
@@ -342,8 +342,8 @@ pub fn exhaustive_grouping_ws(
         for &(a, b) in &groups {
             match solver.solve(ctx, &sorted[a..b], t_free) {
                 Some(p) => {
-                    t_free = p.t_free_end;
-                    total += p.total_energy;
+                    t_free = p.t_free_end_s;
+                    total += p.total_energy_j;
                     plans.push((order[a..b].to_vec(), p));
                 }
                 None => {
@@ -352,11 +352,11 @@ pub fn exhaustive_grouping_ws(
                 }
             }
         }
-        if ok && best.as_ref().map_or(true, |bp| total < bp.total_energy) {
+        if ok && best.as_ref().map_or(true, |bp| total < bp.total_energy_j) {
             best = Some(GroupedPlan {
                 groups: plans,
-                total_energy: total,
-                t_free_end: t_free,
+                total_energy_j: total,
+                t_free_end_s: t_free,
             });
         }
     }
@@ -382,7 +382,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -397,8 +397,8 @@ mod tests {
             let users = users_beta(&betas, &c);
             let dp = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
             let ex = exhaustive_grouping(&c, &users, &solver, 0.0).unwrap();
-            let gap = (dp.total_energy - ex.total_energy).abs() / ex.total_energy;
-            assert!(gap < 1e-9, "betas {betas:?}: dp {} ex {}", dp.total_energy, ex.total_energy);
+            let gap = (dp.total_energy_j - ex.total_energy_j).abs() / ex.total_energy_j;
+            assert!(gap < 1e-9, "betas {betas:?}: dp {} ex {}", dp.total_energy_j, ex.total_energy_j);
         }
     }
 
@@ -410,7 +410,7 @@ mod tests {
         for trial in 0..6 {
             let betas: Vec<f64> = (0..7).map(|_| rng.gen_range(0.3, 12.0)).collect();
             let users = users_beta(&betas, &c);
-            let t0 = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min)
+            let t0 = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min)
                 * if trial % 2 == 0 { 0.0 } else { 0.5 };
             let memo = optimal_grouping(&c, &users, &solver, t0).unwrap();
             let reference = optimal_grouping_reference(&c, &users, &solver, t0).unwrap();
@@ -421,8 +421,8 @@ mod tests {
                 assert_eq!(pm.batch_size, pr.batch_size, "trial {trial}");
                 assert_eq!(pm.offload_ids(), pr.offload_ids(), "trial {trial}");
             }
-            let rel = (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
-            assert!(rel < 1e-12, "trial {trial}: {} vs {}", memo.total_energy, reference.total_energy);
+            let rel = (memo.total_energy_j - reference.total_energy_j).abs() / reference.total_energy_j;
+            assert!(rel < 1e-12, "trial {trial}: {} vs {}", memo.total_energy_j, reference.total_energy_j);
         }
     }
 
@@ -433,7 +433,7 @@ mod tests {
         let users = users_beta(&[1.0, 2.0, 4.0, 8.0, 16.0], &c);
         let grouped = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
         if let Some(single) = solver.solve(&c, &users, 0.0) {
-            assert!(grouped.total_energy <= single.total_energy * (1.0 + 1e-9));
+            assert!(grouped.total_energy_j <= single.total_energy_j * (1.0 + 1e-9));
         }
     }
 
@@ -450,8 +450,8 @@ mod tests {
         let mut last = f64::NEG_INFINITY;
         for (g, _) in &plan.groups {
             for &u in g {
-                assert!(users[u].deadline >= last - 1e-12);
-                last = users[u].deadline;
+                assert!(users[u].deadline_s >= last - 1e-12);
+                last = users[u].deadline_s;
             }
         }
     }
@@ -464,10 +464,10 @@ mod tests {
         let plan = optimal_grouping(&c, &users, &solver, 0.0).unwrap();
         let mut t = 0.0;
         for (_, p) in &plan.groups {
-            assert!(p.t_free_end >= t - 1e-12);
-            t = p.t_free_end;
+            assert!(p.t_free_end_s >= t - 1e-12);
+            t = p.t_free_end_s;
         }
-        assert!((t - plan.t_free_end).abs() < 1e-12);
+        assert!((t - plan.t_free_end_s).abs() < 1e-12);
     }
 
     #[test]
@@ -477,6 +477,6 @@ mod tests {
         let users = users_beta(&[1.0, 3.0, 5.0], &c);
         let grouped = optimal_grouping(&c, &users, &LocalComputing, 0.0).unwrap();
         let flat = LocalComputing::solve(&c, &users, 0.0).unwrap();
-        assert!((grouped.total_energy - flat.total_energy).abs() / flat.total_energy < 1e-12);
+        assert!((grouped.total_energy_j - flat.total_energy_j).abs() / flat.total_energy_j < 1e-12);
     }
 }

@@ -95,7 +95,7 @@ impl JDob {
             return None;
         }
         // Alg. 1 Require: min deadline >= t_free.
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         if min_deadline < t_free - TIME_EPS {
             return None;
         }
@@ -104,7 +104,7 @@ impl JDob {
         let mut best: Option<Plan> = None;
         let consider = |cand: Option<Plan>, best: &mut Option<Plan>| {
             if let Some(p) = cand {
-                if best.as_ref().map_or(true, |b| p.total_energy < b.total_energy) {
+                if best.as_ref().map_or(true, |b| p.total_energy_j < b.total_energy_j) {
                     *best = Some(p);
                 }
             }
@@ -168,7 +168,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -183,10 +183,10 @@ mod tests {
                 let lc = solve_fixed(&c, &users, &vec![false; m], c.n(), f64::NAN, 0.0, "LC")
                     .unwrap();
                 assert!(
-                    plan.total_energy <= lc.total_energy * (1.0 + 1e-9),
+                    plan.total_energy_j <= lc.total_energy_j * (1.0 + 1e-9),
                     "M={m} beta={beta}: jdob {} > lc {}",
-                    plan.total_energy,
-                    lc.total_energy
+                    plan.total_energy_j,
+                    lc.total_energy_j
                 );
                 validate_plan(&c, &users, &plan, 0.0).unwrap();
             }
@@ -202,8 +202,8 @@ mod tests {
             let full = JDob::full().solve(&c, &users, 0.0).unwrap();
             let noedge = JDob::without_edge_dvfs().solve(&c, &users, 0.0).unwrap();
             let binary = JDob::binary_offloading().solve(&c, &users, 0.0).unwrap();
-            assert!(full.total_energy <= noedge.total_energy * (1.0 + 1e-9));
-            assert!(full.total_energy <= binary.total_energy * (1.0 + 1e-9));
+            assert!(full.total_energy_j <= noedge.total_energy_j * (1.0 + 1e-9));
+            assert!(full.total_energy_j <= binary.total_energy_j * (1.0 + 1e-9));
             validate_plan(&c, &users, &noedge, 0.0).unwrap();
             validate_plan(&c, &users, &binary, 0.0).unwrap();
         }
@@ -213,12 +213,12 @@ mod tests {
     fn respects_gpu_busy_time() {
         let c = ctx();
         let users = users_beta(&[5.0; 6], &c);
-        let t_busy = users[0].deadline * 0.9;
+        let t_busy = users[0].deadline_s * 0.9;
         let plan = JDob::full().solve(&c, &users, t_busy).unwrap();
         validate_plan(&c, &users, &plan, t_busy).unwrap();
         // require: rejects groups whose deadline precedes t_free
         assert!(JDob::full()
-            .solve(&c, &users, users[0].deadline * 1.1)
+            .solve(&c, &users, users[0].deadline_s * 1.1)
             .is_none());
     }
 
@@ -240,10 +240,10 @@ mod tests {
         let lc = solve_fixed(&c, &users, &vec![false; 10], c.n(), f64::NAN, 0.0, "LC").unwrap();
         assert!(plan.batch_size > 0, "loose deadlines should offload");
         assert!(
-            plan.total_energy < lc.total_energy * 0.9,
+            plan.total_energy_j < lc.total_energy_j * 0.9,
             "expected >10% savings, got {} vs {}",
-            plan.total_energy,
-            lc.total_energy
+            plan.total_energy_j,
+            lc.total_energy_j
         );
     }
 
@@ -253,7 +253,7 @@ mod tests {
         let users = users_beta(&[2.13; 7], &c);
         let a = JDob::full().solve(&c, &users, 0.0).unwrap();
         let b = JDob::full().solve(&c, &users, 0.0).unwrap();
-        assert_eq!(a.total_energy, b.total_energy);
+        assert_eq!(a.total_energy_j, b.total_energy_j);
         assert_eq!(a.partition, b.partition);
         assert_eq!(a.offload_ids(), b.offload_ids());
     }

@@ -65,8 +65,8 @@ pub(crate) fn slack_ascending_cmp(
     i: usize,
     j: usize,
 ) -> std::cmp::Ordering {
-    let di = users[i].deadline - g[i];
-    let dj = users[j].deadline - g[j];
+    let di = users[i].deadline_s - g[i];
+    let dj = users[j].deadline_s - g[j];
     // total order: NaN slack (poisoned deadline/gamma) sorts deterministically
     // instead of panicking the planner mid-window
     di.total_cmp(&dj).then(g[j].total_cmp(&g[i]))
@@ -117,7 +117,7 @@ pub fn build_setup_from_gammas(
     let mut suffix_min_deadline = vec![f64::INFINITY; b + 1];
     let mut suffix_max_gamma = vec![f64::NEG_INFINITY; b + 1];
     for i in (0..b).rev() {
-        suffix_min_deadline[i] = suffix_min_deadline[i + 1].min(users[order[i]].deadline);
+        suffix_min_deadline[i] = suffix_min_deadline[i + 1].min(users[order[i]].deadline_s);
         suffix_max_gamma[i] = suffix_max_gamma[i + 1].max(gammas[i]);
     }
 
@@ -188,7 +188,7 @@ pub fn sweep(
                 offload[idx] = true;
             }
             if let Some(plan) = solve_fixed(ctx, users, &offload, n_tilde, f_e, t_free, algo) {
-                if best.as_ref().map_or(true, |bp| plan.total_energy < bp.total_energy) {
+                if best.as_ref().map_or(true, |bp| plan.total_energy_j < bp.total_energy_j) {
                     best = Some(plan);
                 }
             }
@@ -221,7 +221,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -280,8 +280,8 @@ mod tests {
         let s = build_setup(&c, &users, 0);
         let plan = sweep(&c, &users, 0, &s, 0.0, false, "test").unwrap();
         assert!(plan.batch_size > 0);
-        assert!(plan.total_energy > 0.0);
-        assert!(plan.f_edge >= c.edge.f_min() && plan.f_edge <= c.edge.f_max());
+        assert!(plan.total_energy_j > 0.0);
+        assert!(plan.f_edge_hz >= c.edge.f_min() && plan.f_edge_hz <= c.edge.f_max());
     }
 
     #[test]
@@ -294,7 +294,7 @@ mod tests {
                 let swept = sweep(&c, &users, n_tilde, &s, 0.0, false, "t");
                 let fixed = sweep(&c, &users, n_tilde, &s, 0.0, true, "t");
                 if let (Some(sw), Some(fx)) = (swept, fixed) {
-                    assert!(sw.total_energy <= fx.total_energy * (1.0 + 1e-12));
+                    assert!(sw.total_energy_j <= fx.total_energy_j * (1.0 + 1e-12));
                 }
             }
         }
@@ -304,10 +304,10 @@ mod tests {
     fn busy_gpu_excludes_offloading() {
         let c = ctx();
         let users = users_beta(&[2.0; 4], &c);
-        let deadline = users[0].deadline;
+        let deadline_s = users[0].deadline_s;
         let s = build_setup(&c, &users, 0);
         // GPU busy until the shared deadline: no batch fits
-        let plan = sweep(&c, &users, 0, &s, deadline, false, "t");
+        let plan = sweep(&c, &users, 0, &s, deadline_s, false, "t");
         assert!(plan.is_none());
     }
 }

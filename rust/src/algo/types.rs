@@ -14,19 +14,20 @@ pub type UserId = usize;
 pub struct User {
     pub id: UserId,
     /// Hard latency constraint T_m^(d) in seconds.
-    pub deadline: f64,
+    pub deadline_s: f64,
     pub dev: DeviceModel,
 }
 
 impl User {
     /// Tightness parameter beta_m = T/(min local latency) - 1 (paper §IV).
+    // audit:allow(unit-suffix) beta_m is the paper's dimensionless tightness ratio
     pub fn beta(&self, total_work: f64) -> f64 {
-        self.deadline / self.dev.min_latency(total_work) - 1.0
+        self.deadline_s / self.dev.min_latency_s(total_work) - 1.0
     }
 
     /// Deadline from beta: T = (1 + beta) * min local latency.
     pub fn deadline_from_beta(beta: f64, dev: &DeviceModel, total_work: f64) -> f64 {
-        (1.0 + beta) * dev.min_latency(total_work)
+        (1.0 + beta) * dev.min_latency_s(total_work)
     }
 }
 
@@ -37,18 +38,18 @@ pub struct UserPlan {
     /// true if the user is in the offloading set M'_o.
     pub offloaded: bool,
     /// Chosen device frequency f_m* (Hz).
-    pub f_dev: f64,
+    pub f_dev_hz: f64,
     /// Device compute energy (J).
-    pub energy_compute: f64,
+    pub energy_compute_j: f64,
     /// Uplink energy (J); 0 for local users.
-    pub energy_tx: f64,
+    pub energy_tx_j: f64,
     /// Completion time of this user's inference (s, from t=0 of the group).
-    pub finish_time: f64,
+    pub finish_time_s: f64,
 }
 
 impl UserPlan {
-    pub fn device_energy(&self) -> f64 {
-        self.energy_compute + self.energy_tx
+    pub fn device_energy_j(&self) -> f64 {
+        self.energy_compute_j + self.energy_tx_j
     }
 }
 
@@ -58,17 +59,17 @@ pub struct Plan {
     /// Identical partition point ñ (0 = full offload, N = all local).
     pub partition: usize,
     /// Edge GPU frequency f_e (Hz); meaningful iff the offload set is non-empty.
-    pub f_edge: f64,
+    pub f_edge_hz: f64,
     /// Batch size B_o = |M'_o|.
     pub batch_size: usize,
     /// Per-user decisions, in the same order as the input user slice.
     pub users: Vec<UserPlan>,
     /// Edge energy Σ c_n(B_o) A_n f_e² (J).
-    pub edge_energy: f64,
+    pub edge_energy_j: f64,
     /// Total energy (objective of P1), J.
-    pub total_energy: f64,
+    pub total_energy_j: f64,
     /// When the GPU becomes free again (Eq. 22); >= input t_free.
-    pub t_free_end: f64,
+    pub t_free_end_s: f64,
     /// Which algorithm produced this plan (for reporting).
     pub algo: String,
 }
@@ -82,13 +83,13 @@ impl Plan {
         self.users.iter().filter(|u| !u.offloaded).map(|u| u.id).collect()
     }
 
-    pub fn device_energy(&self) -> f64 {
-        self.users.iter().map(|u| u.device_energy()).sum()
+    pub fn device_energy_j(&self) -> f64 {
+        self.users.iter().map(|u| u.device_energy_j()).sum()
     }
 
     /// Average energy per user — the paper's y-axis in Fig. 4/5.
-    pub fn energy_per_user(&self) -> f64 {
-        self.total_energy / self.users.len() as f64
+    pub fn energy_per_user_j(&self) -> f64 {
+        self.total_energy_j / self.users.len() as f64
     }
 }
 
@@ -156,7 +157,7 @@ mod tests {
         let t = User::deadline_from_beta(2.13, &dev, total);
         let u = User {
             id: 0,
-            deadline: t,
+            deadline_s: t,
             dev,
         };
         assert!((u.beta(total) - 2.13).abs() < 1e-9);
@@ -167,23 +168,23 @@ mod tests {
         let mk = |id, off| UserPlan {
             id,
             offloaded: off,
-            f_dev: 1.5e9,
-            energy_compute: 1.0,
-            energy_tx: if off { 0.5 } else { 0.0 },
-            finish_time: 0.1,
+            f_dev_hz: 1.5e9,
+            energy_compute_j: 1.0,
+            energy_tx_j: if off { 0.5 } else { 0.0 },
+            finish_time_s: 0.1,
         };
         let p = Plan {
             partition: 3,
-            f_edge: 1e9,
+            f_edge_hz: 1e9,
             batch_size: 2,
             users: vec![mk(0, true), mk(1, false), mk(2, true)],
-            edge_energy: 0.3,
-            total_energy: 4.3,
-            t_free_end: 0.2,
+            edge_energy_j: 0.3,
+            total_energy_j: 4.3,
+            t_free_end_s: 0.2,
             algo: "test".into(),
         };
         assert_eq!(p.offload_ids(), vec![0, 2]);
         assert_eq!(p.local_ids(), vec![1]);
-        assert!((p.device_energy() - 4.0).abs() < 1e-12);
+        assert!((p.device_energy_j() - 4.0).abs() < 1e-12);
     }
 }

@@ -31,15 +31,15 @@ impl fmt::Display for Violation {
             Violation::EdgeFreqRange(fe, lo, hi) => {
                 write!(f, "edge frequency {fe} outside [{lo}, {hi}]")
             }
-            Violation::Deadline(u, finish, deadline) => {
-                write!(f, "user {u}: misses deadline ({finish:.6}s > {deadline:.6}s)")
+            Violation::Deadline(u, finish, deadline_s) => {
+                write!(f, "user {u}: misses deadline ({finish:.6}s > {deadline_s:.6}s)")
             }
             Violation::GpuOccupation(t_free, tail, l_o) => write!(
                 f,
                 "GPU occupation violates Eq. 6: t_free {t_free:.6} + tail {tail:.6} > l_o {l_o:.6}"
             ),
             Violation::TFreeRegression(end, start) => {
-                write!(f, "plan t_free_end {end:.6} earlier than input t_free {start:.6}")
+                write!(f, "plan t_free_end_s {end:.6} earlier than input t_free {start:.6}")
             }
             Violation::EnergyMismatch(reported, recomputed) => {
                 write!(f, "energy accounting off: reported {reported}, recomputed {recomputed}")
@@ -79,33 +79,33 @@ pub fn validate_plan(
     let mut l_o = f64::INFINITY;
 
     for (user, up) in users.iter().zip(&plan.users) {
-        if up.f_dev < user.dev.f_min * (1.0 - 1e-9) || up.f_dev > user.dev.f_max * (1.0 + 1e-9) {
+        if up.f_dev_hz < user.dev.f_min_hz * (1.0 - 1e-9) || up.f_dev_hz > user.dev.f_max_hz * (1.0 + 1e-9) {
             return Err(Violation::DeviceFreqRange(
                 user.id,
-                up.f_dev,
-                user.dev.f_min,
-                user.dev.f_max,
+                up.f_dev_hz,
+                user.dev.f_min_hz,
+                user.dev.f_max_hz,
             ));
         }
         if up.offloaded {
             let v = ctx.tables.prefix_work(n_tilde);
             let o_bits = ctx.tables.o(n_tilde);
-            let arrival = user.dev.compute_latency(v, up.f_dev) + user.dev.tx_latency(o_bits);
+            let arrival = user.dev.compute_latency_s(v, up.f_dev_hz) + user.dev.tx_latency_s(o_bits);
             max_arrival = max_arrival.max(arrival);
-            l_o = l_o.min(user.deadline);
-            energy += user.dev.compute_energy(v, up.f_dev) + user.dev.tx_energy(o_bits);
+            l_o = l_o.min(user.deadline_s);
+            energy += user.dev.compute_energy_j(v, up.f_dev_hz) + user.dev.tx_energy_j(o_bits);
         } else {
             let v = ctx.tables.total_work();
-            let finish = user.dev.compute_latency(v, up.f_dev);
-            if finish > user.deadline + TIME_EPS {
-                return Err(Violation::Deadline(user.id, finish, user.deadline));
+            let finish = user.dev.compute_latency_s(v, up.f_dev_hz);
+            if finish > user.deadline_s + TIME_EPS {
+                return Err(Violation::Deadline(user.id, finish, user.deadline_s));
             }
-            energy += user.dev.compute_energy(v, up.f_dev);
+            energy += user.dev.compute_energy_j(v, up.f_dev_hz);
         }
     }
 
     if b_o > 0 {
-        let f_e = plan.f_edge;
+        let f_e = plan.f_edge_hz;
         if f_e < ctx.edge.f_min() * (1.0 - 1e-9) || f_e > ctx.edge.f_max() * (1.0 + 1e-9) {
             return Err(Violation::EdgeFreqRange(f_e, ctx.edge.f_min(), ctx.edge.f_max()));
         }
@@ -117,24 +117,24 @@ pub fn validate_plan(
         // Eq. 7: per-user co-inference deadline (batch completes by l_o)
         let finish = t_free.max(max_arrival) + tail;
         for (user, up) in users.iter().zip(&plan.users).filter(|(_, up)| up.offloaded) {
-            if finish > user.deadline + TIME_EPS {
-                return Err(Violation::Deadline(user.id, finish, user.deadline));
+            if finish > user.deadline_s + TIME_EPS {
+                return Err(Violation::Deadline(user.id, finish, user.deadline_s));
             }
             // reported finish time must cover the recomputed one
-            if up.finish_time + TIME_EPS < finish {
-                return Err(Violation::Deadline(user.id, finish, up.finish_time));
+            if up.finish_time_s + TIME_EPS < finish {
+                return Err(Violation::Deadline(user.id, finish, up.finish_time_s));
             }
         }
         energy += ctx.edge.psi(n_tilde, b_o) * f_e * f_e;
 
-        if plan.t_free_end + TIME_EPS < t_free {
-            return Err(Violation::TFreeRegression(plan.t_free_end, t_free));
+        if plan.t_free_end_s + TIME_EPS < t_free {
+            return Err(Violation::TFreeRegression(plan.t_free_end_s, t_free));
         }
     }
 
-    let rel = (energy - plan.total_energy).abs() / energy.max(1e-30);
+    let rel = (energy - plan.total_energy_j).abs() / energy.max(1e-30);
     if rel > 1e-6 {
-        return Err(Violation::EnergyMismatch(plan.total_energy, energy));
+        return Err(Violation::EnergyMismatch(plan.total_energy_j, energy));
     }
     Ok(())
 }
@@ -156,7 +156,7 @@ mod tests {
             .map(|(i, &b)| {
                 let dev = DeviceModel::from_config(&ctx.cfg);
                 let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
-                User { id: i, deadline: t, dev }
+                User { id: i, deadline_s: t, dev }
             })
             .collect()
     }
@@ -175,7 +175,7 @@ mod tests {
         let c = ctx();
         let users = users_beta(&[5.0; 3], &c);
         let mut plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
-        plan.total_energy *= 0.5;
+        plan.total_energy_j *= 0.5;
         assert!(matches!(
             validate_plan(&c, &users, &plan, 0.0),
             Err(Violation::EnergyMismatch(_, _))
@@ -187,7 +187,7 @@ mod tests {
         let c = ctx();
         let users = users_beta(&[5.0; 3], &c);
         let mut plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
-        plan.f_edge = 5e9; // above f_e,max
+        plan.f_edge_hz = 5e9; // above f_e,max
         assert!(matches!(
             validate_plan(&c, &users, &plan, 0.0),
             Err(Violation::EdgeFreqRange(_, _, _))
@@ -212,7 +212,7 @@ mod tests {
         let users = users_beta(&[2.0; 3], &c);
         let plan = solve_fixed(&c, &users, &[true; 3], 0, 2.0e9, 0.0, "t").unwrap();
         // claim the GPU was busy until just before the deadline
-        let err = validate_plan(&c, &users, &plan, users[0].deadline * 0.999);
+        let err = validate_plan(&c, &users, &plan, users[0].deadline_s * 0.999);
         assert!(err.is_err());
     }
 }

@@ -145,7 +145,7 @@ pub enum GroupChoice {
 #[derive(Debug, Clone, Copy)]
 pub struct GroupSolution {
     pub energy: f64,
-    pub t_free_end: f64,
+    pub t_free_end_s: f64,
     pub choice: GroupChoice,
 }
 
@@ -196,7 +196,7 @@ impl PlannerWorkspace {
     pub fn new(ctx: &PlanningContext, users: &[User]) -> Self {
         let m = users.len();
         let mut order: Vec<usize> = (0..m).collect();
-        order.sort_by(|&a, &b| users[a].deadline.total_cmp(&users[b].deadline));
+        order.sort_by(|&a, &b| users[a].deadline_s.total_cmp(&users[b].deadline_s));
         let sorted: Vec<User> = order.iter().map(|&i| users[i].clone()).collect();
         Self {
             m,
@@ -424,7 +424,7 @@ impl PlannerWorkspace {
         self.stats.queries += 1;
         // Alg. 1 premise: min deadline (= sorted[j], the sort is by
         // deadline) must clear the busy horizon.
-        if self.sorted[j].deadline < t_free - TIME_EPS {
+        if self.sorted[j].deadline_s < t_free - TIME_EPS {
             return None;
         }
         self.ensure_tables(ctx);
@@ -472,9 +472,9 @@ impl PlannerWorkspace {
 
         let offload = winner.and_then(|c| {
             self.materialize_lite(ctx, j, i, &c, t_free)
-                .map(|(energy, t_free_end)| GroupSolution {
+                .map(|(energy, t_free_end_s)| GroupSolution {
                     energy,
-                    t_free_end,
+                    t_free_end_s,
                     choice: GroupChoice::Offload {
                         n_tilde: c.n_tilde,
                         i_hat: c.i_hat,
@@ -484,7 +484,7 @@ impl PlannerWorkspace {
         });
         let local = all_local.map(|energy| GroupSolution {
             energy,
-            t_free_end: t_free,
+            t_free_end_s: t_free,
             choice: GroupChoice::AllLocal,
         });
         match (offload, local) {
@@ -686,7 +686,7 @@ mod tests {
                 let beta = rng.gen_range(0.2, 15.0);
                 User {
                     id,
-                    deadline: User::deadline_from_beta(beta, &dev, total),
+                    deadline_s: User::deadline_from_beta(beta, &dev, total),
                     dev,
                 }
             })
@@ -703,7 +703,7 @@ mod tests {
         for _ in 0..4 {
             let users = random_users(&c, 6, &mut rng);
             let mut ws = PlannerWorkspace::new(&c, &users);
-            let min_d = ws.sorted()[0].deadline;
+            let min_d = ws.sorted()[0].deadline_s;
             for t_free in [0.0, min_d * 0.5, min_d * 1.5] {
                 for i in 1..=ws.len() {
                     for j in 0..i {
@@ -712,13 +712,13 @@ mod tests {
                         match (&direct, &lite) {
                             (Some(p), Some(s)) => {
                                 assert_eq!(
-                                    p.total_energy.to_bits(),
+                                    p.total_energy_j.to_bits(),
                                     s.energy.to_bits(),
                                     "group [{j}..{i}) t_free {t_free}"
                                 );
                                 assert_eq!(
-                                    p.t_free_end.to_bits(),
-                                    s.t_free_end.to_bits(),
+                                    p.t_free_end_s.to_bits(),
+                                    s.t_free_end_s.to_bits(),
                                     "group [{j}..{i}) t_free {t_free}"
                                 );
                             }
@@ -745,7 +745,7 @@ mod tests {
         let mut rng = Rng::seed_from_u64(7);
         let users = random_users(&c, 8, &mut rng);
         let mut warm = PlannerWorkspace::new(&c, &users);
-        let min_d = warm.sorted()[0].deadline;
+        let min_d = warm.sorted()[0].deadline_s;
         for t_free in [0.0, min_d * 0.3, min_d * 0.7] {
             let mut cold = PlannerWorkspace::new(&c, &users);
             for i in 1..=users.len() {
@@ -755,7 +755,7 @@ mod tests {
                     match (a, b) {
                         (Some(x), Some(y)) => {
                             assert_eq!(x.energy.to_bits(), y.energy.to_bits());
-                            assert_eq!(x.t_free_end.to_bits(), y.t_free_end.to_bits());
+                            assert_eq!(x.t_free_end_s.to_bits(), y.t_free_end_s.to_bits());
                         }
                         (None, None) => {}
                         _ => panic!("cache purity violated for [{j}..{i}) at {t_free}"),
@@ -776,7 +776,7 @@ mod tests {
         let mut rng = Rng::seed_from_u64(21);
         let users = random_users(&c, 7, &mut rng);
         let mut ws = PlannerWorkspace::new(&c, &users);
-        let min_d = ws.sorted()[0].deadline;
+        let min_d = ws.sorted()[0].deadline_s;
         for t_free in [0.0, min_d * 0.4] {
             for i in 1..=users.len() {
                 for j in 0..i {
@@ -784,8 +784,8 @@ mod tests {
                         let plan = ws
                             .materialize(&c, &jdob, j, i, sol.choice, t_free)
                             .expect("choice must materialize at its own horizon");
-                        assert_eq!(plan.total_energy.to_bits(), sol.energy.to_bits());
-                        assert_eq!(plan.t_free_end.to_bits(), sol.t_free_end.to_bits());
+                        assert_eq!(plan.total_energy_j.to_bits(), sol.energy.to_bits());
+                        assert_eq!(plan.t_free_end_s.to_bits(), sol.t_free_end_s.to_bits());
                     }
                 }
             }

@@ -1,0 +1,456 @@
+//! Comment- and string-aware Rust token scanner for the audit pass.
+//!
+//! This is deliberately **not** a full Rust lexer — it is the smallest
+//! token model under which the audit rules cannot be fooled by surface
+//! syntax: comments (line + nested block), every string flavor
+//! (`"…"`, `b"…"`, `c"…"`, raw `r"…"`/`r#"…"#`/`br…`/`cr…`), char
+//! literals vs. lifetimes (`'a'` vs. `'a`), numbers with type suffixes,
+//! raw identifiers (`r#match`) and single-byte punctuation.  Anything a
+//! rule matches on is a real code token, never text inside a string or a
+//! comment — the failure mode that makes grep-based lint scripts lie.
+//!
+//! The scanner is byte-oriented: all token *boundaries* are ASCII, so
+//! multi-byte UTF-8 only ever occurs inside string/comment token bodies
+//! (or as standalone punct bytes, which no rule matches on).
+
+/// Token class. `Comment` tokens are kept (the suppression parser reads
+/// them); rules run on the comment-stripped stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+    Comment,
+}
+
+/// One scanned token with its 1-based source line (the line the token
+/// *starts* on, for multi-line strings and block comments).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    fn new(kind: TokKind, bytes: &[u8], line: u32) -> Self {
+        Self {
+            kind,
+            text: String::from_utf8_lossy(bytes).into_owned(),
+            line,
+        }
+    }
+
+    /// Convenience for the rule matchers.
+    pub fn is(&self, kind: TokKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+#[inline]
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn count_newlines(bytes: &[u8]) -> u32 {
+    bytes.iter().filter(|&&b| b == b'\n').count() as u32
+}
+
+/// Scan past a `"…"` body starting at the opening quote; returns the index
+/// one past the closing quote (or `len` on an unterminated string).
+fn scan_str(src: &[u8], open: usize) -> usize {
+    let mut j = open + 1;
+    while j < src.len() {
+        match src[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    src.len()
+}
+
+/// Scan past a `'…'` char literal starting at the quote (handles escapes
+/// including `\u{…}`); returns the index one past the closing quote.
+fn scan_char(src: &[u8], open: usize) -> usize {
+    let n = src.len();
+    let mut j = open + 1;
+    if j < n && src[j] == b'\\' {
+        j += 2;
+        if j <= n && j >= 1 && matches!(src[j - 1], b'u' | b'U') && j < n && src[j] == b'{' {
+            while j < n && src[j] != b'}' {
+                j += 1;
+            }
+            j += 1;
+        }
+        while j < n && src[j] != b'\'' {
+            j += 1;
+        }
+        return (j + 1).min(n);
+    }
+    while j < n && src[j] != b'\'' {
+        j += 1;
+    }
+    (j + 1).min(n)
+}
+
+/// Find `pattern` in `src[from..]`; returns an absolute index or `None`.
+fn find_from(src: &[u8], from: usize, pattern: &[u8]) -> Option<usize> {
+    if pattern.is_empty() || from > src.len() {
+        return None;
+    }
+    src[from..]
+        .windows(pattern.len())
+        .position(|w| w == pattern)
+        .map(|p| from + p)
+}
+
+/// Tokenize `src`. Never fails: unterminated constructs swallow the rest
+/// of the file as a single token (the audit then sees exactly what rustc
+/// would reject anyway).
+pub fn lex(src: &str) -> Vec<Tok> {
+    let src = src.as_bytes();
+    let n = src.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    while i < n {
+        let c = src[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if src[i..].starts_with(b"//") {
+            let j = find_from(src, i, b"\n").unwrap_or(n);
+            toks.push(Tok::new(TokKind::Comment, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        // nested block comment
+        if src[i..].starts_with(b"/*") {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if src[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if src[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok::new(TokKind::Comment, &src[i..j], start_line));
+            i = j;
+            continue;
+        }
+        // raw strings (r / br / cr with optional hashes), b/c strings,
+        // byte chars and raw idents all start with one of r, b, c.
+        if matches!(c, b'r' | b'b' | b'c') {
+            let rpos = if c == b'r' {
+                Some(i + 1)
+            } else if src[i..].starts_with(b"br") || src[i..].starts_with(b"cr") {
+                Some(i + 2)
+            } else {
+                None
+            };
+            if let Some(rpos) = rpos {
+                let mut h = rpos;
+                while h < n && src[h] == b'#' {
+                    h += 1;
+                }
+                if h < n && src[h] == b'"' {
+                    // raw string: ends at `"` followed by the same number
+                    // of hashes
+                    let mut close = vec![b'"'];
+                    close.extend(std::iter::repeat(b'#').take(h - rpos));
+                    let j = match find_from(src, h + 1, &close) {
+                        Some(p) => p + close.len(),
+                        None => n,
+                    };
+                    let start_line = line;
+                    line += count_newlines(&src[i..j]);
+                    toks.push(Tok::new(TokKind::Str, &src[i..j], start_line));
+                    i = j;
+                    continue;
+                }
+            }
+            if matches!(c, b'b' | b'c') && i + 1 < n && src[i + 1] == b'"' {
+                let j = scan_str(src, i + 1);
+                let start_line = line;
+                line += count_newlines(&src[i..j]);
+                toks.push(Tok::new(TokKind::Str, &src[i..j], start_line));
+                i = j;
+                continue;
+            }
+            if c == b'b' && i + 1 < n && src[i + 1] == b'\'' {
+                let j = scan_char(src, i + 1);
+                toks.push(Tok::new(TokKind::Char, &src[i..j], line));
+                i = j;
+                continue;
+            }
+            if c == b'r'
+                && src[i..].starts_with(b"r#")
+                && i + 2 < n
+                && (src[i + 2].is_ascii_alphabetic() || src[i + 2] == b'_')
+            {
+                // raw identifier r#foo
+                let mut j = i + 2;
+                while j < n && is_ident_byte(src[j]) {
+                    j += 1;
+                }
+                toks.push(Tok::new(TokKind::Ident, &src[i..j], line));
+                i = j;
+                continue;
+            }
+            // plain ident starting with r/b/c — fall through to the ident
+            // arm below.
+        }
+        if c == b'"' {
+            let j = scan_str(src, i);
+            let start_line = line;
+            line += count_newlines(&src[i..j]);
+            toks.push(Tok::new(TokKind::Str, &src[i..j], start_line));
+            i = j;
+            continue;
+        }
+        if c == b'\'' {
+            // disambiguate char literal from lifetime
+            if i + 1 < n && src[i + 1] == b'\\' {
+                let j = scan_char(src, i);
+                toks.push(Tok::new(TokKind::Char, &src[i..j], line));
+                i = j;
+                continue;
+            }
+            if i + 2 < n && src[i + 2] == b'\'' {
+                toks.push(Tok::new(TokKind::Char, &src[i..i + 3], line));
+                i += 3;
+                continue;
+            }
+            // lifetime: `'` + ident chars (possibly empty — stray quote)
+            let mut j = i + 1;
+            while j < n && is_ident_byte(src[j]) {
+                j += 1;
+            }
+            toks.push(Tok::new(TokKind::Lifetime, &src[i..j], line));
+            i = j.max(i + 1);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            if src[i..].starts_with(b"0x") || src[i..].starts_with(b"0b") || src[i..].starts_with(b"0o") {
+                j = i + 2;
+                while j < n && is_ident_byte(src[j]) {
+                    j += 1;
+                }
+            } else {
+                while j < n && (src[j].is_ascii_digit() || src[j] == b'_') {
+                    j += 1;
+                }
+                if j + 1 < n && src[j] == b'.' && src[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < n && (src[j].is_ascii_digit() || src[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                if j < n
+                    && matches!(src[j], b'e' | b'E')
+                    && (j + 1 < n
+                        && (src[j + 1].is_ascii_digit()
+                            || (matches!(src[j + 1], b'+' | b'-')
+                                && j + 2 < n
+                                && src[j + 2].is_ascii_digit())))
+                {
+                    j += 2;
+                    while j < n && src[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                // type suffix (f64, u32, …) glued to the literal
+                while j < n && is_ident_byte(src[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Tok::new(TokKind::Num, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && is_ident_byte(src[j]) {
+                j += 1;
+            }
+            toks.push(Tok::new(TokKind::Ident, &src[i..j], line));
+            i = j;
+            continue;
+        }
+        toks.push(Tok::new(TokKind::Punct, &src[i..i + 1], line));
+        i += 1;
+    }
+    toks
+}
+
+/// The comment-stripped stream the rules run on.
+pub fn code_tokens(toks: &[Tok]) -> Vec<Tok> {
+    toks.iter().filter(|t| t.kind != TokKind::Comment).cloned().collect()
+}
+
+/// Index of the `}` matching the `{` at `i_open` (token indices).
+pub fn match_brace(toks: &[Tok], i_open: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(i_open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Index of the `(` matching the `)` at `i_close`, scanning backwards.
+pub fn match_paren_back(toks: &[Tok], i_close: usize) -> usize {
+    let mut depth = 0i64;
+    for k in (0..=i_close).rev() {
+        if toks[k].kind == TokKind::Punct {
+            match toks[k].text.as_str() {
+                ")" => depth += 1,
+                "(" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    0
+}
+
+/// Index of the `)` matching the `(` at `i_open`.
+pub fn match_paren_fwd(toks: &[Tok], i_open: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(i_open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return k;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn line_and_block_comments_are_single_tokens() {
+        let ts = kinds("a // unwrap() here\nb /* x /* nested */ still comment */ c");
+        let idents: Vec<_> = ts.iter().filter(|(k, _)| *k == TokKind::Ident).collect();
+        assert_eq!(idents.len(), 3);
+        let comments: Vec<_> = ts.iter().filter(|(k, _)| *k == TokKind::Comment).collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[1].1.contains("nested"));
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        let ts = kinds(r####"let x = r#"Instant::now() . "quoted" "#; y"####);
+        let strs: Vec<_> = ts.iter().filter(|(k, _)| *k == TokKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].1.contains("Instant::now"));
+        // the ident stream must NOT contain Instant
+        assert!(!ts
+            .iter()
+            .any(|(k, t)| *k == TokKind::Ident && t == "Instant"));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "y"));
+    }
+
+    #[test]
+    fn byte_and_c_strings() {
+        let ts = kinds(r#"let a = b"bytes"; let b2 = c"cstr"; let c2 = br"raw";"#);
+        let strs: Vec<_> = ts.iter().filter(|(k, _)| *k == TokKind::Str).collect();
+        assert_eq!(strs.len(), 3);
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let ts = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let esc = '\\n'; }");
+        assert_eq!(
+            ts.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(),
+            2
+        );
+        assert_eq!(ts.iter().filter(|(k, _)| *k == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_floats() {
+        let ts = kinds("let a = 1_000f64; let b = 0.95; let c = 1e-9; let d = 0xFFu32;");
+        let nums: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1_000f64", "0.95", "1e-9", "0xFFu32"]);
+    }
+
+    #[test]
+    fn raw_ident_is_one_token() {
+        let ts = kinds("let r#match = 1;");
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "r#match"));
+    }
+
+    #[test]
+    fn multiline_string_line_numbers() {
+        let toks = lex("let a = \"x\ny\";\nlet b = 1;");
+        let b = toks.iter().find(|t| t.is(TokKind::Ident, "b")).unwrap();
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn paren_and_brace_matching() {
+        let toks = code_tokens(&lex("f(a, (b), c) { { } }"));
+        let open = toks.iter().position(|t| t.is(TokKind::Punct, "(")).unwrap();
+        let close = match_paren_fwd(&toks, open);
+        assert!(toks[close].is(TokKind::Punct, ")"));
+        assert_eq!(match_paren_back(&toks, close), open);
+        let brace = toks.iter().position(|t| t.is(TokKind::Punct, "{")).unwrap();
+        let end = match_brace(&toks, brace);
+        assert_eq!(end, toks.len() - 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! `jdob-audit` — a dependency-free, offline static-analysis pass that
+//! mechanizes the crate's safety invariants (see `src/analysis/README.md`
+//! for the rule catalog).
+//!
+//! Invariants this crate has shipped hand-fixes for — NaN-safe
+//! comparisons, a panic-free serving path, virtual-time-only chaos code,
+//! unit-suffixed physics quantities, guarded float→int casts — used to be
+//! protected by nothing but reviewer memory.  This module walks the
+//! source like a reviewer would: a comment/string-aware lexer
+//! ([`lexer`]), token-pattern rules ([`rules`]), explicit auditable
+//! suppression ([`suppress`]) and a canonical report ([`report`]).
+//!
+//! Three entry points run the same pass:
+//! * `cargo run --bin jdob-audit` — CLI, human text or `--json`;
+//! * `cargo test -q --test static_audit` — the tier-1 gate asserting zero
+//!   unsuppressed findings;
+//! * CI — uploads the JSON report as the `audit-report` artifact on
+//!   failure.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod suppress;
+pub mod walk;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use lexer::{code_tokens, lex};
+use report::AuditReport;
+use rules::{cfg_test_lines, rule_lossy_cast, rule_nan_cmp, rule_panic_free, rule_unit_suffix, rule_virtual_time, Diagnostic};
+use suppress::{apply_inline, parse_allows, Baseline};
+
+/// Per-rule file scopes.  Entries ending in `/` match as directory
+/// prefixes, anything else must match the relative path exactly (always
+/// `/`-separated, relative to the crate root).
+#[derive(Debug, Clone)]
+pub struct AuditConfig {
+    /// R2 `panic-free-serving` applies to exactly these files.
+    pub hot_path: Vec<String>,
+    /// R3 `virtual-time` applies everywhere EXCEPT these modules.
+    pub sanctioned_wall: Vec<String>,
+    /// R4 `unit-suffix` applies to these files/dirs.
+    pub unit_scope: Vec<String>,
+    /// R5 `lossy-cast` applies to these files/dirs.
+    pub lossy_scope: Vec<String>,
+}
+
+fn in_scope(scope: &[String], rel: &str) -> bool {
+    scope.iter().any(|s| {
+        if let Some(prefix) = s.strip_suffix('/') {
+            rel.starts_with(prefix) && rel[prefix.len()..].starts_with('/')
+        } else {
+            rel == s
+        }
+    })
+}
+
+impl AuditConfig {
+    /// The scopes this crate is audited under (ISSUE 10): the serving hot
+    /// path must be panic-free, only the clock/benchkit/profiler modules
+    /// may read wall time, the physics-bearing modules must unit-suffix
+    /// their `pub f64` surface, and planner/trace/bench code must justify
+    /// float→int casts.
+    pub fn crate_default() -> Self {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        Self {
+            hot_path: s(&[
+                "src/coordinator/engine.rs",
+                "src/coordinator/server.rs",
+                "src/sched/scheduler.rs",
+                "src/sched/pipeline.rs",
+                "src/runtime/sim.rs",
+            ]),
+            sanctioned_wall: s(&[
+                "src/sched/clock.rs",
+                "src/util/benchkit.rs",
+                "src/runtime/profiler.rs",
+            ]),
+            unit_scope: s(&["src/algo/types.rs", "src/energy/", "src/config/"]),
+            lossy_scope: s(&["src/algo/", "src/coordinator/trace.rs", "src/util/benchkit.rs"]),
+        }
+    }
+}
+
+/// Analyze one file's source text.  Returns (unsuppressed, suppressed)
+/// after inline-allow filtering; baseline filtering happens in
+/// [`run_audit`] because the baseline is repo-global.
+pub fn analyze_source(
+    cfg: &AuditConfig,
+    rel: &str,
+    src: &str,
+) -> (Vec<Diagnostic>, Vec<Diagnostic>) {
+    let toks = lex(src);
+    let ct = code_tokens(&toks);
+    let skip = cfg_test_lines(&ct);
+    let mut raw = Vec::new();
+
+    rule_nan_cmp(&ct, &mut raw, rel);
+    if in_scope(&cfg.hot_path, rel) {
+        rule_panic_free(&ct, &mut raw, rel, &skip);
+    }
+    if !in_scope(&cfg.sanctioned_wall, rel) {
+        rule_virtual_time(&ct, &mut raw, rel);
+    }
+    if in_scope(&cfg.unit_scope, rel) {
+        rule_unit_suffix(&ct, &mut raw, rel, &skip);
+    }
+    if in_scope(&cfg.lossy_scope, rel) {
+        rule_lossy_cast(&ct, &mut raw, rel, &skip);
+    }
+
+    let allows = parse_allows(&toks);
+    apply_inline(rel, raw, &allows)
+}
+
+/// Run the full audit over a crate root: walk `src`/`tests`/`benches`,
+/// apply inline allows per file and the baseline globally, and return the
+/// sorted report.
+pub fn run_audit(root: &Path, cfg: &AuditConfig, baseline: &Baseline) -> io::Result<AuditReport> {
+    let files = walk::collect_sources(root)?;
+    let mut unsuppressed = Vec::new();
+    let mut suppressed = Vec::new();
+    for (rel, path) in &files {
+        let src = fs::read_to_string(path)?;
+        let (uns, sup) = analyze_source(cfg, rel, &src);
+        unsuppressed.extend(uns);
+        suppressed.extend(sup);
+    }
+    let mut unsuppressed = baseline.apply(unsuppressed, &mut suppressed);
+    unsuppressed.sort();
+    suppressed.sort();
+    Ok(AuditReport {
+        unsuppressed,
+        suppressed,
+        files_scanned: files.len(),
+    })
+}
+
+/// Load the baseline next to the crate root; a missing file is an empty
+/// baseline (the shipped `audit.toml` documents the format).
+pub fn load_baseline(root: &Path) -> Result<Baseline, String> {
+    let path = root.join("audit.toml");
+    match fs::read_to_string(&path) {
+        Ok(text) => Baseline::parse(&text),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Baseline::default()),
+        Err(e) => Err(format!("reading {}: {e}", path.display())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_prefix_and_exact_matching() {
+        let scope = vec!["src/energy/".to_string(), "src/algo/types.rs".to_string()];
+        assert!(in_scope(&scope, "src/energy/device.rs"));
+        assert!(in_scope(&scope, "src/energy/sub/deep.rs"));
+        assert!(in_scope(&scope, "src/algo/types.rs"));
+        assert!(!in_scope(&scope, "src/energy.rs"));
+        assert!(!in_scope(&scope, "src/algo/closed_form.rs"));
+    }
+
+    #[test]
+    fn analyze_source_applies_scopes() {
+        let cfg = AuditConfig::crate_default();
+        // unwrap in a non-hot-path file: no finding
+        let (uns, _) = analyze_source(&cfg, "src/algo/jdob.rs", "fn f() { x.unwrap(); }");
+        assert!(uns.is_empty());
+        // same code in the hot path: flagged
+        let (uns, _) =
+            analyze_source(&cfg, "src/sched/scheduler.rs", "fn f() { x.unwrap(); }");
+        assert_eq!(uns.len(), 1);
+        assert_eq!(uns[0].rule, "panic-free-serving");
+    }
+}

@@ -1,0 +1,107 @@
+//! Report rendering: human `file:line: [rule] message` text and the
+//! canonical JSON document CI uploads as the `audit-report` artifact.
+
+use crate::analysis::rules::Diagnostic;
+use crate::util::json::Json;
+
+/// Outcome of one audit run over a crate root.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    /// Findings that fail the run, sorted (file, line, rule, message).
+    pub unsuppressed: Vec<Diagnostic>,
+    /// Findings covered by an inline allow or a baseline entry.
+    pub suppressed: Vec<Diagnostic>,
+    /// Number of files scanned.
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed.is_empty()
+    }
+
+    /// Human-readable report (stable ordering, one finding per line).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "jdob-audit: {} file(s), {} finding(s), {} suppressed\n",
+            self.files_scanned,
+            self.unsuppressed.len(),
+            self.suppressed.len()
+        ));
+        for d in &self.unsuppressed {
+            s.push_str(&d.render());
+            s.push('\n');
+        }
+        if !self.unsuppressed.is_empty() {
+            s.push_str(
+                "fix the finding, or suppress with `// audit:allow(<rule>) <reason>` \
+                 (see src/analysis/README.md)\n",
+            );
+        }
+        s
+    }
+
+    /// Canonical JSON: sorted findings, suppressed included for audit
+    /// trails, schema documented in src/analysis/README.md.
+    pub fn to_json(&self) -> Json {
+        fn diags(list: &[Diagnostic]) -> Json {
+            Json::Arr(
+                list.iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("file", Json::Str(d.file.clone())),
+                            ("line", Json::Num(d.line as f64)),
+                            ("rule", Json::Str(d.rule.clone())),
+                            ("message", Json::Str(d.message.clone())),
+                        ])
+                    })
+                    .collect(),
+            )
+        }
+        Json::obj(vec![
+            ("tool", Json::Str("jdob-audit".into())),
+            ("schema_version", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+            ("findings", diags(&self.unsuppressed)),
+            ("suppressed", diags(&self.suppressed)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_roundtrips() {
+        let report = AuditReport {
+            unsuppressed: vec![Diagnostic {
+                file: "src/a.rs".into(),
+                line: 7,
+                rule: "nan-cmp".into(),
+                message: "m".into(),
+            }],
+            suppressed: Vec::new(),
+            files_scanned: 3,
+        };
+        let text = report.to_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("clean").unwrap(), &Json::Bool(false));
+        assert_eq!(back.get("files_scanned").unwrap().as_usize().unwrap(), 3);
+        let findings = back.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].get("line").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(findings[0].get("rule").unwrap().as_str().unwrap(), "nan-cmp");
+    }
+
+    #[test]
+    fn text_mentions_suppression_hint_only_when_dirty() {
+        let clean = AuditReport {
+            files_scanned: 1,
+            ..Default::default()
+        };
+        assert!(!clean.render_text().contains("audit:allow"));
+    }
+}

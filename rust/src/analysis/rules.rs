@@ -1,0 +1,457 @@
+//! The audit rules, each a pure function from a comment-stripped token
+//! stream to diagnostics.  Grounded in failure classes this crate has
+//! actually shipped fixes for — see `src/analysis/README.md` for the
+//! catalog with examples and suppression guidance.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::lexer::{match_brace, match_paren_back, match_paren_fwd, Tok, TokKind};
+
+/// Every rule id, in catalog order.  `allow-syntax`, `stale-allow` and
+/// `stale-baseline` are meta-diagnostics of the suppression machinery, not
+/// listed here.
+pub const RULES: [&str; 5] = [
+    "nan-cmp",
+    "panic-free-serving",
+    "virtual-time",
+    "unit-suffix",
+    "lossy-cast",
+];
+
+/// Unit suffixes rule `unit-suffix` recognizes on `pub f64` names.
+/// `_db` (decibels) rides along with the SI-ish set: `snr_db` is the
+/// paper's Table I symbol and renaming it would hurt, not help.
+pub const FLOAT_SUFFIXES: [&str; 8] = ["_s", "_j", "_hz", "_bps", "_w", "_ratio", "_abs", "_db"];
+
+const INT_TYPES: [&str; 12] = [
+    "usize", "isize", "u8", "u16", "u32", "u64", "u128", "i8", "i16", "i32", "i64", "i128",
+];
+
+/// Float-only method names used by `lossy-cast` to recognize an f64-valued
+/// group before an `as <int>` cast.  Deliberately excludes `min`/`max`/
+/// `clamp`/`abs`/`signum`, which exist on integers too.
+const FLOAT_METHODS: [&str; 21] = [
+    "floor", "ceil", "round", "trunc", "fract", "sqrt", "cbrt", "powf", "powi", "exp", "exp2",
+    "ln", "log", "log2", "log10", "hypot", "recip", "to_degrees", "to_radians", "mul_add",
+    "rem_euclid",
+];
+
+/// One finding, before suppression is applied.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn has_suffix(name: &str) -> bool {
+    FLOAT_SUFFIXES.iter().any(|s| name.ends_with(s))
+}
+
+fn is_float_lit(s: &str) -> bool {
+    if s.starts_with("0x") || s.starts_with("0b") || s.starts_with("0o") {
+        return false;
+    }
+    if s.ends_with("f64") || s.ends_with("f32") {
+        return true;
+    }
+    const INT_SUFFIXES: [&str; 12] = [
+        "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+    ];
+    if INT_SUFFIXES.iter().any(|suf| s.ends_with(suf)) {
+        return false;
+    }
+    s.contains('.') || s.contains('e') || s.contains('E')
+}
+
+/// Lines covered by `#[cfg(test)]`-attributed items (token stream must be
+/// comment-stripped).  Rules that audit *production* invariants skip these
+/// lines; `nan-cmp` and `virtual-time` deliberately do not.
+pub fn cfg_test_lines(toks: &[Tok]) -> BTreeSet<u32> {
+    let mut lines = BTreeSet::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let is_cfg_test = toks[i].is(TokKind::Punct, "#")
+            && i + 6 < n
+            && toks[i + 1].is(TokKind::Punct, "[")
+            && toks[i + 2].is(TokKind::Ident, "cfg")
+            && toks[i + 3].is(TokKind::Punct, "(")
+            && toks[i + 4].is(TokKind::Ident, "test")
+            && toks[i + 5].is(TokKind::Punct, ")")
+            && toks[i + 6].is(TokKind::Punct, "]");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        // skip this and any further #[…] attributes on the same item
+        let mut j = i + 7;
+        while j < n && toks[j].is(TokKind::Punct, "#") {
+            if j + 1 < n && toks[j + 1].is(TokKind::Punct, "[") {
+                let mut depth = 0i64;
+                let mut advanced = false;
+                for k in j + 1..n {
+                    if toks[k].is(TokKind::Punct, "[") {
+                        depth += 1;
+                    } else if toks[k].is(TokKind::Punct, "]") {
+                        depth -= 1;
+                        if depth == 0 {
+                            j = k + 1;
+                            advanced = true;
+                            break;
+                        }
+                    }
+                }
+                if !advanced {
+                    j = n;
+                }
+            } else {
+                break;
+            }
+        }
+        // the attributed item ends at its matching brace (fn/mod body) or
+        // at a `;` (e.g. `#[cfg(test)] use …;`)
+        let mut k = j;
+        while k < n && !(toks[k].kind == TokKind::Punct && (toks[k].text == "{" || toks[k].text == ";")) {
+            k += 1;
+        }
+        let end_line = if k < n && toks[k].text == "{" {
+            toks[match_brace(toks, k)].line
+        } else if k < n {
+            toks[k].line
+        } else {
+            toks[n - 1].line
+        };
+        for l in start_line..=end_line {
+            lines.insert(l);
+        }
+        i = j;
+    }
+    lines
+}
+
+/// R1 `nan-cmp`: `partial_cmp(..).unwrap()` / `.expect(..)` panics the
+/// moment a NaN reaches a sort key.  Applies everywhere, tests included.
+pub fn rule_nan_cmp(toks: &[Tok], out: &mut Vec<Diagnostic>, file: &str) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.is(TokKind::Ident, "partial_cmp")
+            && i > 0
+            && toks[i - 1].is(TokKind::Punct, ".")
+            && i + 1 < toks.len()
+            && toks[i + 1].is(TokKind::Punct, "(")
+        {
+            let close = match_paren_fwd(toks, i + 1);
+            if close + 2 < toks.len()
+                && toks[close + 1].is(TokKind::Punct, ".")
+                && toks[close + 2].kind == TokKind::Ident
+                && (toks[close + 2].text == "unwrap" || toks[close + 2].text == "expect")
+            {
+                out.push(Diagnostic {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "nan-cmp".into(),
+                    message: format!(
+                        "`partial_cmp(..).{}(..)` panics on NaN; use `total_cmp`",
+                        toks[close + 2].text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R2 `panic-free-serving`: no `unwrap`/`expect`/`panic!`/`todo!`/
+/// `unimplemented!` in the serving hot path (non-test code only).
+pub fn rule_panic_free(toks: &[Tok], out: &mut Vec<Diagnostic>, file: &str, skip: &BTreeSet<u32>) {
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if skip.contains(&t.line) || t.kind != TokKind::Ident {
+            continue;
+        }
+        if (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && toks[i - 1].is(TokKind::Punct, ".")
+            && i + 1 < n
+            && toks[i + 1].is(TokKind::Punct, "(")
+        {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: t.line,
+                rule: "panic-free-serving".into(),
+                message: format!("`.{}()` in the serving hot path", t.text),
+            });
+        } else if matches!(t.text.as_str(), "panic" | "todo" | "unimplemented")
+            && i + 1 < n
+            && toks[i + 1].is(TokKind::Punct, "!")
+        {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: t.line,
+                rule: "panic-free-serving".into(),
+                message: format!("`{}!` in the serving hot path", t.text),
+            });
+        }
+    }
+}
+
+/// R3 `virtual-time`: `Instant::now()` / `SystemTime::now()` outside the
+/// sanctioned wall-clock modules.  Applies everywhere, tests included —
+/// chaos/netchaos tests asserting virtual-time determinism must not
+/// accidentally read real time either.
+pub fn rule_virtual_time(toks: &[Tok], out: &mut Vec<Diagnostic>, file: &str) {
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && i + 4 < n
+            && toks[i + 1].is(TokKind::Punct, ":")
+            && toks[i + 2].is(TokKind::Punct, ":")
+            && toks[i + 3].is(TokKind::Ident, "now")
+            && toks[i + 4].is(TokKind::Punct, "(")
+        {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: t.line,
+                rule: "virtual-time".into(),
+                message: format!("`{}::now()` outside the sanctioned wall-clock modules", t.text),
+            });
+        }
+    }
+}
+
+/// R4 `unit-suffix`: every `pub` f64 *field* (`pub name: f64,`) and f64
+/// *accessor* (`pub fn name(&self …) -> f64`) in the unit-bearing modules
+/// must end in a recognized unit suffix.  Trait method declarations carry
+/// no `pub` and are exempt by construction; associated fns without a
+/// `self` receiver are exempt (they are constructors, not accessors).
+pub fn rule_unit_suffix(toks: &[Tok], out: &mut Vec<Diagnostic>, file: &str, skip: &BTreeSet<u32>) {
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if skip.contains(&t.line) || !t.is(TokKind::Ident, "pub") {
+            continue;
+        }
+        let mut j = i + 1;
+        // pub(crate) / pub(in …)
+        if j < n && toks[j].is(TokKind::Punct, "(") {
+            j = match_paren_fwd(toks, j) + 1;
+        }
+        if j >= n {
+            continue;
+        }
+        if toks[j].is(TokKind::Ident, "fn") {
+            if !(j + 2 < n && toks[j + 1].kind == TokKind::Ident && toks[j + 2].is(TokKind::Punct, "("))
+            {
+                continue;
+            }
+            let name = &toks[j + 1].text;
+            // must take self (an accessor, not a constructor)
+            let inner = j + 3;
+            let mut recv = false;
+            if inner < n {
+                if toks[inner].is(TokKind::Punct, "&") {
+                    let mut m = inner + 1;
+                    if m < n && toks[m].kind == TokKind::Lifetime {
+                        m += 1;
+                    }
+                    if m < n && toks[m].is(TokKind::Ident, "mut") {
+                        m += 1;
+                    }
+                    if m < n && toks[m].is(TokKind::Ident, "self") {
+                        recv = true;
+                    }
+                } else if toks[inner].is(TokKind::Ident, "self") {
+                    recv = true;
+                }
+            }
+            if !recv {
+                continue;
+            }
+            let close = match_paren_fwd(toks, j + 2);
+            let returns_f64 = close + 3 < n
+                && toks[close + 1].is(TokKind::Punct, "-")
+                && toks[close + 2].is(TokKind::Punct, ">")
+                && toks[close + 3].is(TokKind::Ident, "f64")
+                && close + 4 < n
+                && (toks[close + 4].is(TokKind::Punct, "{")
+                    || toks[close + 4].is(TokKind::Ident, "where")
+                    || toks[close + 4].is(TokKind::Punct, ";"));
+            if returns_f64 && !has_suffix(name) {
+                out.push(Diagnostic {
+                    file: file.to_string(),
+                    line: toks[j + 1].line,
+                    rule: "unit-suffix".into(),
+                    message: format!("pub f64 accessor `{name}` lacks a unit suffix"),
+                });
+            }
+        } else if toks[j].kind == TokKind::Ident
+            && j + 3 < n
+            && toks[j + 1].is(TokKind::Punct, ":")
+            && toks[j + 2].is(TokKind::Ident, "f64")
+            && (toks[j + 3].is(TokKind::Punct, ",") || toks[j + 3].is(TokKind::Punct, "}"))
+        {
+            // `pub name: f64,` — the `,`/`}` follower excludes consts
+            // (`pub const X: f64 = …`) and function params.
+            let name = &toks[j].text;
+            if !has_suffix(name) {
+                out.push(Diagnostic {
+                    file: file.to_string(),
+                    line: toks[j].line,
+                    rule: "unit-suffix".into(),
+                    message: format!("pub f64 field `{name}` lacks a unit suffix"),
+                });
+            }
+        }
+    }
+}
+
+fn group_has_float(toks: &[Tok], i_open: usize, i_close: usize) -> bool {
+    for k in i_open + 1..i_close {
+        let t = &toks[k];
+        if t.kind == TokKind::Num && is_float_lit(&t.text) {
+            return true;
+        }
+        if t.is(TokKind::Ident, "as")
+            && k + 1 < i_close
+            && (toks[k + 1].is(TokKind::Ident, "f64") || toks[k + 1].is(TokKind::Ident, "f32"))
+        {
+            return true;
+        }
+        if t.kind == TokKind::Ident
+            && FLOAT_METHODS.contains(&t.text.as_str())
+            && k > 0
+            && toks[k - 1].is(TokKind::Punct, ".")
+            && k + 1 < i_close
+            && toks[k + 1].is(TokKind::Punct, "(")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// R5 `lossy-cast`: `<float-ish> as <int>` saturates NaN to 0 silently —
+/// exactly the `render_gantt` bug class.  Heuristic (no type inference):
+/// the cast source is a float literal, an ident with a recognized float
+/// unit suffix, or a parenthesized group that ends in a float-only method
+/// call or visibly computes in floats.
+pub fn rule_lossy_cast(toks: &[Tok], out: &mut Vec<Diagnostic>, file: &str, skip: &BTreeSet<u32>) {
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if skip.contains(&t.line) || !t.is(TokKind::Ident, "as") {
+            continue;
+        }
+        if i + 1 >= n
+            || toks[i + 1].kind != TokKind::Ident
+            || !INT_TYPES.contains(&toks[i + 1].text.as_str())
+        {
+            continue;
+        }
+        if i == 0 {
+            continue;
+        }
+        let p = &toks[i - 1];
+        let hit = if p.kind == TokKind::Num && is_float_lit(&p.text) {
+            true
+        } else if p.kind == TokKind::Ident && has_suffix(&p.text) {
+            true
+        } else if p.is(TokKind::Punct, ")") {
+            let open = match_paren_back(toks, i - 1);
+            let tail_is_float_method = open > 1
+                && toks[open - 1].kind == TokKind::Ident
+                && FLOAT_METHODS.contains(&toks[open - 1].text.as_str())
+                && toks[open - 2].is(TokKind::Punct, ".");
+            tail_is_float_method || group_has_float(toks, open, i - 1)
+        } else {
+            false
+        };
+        if hit {
+            out.push(Diagnostic {
+                file: file.to_string(),
+                line: t.line,
+                rule: "lossy-cast".into(),
+                message: format!(
+                    "possible f64 -> {} `as` cast (NaN saturates silently); annotate or use a checked conversion",
+                    toks[i + 1].text
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{code_tokens, lex};
+
+    fn run<F: Fn(&[Tok], &mut Vec<Diagnostic>)>(src: &str, f: F) -> Vec<Diagnostic> {
+        let toks = code_tokens(&lex(src));
+        let mut out = Vec::new();
+        f(&toks, &mut out);
+        out
+    }
+
+    #[test]
+    fn nan_cmp_hits_unwrap_and_expect_but_not_total_cmp() {
+        let d = run(
+            "a.partial_cmp(&b).unwrap(); c.partial_cmp(&d).expect(\"x\"); e.total_cmp(&f);",
+            |t, o| rule_nan_cmp(t, o, "x.rs"),
+        );
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn panic_free_skips_cfg_test_lines() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod t { fn b() { y.unwrap(); panic!(); } }";
+        let toks = code_tokens(&lex(src));
+        let skip = cfg_test_lines(&toks);
+        let mut out = Vec::new();
+        rule_panic_free(&toks, &mut out, "x.rs", &skip);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn virtual_time_ignores_comments_and_strings() {
+        let d = run(
+            "// Instant::now() in prose\nlet s = \"SystemTime::now()\";\nlet t = Instant::now();",
+            |t, o| rule_virtual_time(t, o, "x.rs"),
+        );
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn unit_suffix_field_and_accessor() {
+        let src = "pub struct S { pub latency: f64, pub latency_s: f64, pub n: usize }\n\
+                   impl S { pub fn energy(&self) -> f64 { 0.0 } pub fn energy_j(&self) -> f64 { 0.0 }\n\
+                   pub fn make() -> f64 { 0.0 } }";
+        let d = run(src, |t, o| rule_unit_suffix(t, o, "x.rs", &BTreeSet::new()));
+        let names: Vec<_> = d.iter().map(|x| x.message.clone()).collect();
+        assert_eq!(d.len(), 2, "{names:?}");
+        assert!(names[0].contains("`latency`"));
+        assert!(names[1].contains("`energy`"));
+    }
+
+    #[test]
+    fn unit_suffix_exempts_consts_and_trait_decls() {
+        let src = "pub const X: f64 = 1.0;\ntrait T { fn f(&self) -> f64; }";
+        let d = run(src, |t, o| rule_unit_suffix(t, o, "x.rs", &BTreeSet::new()));
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn lossy_cast_flags_float_sources_only() {
+        let src = "let a = 0.95 as usize;\nlet b = x_s as usize;\nlet c = (y * 0.5).floor() as usize;\nlet d = n as usize;\nlet e = (n + 1) as u32;";
+        let d = run(src, |t, o| rule_lossy_cast(t, o, "x.rs", &BTreeSet::new()));
+        let lines: Vec<u32> = d.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![1, 2, 3], "{d:?}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Suppression machinery: inline `audit:allow` comments (rule list in
+//! parens, then a mandatory reason) and the `rust/audit.toml` baseline.  Both are ratcheted — an allow that
+//! no longer suppresses anything, or a baseline entry counting more
+//! findings than exist, becomes a diagnostic itself, so debt can only
+//! shrink.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::lexer::{Tok, TokKind};
+use crate::analysis::rules::Diagnostic;
+use crate::util::toml_lite::{self, TomlValue};
+
+/// One parsed inline allow.  Covers findings on its own line and on the
+/// line immediately below (so it can sit above the offending expression).
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub has_reason: bool,
+}
+
+/// Scan the **unstripped** token stream for `audit:allow` comments.
+/// Malformed allows (no closing paren, empty rule list, missing reason)
+/// surface as `allow-syntax` diagnostics from [`apply_inline`].
+pub fn parse_allows(toks: &[Tok]) -> Vec<Allow> {
+    const NEEDLE: &str = "audit:allow(";
+    let mut allows = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        let Some(pos) = t.text.find(NEEDLE) else {
+            continue;
+        };
+        let rest = &t.text[pos + NEEDLE.len()..];
+        let Some(close) = rest.find(')') else {
+            allows.push(Allow {
+                line: t.line,
+                rules: Vec::new(),
+                has_reason: false,
+            });
+            continue;
+        };
+        let rules: Vec<String> = rest[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let reason = rest[close + 1..].trim().trim_end_matches("*/").trim();
+        allows.push(Allow {
+            line: t.line,
+            rules,
+            has_reason: !reason.is_empty(),
+        });
+    }
+    allows
+}
+
+/// Split raw findings into (unsuppressed, suppressed) using the file's
+/// inline allows, and append the suppression machinery's own diagnostics
+/// (`allow-syntax` for malformed allows, `stale-allow` for allows that
+/// matched nothing) to the unsuppressed side.
+pub fn apply_inline(
+    file: &str,
+    raw: Vec<Diagnostic>,
+    allows: &[Allow],
+) -> (Vec<Diagnostic>, Vec<Diagnostic>) {
+    let mut unsuppressed = Vec::new();
+    let mut suppressed = Vec::new();
+    let mut used = vec![false; allows.len()];
+
+    for d in raw {
+        let matched = allows.iter().enumerate().find(|(_, a)| {
+            a.rules.iter().any(|r| r == &d.rule) && (d.line == a.line || d.line == a.line + 1)
+        });
+        match matched {
+            Some((ai, a)) => {
+                if !a.has_reason {
+                    unsuppressed.push(Diagnostic {
+                        file: file.to_string(),
+                        line: a.line,
+                        rule: "allow-syntax".into(),
+                        message: "audit:allow without a reason".into(),
+                    });
+                }
+                used[ai] = true;
+                suppressed.push(d);
+            }
+            None => unsuppressed.push(d),
+        }
+    }
+    for (ai, a) in allows.iter().enumerate() {
+        if a.rules.is_empty() {
+            unsuppressed.push(Diagnostic {
+                file: file.to_string(),
+                line: a.line,
+                rule: "allow-syntax".into(),
+                message: "malformed audit:allow (empty or unclosed rule list)".into(),
+            });
+        } else if !used[ai] {
+            unsuppressed.push(Diagnostic {
+                file: file.to_string(),
+                line: a.line,
+                rule: "stale-allow".into(),
+                message: format!("allow({}) suppresses nothing", a.rules.join(",")),
+            });
+        }
+    }
+    (unsuppressed, suppressed)
+}
+
+/// The `audit.toml` baseline: `<rule>@<relpath> = <count>` entries
+/// granting a file a fixed budget of findings for one rule.  Parsed with
+/// the crate's own `toml_lite`.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    /// (rule, file) -> allowed count.
+    entries: BTreeMap<(String, String), usize>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let map = toml_lite::parse(text).map_err(|e| format!("audit baseline: {e}"))?;
+        let mut entries = BTreeMap::new();
+        for (key, val) in map {
+            let Some((rule, file)) = key.split_once('@') else {
+                return Err(format!("audit baseline: key {key:?} is not <rule>@<path>"));
+            };
+            let TomlValue::Num(n) = val else {
+                return Err(format!("audit baseline: {key:?} must be an integer count"));
+            };
+            if n.fract() != 0.0 || n < 0.0 {
+                return Err(format!("audit baseline: {key:?} must be a non-negative integer"));
+            }
+            entries.insert((rule.trim().to_string(), file.trim().to_string()), n as usize);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Apply the baseline to the remaining unsuppressed findings.  A
+    /// (rule, file) group with `count <= budget` is suppressed wholesale;
+    /// a budget that exceeds the actual count adds a `stale-baseline`
+    /// diagnostic (the ratchet: shrink the entry when you fix a finding).
+    /// A group over budget stays fully unsuppressed — partial credit
+    /// would make the report depend on finding order.
+    pub fn apply(
+        &self,
+        unsuppressed: Vec<Diagnostic>,
+        suppressed: &mut Vec<Diagnostic>,
+    ) -> Vec<Diagnostic> {
+        let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+        for d in &unsuppressed {
+            *counts.entry((d.rule.clone(), d.file.clone())).or_insert(0) += 1;
+        }
+        let mut out = Vec::new();
+        for d in unsuppressed {
+            let key = (d.rule.clone(), d.file.clone());
+            let budget = self.entries.get(&key).copied().unwrap_or(0);
+            let count = counts.get(&key).copied().unwrap_or(0);
+            if budget >= count && budget > 0 {
+                suppressed.push(d);
+            } else {
+                out.push(d);
+            }
+        }
+        for ((rule, file), budget) in &self.entries {
+            let count = counts.get(&(rule.clone(), file.clone())).copied().unwrap_or(0);
+            if *budget > count {
+                out.push(Diagnostic {
+                    file: file.clone(),
+                    line: 0,
+                    rule: "stale-baseline".into(),
+                    message: format!(
+                        "baseline grants {budget} `{rule}` finding(s) but only {count} exist; shrink the entry"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn diag(file: &str, line: u32, rule: &str) -> Diagnostic {
+        Diagnostic {
+            file: file.into(),
+            line,
+            rule: rule.into(),
+            message: "m".into(),
+        }
+    }
+
+    #[test]
+    fn allow_covers_own_and_next_line() {
+        let toks = lex("// audit:allow(lossy-cast) guarded above\nlet a = 0.5 as usize;");
+        let allows = parse_allows(&toks);
+        assert_eq!(allows.len(), 1);
+        let (uns, sup) = apply_inline("f.rs", vec![diag("f.rs", 2, "lossy-cast")], &allows);
+        assert!(uns.is_empty(), "{uns:?}");
+        assert_eq!(sup.len(), 1);
+    }
+
+    #[test]
+    fn allow_without_reason_is_flagged() {
+        let toks = lex("let a = 0.5 as usize; // audit:allow(lossy-cast)");
+        let allows = parse_allows(&toks);
+        let (uns, sup) = apply_inline("f.rs", vec![diag("f.rs", 1, "lossy-cast")], &allows);
+        assert_eq!(sup.len(), 1);
+        assert_eq!(uns.len(), 1);
+        assert_eq!(uns[0].rule, "allow-syntax");
+    }
+
+    #[test]
+    fn stale_allow_is_flagged() {
+        let toks = lex("// audit:allow(nan-cmp) nothing here anymore\nlet a = 1;");
+        let allows = parse_allows(&toks);
+        let (uns, _) = apply_inline("f.rs", Vec::new(), &allows);
+        assert_eq!(uns.len(), 1);
+        assert_eq!(uns[0].rule, "stale-allow");
+    }
+
+    #[test]
+    fn wrong_rule_does_not_suppress() {
+        let toks = lex("// audit:allow(nan-cmp) wrong rule\nlet a = 0.5 as usize;");
+        let allows = parse_allows(&toks);
+        let (uns, sup) = apply_inline("f.rs", vec![diag("f.rs", 2, "lossy-cast")], &allows);
+        assert_eq!(sup.len(), 0);
+        // the lossy-cast finding survives AND the allow is stale
+        assert_eq!(uns.len(), 2);
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_stale_detection() {
+        let b = Baseline::parse("lossy-cast@src/a.rs = 2\nnan-cmp@src/b.rs = 1\n").unwrap();
+        let mut sup = Vec::new();
+        let uns = b.apply(
+            vec![
+                diag("src/a.rs", 3, "lossy-cast"),
+                diag("src/a.rs", 9, "lossy-cast"),
+            ],
+            &mut sup,
+        );
+        assert_eq!(sup.len(), 2);
+        // nan-cmp budget is unused -> stale-baseline
+        assert_eq!(uns.len(), 1);
+        assert_eq!(uns[0].rule, "stale-baseline");
+        assert!(uns[0].message.contains("only 0 exist"));
+    }
+
+    #[test]
+    fn baseline_over_budget_stays_unsuppressed() {
+        let b = Baseline::parse("lossy-cast@src/a.rs = 1\n").unwrap();
+        let mut sup = Vec::new();
+        let uns = b.apply(
+            vec![
+                diag("src/a.rs", 3, "lossy-cast"),
+                diag("src/a.rs", 9, "lossy-cast"),
+            ],
+            &mut sup,
+        );
+        assert!(sup.is_empty());
+        assert_eq!(uns.len(), 2);
+    }
+
+    #[test]
+    fn bad_baseline_keys_error() {
+        assert!(Baseline::parse("no_at_sign = 1").is_err());
+        assert!(Baseline::parse("lossy-cast@f.rs = 1.5").is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Deterministic source walker: every `.rs` file under the audit roots
+//! (`src/`, `tests/`, `benches/` by default), sorted by relative path,
+//! with any `fixtures/` subtree excluded — the audit's own test corpus
+//! contains intentional violations.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Subdirectories of the crate root the audit walks.
+pub const DEFAULT_SUBDIRS: [&str; 3] = ["src", "tests", "benches"];
+
+/// Path components that are skipped wherever they appear.
+const EXCLUDED_COMPONENTS: [&str; 1] = ["fixtures"];
+
+/// Collect audit targets as (relative path with `/` separators, absolute
+/// path) pairs, sorted by relative path for stable reports.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for sub in DEFAULT_SUBDIRS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_dir(&dir, root, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk_dir(dir: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if EXCLUDED_COMPONENTS.contains(&name.as_ref()) {
+                continue;
+            }
+            walk_dir(&path, root, out)?;
+        } else if name.ends_with(".rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_this_crate_and_skips_fixtures() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = collect_sources(root).unwrap();
+        assert!(files.iter().any(|(rel, _)| rel == "src/lib.rs"));
+        assert!(files.iter().any(|(rel, _)| rel == "src/analysis/walk.rs"));
+        assert!(
+            files.iter().all(|(rel, _)| !rel.contains("fixtures/")),
+            "fixtures must be excluded"
+        );
+        // sorted
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+}

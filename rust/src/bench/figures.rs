@@ -73,7 +73,7 @@ pub fn fig3_report(edge: &dyn EdgeModel, buckets: &[usize], out_csv: Option<&Pat
     }
     s.push_str(&format!(
         "  batch-scaling fit: L(b) = {:.3}ms x (b0 + b)/(b0 + 1), b0 = {:.2}, rms rel err {:.1}%\n",
-        lat_fit.l1 * 1e3,
+        lat_fit.l1_s * 1e3,
         lat_fit.b0,
         lat_fit.rms_rel_err * 1e2
     ));

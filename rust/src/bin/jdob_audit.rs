@@ -1,0 +1,141 @@
+//! `jdob-audit` — run the crate's static-analysis pass from the command
+//! line.
+//!
+//! ```text
+//! jdob-audit [--root <crate-root>] [--baseline <audit.toml>] [--json] [--list-rules]
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = unsuppressed findings, 2 = usage/IO error.
+//! `--json` prints the canonical report (the CI `audit-report` artifact);
+//! the default is human `file:line: [rule] message` text.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use jdob::analysis::{load_baseline, run_audit, rules::RULES, suppress::Baseline, AuditConfig};
+
+struct Args {
+    root: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    json: bool,
+    list_rules: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: jdob-audit [--root <crate-root>] [--baseline <audit.toml>] [--json] [--list-rules]\n\
+     \n\
+     Walks <crate-root>/{src,tests,benches} (default root: ./ if it has a\n\
+     src/ dir, else ./rust) and reports unsuppressed audit findings.\n\
+     Exit codes: 0 clean, 1 findings, 2 usage/IO error."
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: None,
+        baseline: None,
+        json: false,
+        list_rules: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => args.json = true,
+            "--list-rules" => args.list_rules = true,
+            "--root" => {
+                let v = it.next().ok_or("--root needs a path")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            "--baseline" => {
+                let v = it.next().ok_or("--baseline needs a path")?;
+                args.baseline = Some(PathBuf::from(v));
+            }
+            "-h" | "--help" => return Err(String::new()),
+            other => return Err(format!("unknown argument {other:?}")),
+        }
+    }
+    Ok(args)
+}
+
+fn resolve_root(explicit: Option<PathBuf>) -> Result<PathBuf, String> {
+    if let Some(r) = explicit {
+        if r.join("src").is_dir() {
+            return Ok(r);
+        }
+        return Err(format!("--root {}: no src/ directory there", r.display()));
+    }
+    // default: the crate root, whether invoked from rust/ (cargo run) or
+    // from the repository root.
+    for cand in ["rust", "."] {
+        let p = PathBuf::from(cand);
+        if p.join("src").join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    Err("cannot find the crate root; pass --root".into())
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("jdob-audit: {msg}\n{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    if args.list_rules {
+        for r in RULES {
+            println!("{r}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let root = match resolve_root(args.root) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("jdob-audit: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let baseline = match &args.baseline {
+        Some(p) => match std::fs::read_to_string(p) {
+            Ok(text) => match Baseline::parse(&text) {
+                Ok(b) => b,
+                Err(msg) => {
+                    eprintln!("jdob-audit: {msg}");
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("jdob-audit: reading {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        },
+        None => match load_baseline(&root) {
+            Ok(b) => b,
+            Err(msg) => {
+                eprintln!("jdob-audit: {msg}");
+                return ExitCode::from(2);
+            }
+        },
+    };
+    let report = match run_audit(&root, &AuditConfig::crate_default(), &baseline) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("jdob-audit: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -19,8 +19,10 @@ pub struct SystemConfig {
     /// Uplink bandwidth W_m in Hz (Table I: 10 MHz).
     pub bandwidth_hz: f64,
     /// Block latency factor g_n (Table I: 1).
+    // audit:allow(unit-suffix) g_n is the paper's dimensionless block latency factor
     pub g_n: f64,
     /// Block energy factor q_n (Table I: 1).
+    // audit:allow(unit-suffix) q_n is the paper's dimensionless block energy factor
     pub q_n: f64,
     /// Transmitter power p_m^u in W (Table I: 1 W).
     pub p_tx_w: f64,
@@ -33,13 +35,17 @@ pub struct SystemConfig {
     pub f_edge_min_hz: f64,
     pub f_edge_max_hz: f64,
     /// alpha_m: local / edge(b=1) inference latency ratio at max freqs (Table I: 1).
+    // audit:allow(unit-suffix) alpha_m is a dimensionless latency ratio (Table I)
     pub alpha: f64,
     /// eta_m: local / edge(b=1) inference power ratio at max freqs (Table I: 0.6).
+    // audit:allow(unit-suffix) eta_m is a dimensionless power ratio (Table I)
     pub eta: f64,
     /// Device cycles per FLOP (zeta_m). Calibration anchor.
+    // audit:allow(unit-suffix) unit is in the name: cycles/FLOP, not an SI suffix
     pub zeta_cycles_per_flop: f64,
     /// Device switched capacitance kappa_m in J/(cycle * Hz^2).
     /// kappa = 1e-28 puts a 2.6 GHz mobile CPU at ~1.8 W — realistic.
+    // audit:allow(unit-suffix) kappa_m is the switched capacitance in J/(cycle*Hz^2); named after the symbol
     pub kappa_dev: f64,
     /// Batch buckets the AOT artifacts were compiled for.
     pub buckets: Vec<usize>,
@@ -47,6 +53,7 @@ pub struct SystemConfig {
     /// d_n(b) = d_n(1) * (b0 + b) / (b0 + 1). Fit to the paper's Fig. 3a
     /// (RTX3090: ~4 ms at b=1 -> ~11 ms at b=32 => scale(32) = 2.75
     /// => b0 = 16.7).
+    // audit:allow(unit-suffix) b0 is a dimensionless batch offset in (b0 + b)/(b0 + 1)
     pub batch_overhead_b0: f64,
     /// Number of Monte-Carlo repetitions for randomized experiments (Fig. 5: 50).
     pub mc_trials: usize,
@@ -85,6 +92,7 @@ impl SystemConfig {
     /// Effective edge "cycles"/FLOP at b=1 from the alpha calibration:
     /// alpha = (zeta * v_N / f_dev_max) / (d(1) * v_N / f_edge_max)
     /// => d(1) = zeta * f_edge_max / (alpha * f_dev_max).
+    // audit:allow(unit-suffix) d_n(1) is the paper's dimensionless edge cycles/FLOP coefficient
     pub fn edge_d1(&self) -> f64 {
         self.zeta_cycles_per_flop * self.f_edge_max_hz / (self.alpha * self.f_dev_max_hz)
     }
@@ -94,6 +102,7 @@ impl SystemConfig {
     ///     = (kappa/zeta) f_dev_max^3 / (kappa_e/d(1) * ... ) — with the
     /// paper's Eq. 5 (c = kappa_e * d), P_edge = kappa_e f_e^3, so
     /// kappa_e = (kappa/zeta) f_dev_max^3 / (eta * f_edge_max^3).
+    // audit:allow(unit-suffix) kappa_e is the edge DVFS constant in J/Hz^3; named after the symbol
     pub fn kappa_edge(&self) -> f64 {
         (self.kappa_dev / self.zeta_cycles_per_flop) * self.f_dev_max_hz.powi(3)
             / (self.eta * self.f_edge_max_hz.powi(3))

@@ -47,7 +47,7 @@
 //! [`ServingEngine::with_channel`]): at batch-form time every offloaded
 //! member's upload is pushed through the channel, members whose uploads
 //! run more than [`RecoveryPolicy::straggler_budget_s`] behind their
-//! planned `tx_latency` (Eq. 4) are **evicted** — the batch launches
+//! planned `tx_latency_s` (Eq. 4) are **evicted** — the batch launches
 //! without them, waiting at most the budget — and all actual transmission
 //! energy (retransmits, wasted partial uploads) is billed to
 //! [`EnergyLedger::device_tx_j`], never silently absorbed.
@@ -70,7 +70,6 @@
 
 use std::borrow::Borrow;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
@@ -99,7 +98,7 @@ pub struct RecoveryPolicy {
     /// failure; 0 degrades straight to the local fallback.
     pub max_replans: usize,
     /// How long (s) a batch may wait for an upload running behind its
-    /// planned `tx_latency` before the member is evicted and the batch
+    /// planned `tx_latency_s` before the member is evicted and the batch
     /// launches without it. Only consulted when a faulty [`ChannelModel`]
     /// is attached; the wait is virtual (billed to the GPU horizon as a
     /// launch delay), never a real sleep.
@@ -259,7 +258,7 @@ impl<'rt> ServingEngine<'rt> {
                 Arrival::new(
                     User {
                         id: r.user_id,
-                        deadline: r.deadline_s,
+                        deadline_s: r.deadline_s,
                         dev: dev.clone(),
                     },
                     0.0,
@@ -355,6 +354,7 @@ impl<'rt> ServingEngine<'rt> {
         let responses: Vec<InferenceResponse> = st
             .responses
             .into_iter()
+            // audit:allow(panic-free-serving) slice invariant: the degraded-response safety net fills every slot
             .map(|r| r.expect("slot filled by the safety net above"))
             .collect();
         if self.sink.enabled() {
@@ -423,8 +423,8 @@ impl<'rt> ServingEngine<'rt> {
                     t_free_check,
                 )
                 .ok(); // validation errors are asserted in tests; never fatal in prod
-                let planned_span = (plan.t_free_end - t_free_check).max(0.0);
-                t_free_check = plan.t_free_end;
+                let planned_span = (plan.t_free_end_s - t_free_check).max(0.0);
+                t_free_check = plan.t_free_end_s;
 
                 // Window (= request) indices come positionally through
                 // `eligible_pos`, never by user-id lookup — duplicate ids in
@@ -438,7 +438,7 @@ impl<'rt> ServingEngine<'rt> {
 
                 if offloaded.is_empty() {
                     // all-local group: no edge batch, only cascade bookkeeping
-                    st.gpu_free_abs = st.gpu_free_abs.max(planned.close + plan.t_free_end);
+                    st.gpu_free_abs = st.gpu_free_abs.max(planned.close + plan.t_free_end_s);
                     st.metrics.record_group(Self::telemetry(plan, member_ids.len(), 0));
                     emit_with(&*self.sink, || Event::GroupLaunched {
                         window_seq: planned.seq,
@@ -446,7 +446,7 @@ impl<'rt> ServingEngine<'rt> {
                         batch_size: 0,
                         partition: plan.partition,
                         f_edge_hz: 0.0,
-                        edge_energy_j: plan.edge_energy,
+                        edge_energy_j: plan.edge_energy_j,
                         retries: 0,
                     });
                     continue;
@@ -491,15 +491,15 @@ impl<'rt> ServingEngine<'rt> {
                                 users: member_ids.len(),
                                 batch_size: plan.batch_size,
                                 partition: plan.partition,
-                                f_edge_hz: plan.f_edge,
-                                edge_energy_j: plan.edge_energy,
+                                f_edge_hz: plan.f_edge_hz,
+                                edge_energy_j: plan.edge_energy_j,
                                 retries,
                             });
                             self.sink.emit(&Event::DvfsChosen {
                                 window_seq: planned.seq,
                                 scope: DvfsScope::Edge,
                                 user_id: None,
-                                f_hz: plan.f_edge,
+                                f_hz: plan.f_edge_hz,
                             });
                         }
                     }
@@ -581,7 +581,7 @@ impl<'rt> ServingEngine<'rt> {
     /// Batch formation against the uplink channel: push every offloaded
     /// member's upload through [`ChannelModel::transmit`] and split the
     /// group into survivors (upload landed within
-    /// [`RecoveryPolicy::straggler_budget_s`] of its planned `tx_latency`)
+    /// [`RecoveryPolicy::straggler_budget_s`] of its planned `tx_latency_s`)
     /// and evicted stragglers. Returns `(survivors, launch_delay_s,
     /// evicted_eligible_indices)`; the launch delay is the slowest
     /// surviving upload's lateness, by construction `<= straggler_budget_s`.
@@ -606,7 +606,7 @@ impl<'rt> ServingEngine<'rt> {
         let mut launch_delay = 0.0f64;
         for &(wi, eidx) in offloaded {
             let u = &planned.eligible[eidx];
-            let planned_tx_s = u.dev.tx_latency(o_bits);
+            let planned_tx_s = u.dev.tx_latency_s(o_bits);
             let planned_tx_j = planned.outcomes[wi].energy_tx_j;
             let out = self.channel.transmit(planned_tx_s, planned_tx_j);
             if out.attempts > 1 {
@@ -651,10 +651,10 @@ impl<'rt> ServingEngine<'rt> {
             users,
             partition: plan.partition,
             batch_size: plan.batch_size,
-            // Plan.f_edge is NaN for all-local groups; record 0.0 so
+            // Plan.f_edge_hz is NaN for all-local groups; record 0.0 so
             // telemetry stays comparable (PartialEq) and queryable
-            f_edge_hz: if plan.batch_size > 0 { plan.f_edge } else { 0.0 },
-            edge_energy_j: plan.edge_energy,
+            f_edge_hz: if plan.batch_size > 0 { plan.f_edge_hz } else { 0.0 },
+            edge_energy_j: plan.edge_energy_j,
             retries,
         }
     }
@@ -734,7 +734,7 @@ impl<'rt> ServingEngine<'rt> {
         attempt: usize,
         st: &mut WindowExec,
     ) -> Result<()> {
-        let t0 = Instant::now();
+        let t0 = crate::sched::clock::wall_now();
         let n_tilde = plan.partition;
         let elems = self.runtime.elems_at_cut(n_tilde);
         // gather straight into the window's reusable assembly buffer — no
@@ -774,7 +774,7 @@ impl<'rt> ServingEngine<'rt> {
 
         // success: fold the accrued skew into the actual GPU horizon
         let skew = self.runtime.drain_skew();
-        let planned_end_abs = planned.close + plan.t_free_end;
+        let planned_end_abs = planned.close + plan.t_free_end_s;
         st.gpu_free_abs = if skew.is_identity() {
             // exact planning expression — keeps zero-fault bit-transparency
             st.gpu_free_abs.max(planned_end_abs)
@@ -791,7 +791,7 @@ impl<'rt> ServingEngine<'rt> {
         st.metrics.batches += 1;
         st.metrics.batched_samples += offloaded.len();
         st.metrics.edge_busy_s += wall;
-        st.ledger.record_edge(plan.edge_energy);
+        st.ledger.record_edge(plan.edge_energy_j);
 
         for (k, &(wi, eidx)) in offloaded.iter().enumerate() {
             let oc = &planned.outcomes[wi];
@@ -800,7 +800,7 @@ impl<'rt> ServingEngine<'rt> {
             let mut demoted = false;
             if slip > TIME_EPS {
                 latency += slip;
-                let abs_deadline = planned.close + planned.eligible[eidx].deadline;
+                let abs_deadline = planned.close + planned.eligible[eidx].deadline_s;
                 if met && oc.finish_abs + slip > abs_deadline + TIME_EPS {
                     // the plan promised this deadline; actual execution
                     // broke the promise — report it, never silently
@@ -899,11 +899,11 @@ impl<'rt> ServingEngine<'rt> {
                 let oc = &planned.outcomes[planned.eligible_pos[eidx]];
                 let u = &planned.eligible[eidx];
                 let at = oc.finish_abs - oc.latency_s; // original arrival
-                let abs_deadline = planned.close + u.deadline;
+                let abs_deadline = planned.close + u.deadline_s;
                 Arrival::new(
                     User {
                         id: u.id,
-                        deadline: abs_deadline - at,
+                        deadline_s: abs_deadline - at,
                         dev: u.dev.clone(),
                     },
                     at,
@@ -937,19 +937,19 @@ impl<'rt> ServingEngine<'rt> {
             return oc.clone();
         };
         let u = &planned.eligible[eidx];
-        let abs_deadline = planned.close + u.deadline;
+        let abs_deadline = planned.close + u.deadline_s;
         let total = self.ctx.tables.total_work();
         let start = now_abs.max(planned.close);
         let remaining = abs_deadline - start;
-        let f = u.dev.freq_for_deadline(total, remaining).unwrap_or(u.dev.f_max);
-        let finish_abs = start + u.dev.compute_latency(total, f);
+        let f = u.dev.freq_for_deadline(total, remaining).unwrap_or(u.dev.f_max_hz);
+        let finish_abs = start + u.dev.compute_latency_s(total, f);
         let at = oc.finish_abs - oc.latency_s;
         UserOutcome {
             user_id: oc.user_id,
             in_plan: false,
             offloaded: false,
-            f_dev: f,
-            energy_compute_j: u.dev.compute_energy(total, f),
+            f_dev_hz: f,
+            energy_compute_j: u.dev.compute_energy_j(total, f),
             energy_tx_j: 0.0,
             finish_abs,
             latency_s: finish_abs - at,
@@ -975,7 +975,7 @@ impl<'rt> ServingEngine<'rt> {
         extra_tx_j: f64,
         st: &mut WindowExec,
     ) -> InferenceResponse {
-        let t0 = Instant::now();
+        let t0 = crate::sched::clock::wall_now();
         let mut attempt = 0usize;
         let mut fail: Option<anyhow::Error> = None;
         let logits = loop {

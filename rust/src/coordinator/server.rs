@@ -35,7 +35,7 @@ use crate::obs::{
 };
 use crate::runtime::{default_backend, InferenceBackend};
 use crate::sched::admission::{AdmissionPolicy, TimeBound};
-use crate::sched::clock::WallClock;
+use crate::sched::clock::{wall_now, WallClock};
 use crate::sched::pipeline::{run_pipelined_gated, PlannedBatch};
 use crate::sched::scheduler::{Arrival, ArrivalSource, ExecFeedback, Scheduler, SourceEvent};
 
@@ -106,7 +106,7 @@ impl ServerHandle {
             .send(Enqueued {
                 request,
                 reply: reply_tx,
-                submitted_at: Instant::now(),
+                submitted_at: wall_now(),
             })
             .map_err(|_| "server stopped".to_string())?;
         Ok(reply_rx)
@@ -165,7 +165,7 @@ impl IngressSource {
         self.last_at = at;
         let user = User {
             id: e.request.user_id,
-            deadline: e.request.deadline_s,
+            deadline_s: e.request.deadline_s,
             dev: self.dev.clone(),
         };
         Arrival::with_payload(user, at, e)
@@ -414,7 +414,7 @@ where
 {
     let (tx, rx) = mpsc::sync_channel::<Enqueued>(1024);
     // clock epoch precedes the handle: every submit stamp is >= epoch
-    let epoch = Instant::now();
+    let epoch = wall_now();
     let thread_obs = obs.clone();
     let join = std::thread::Builder::new()
         .name("jdob-planner".into())
@@ -430,6 +430,7 @@ where
                 thread_obs,
             )
         })
+        // audit:allow(panic-free-serving) OS thread-spawn at server startup; fail-fast before any request is accepted
         .expect("spawning planner thread");
     (ServerHandle { tx, obs }, join)
 }

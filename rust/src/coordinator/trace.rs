@@ -35,8 +35,8 @@ pub fn plan_trace(ctx: &PlanningContext, users: &[User], plan: &Plan, t_free: f6
 
     for (user, up) in users.iter().zip(&plan.users) {
         if up.offloaded {
-            let t_cp = user.dev.compute_latency(v_prefix, up.f_dev);
-            let t_tx = user.dev.tx_latency(o_bits);
+            let t_cp = user.dev.compute_latency_s(v_prefix, up.f_dev_hz);
+            let t_tx = user.dev.tx_latency_s(o_bits);
             if t_cp > 0.0 {
                 spans.push(Span {
                     user: up.id,
@@ -57,14 +57,14 @@ pub fn plan_trace(ctx: &PlanningContext, users: &[User], plan: &Plan, t_free: f6
                 user: up.id,
                 phase: Phase::LocalCompute,
                 start: 0.0,
-                end: up.finish_time,
+                end: up.finish_time_s,
             });
         }
     }
 
     if plan.batch_size > 0 {
         let start = t_free.max(max_arrival);
-        let dur = ctx.edge.phi(n_tilde, plan.batch_size) / plan.f_edge;
+        let dur = ctx.edge.phi(n_tilde, plan.batch_size) / plan.f_edge_hz;
         for up in plan.users.iter().filter(|u| u.offloaded) {
             spans.push(Span {
                 user: up.id,
@@ -93,7 +93,7 @@ pub fn window_trace(ctx: &PlanningContext, planned: &PlannedWindow) -> Vec<Span>
         for (members, plan) in &grouped.groups {
             let users: Vec<User> = members.iter().map(|&i| planned.eligible[i].clone()).collect();
             spans.extend(plan_trace(ctx, &users, plan, t_free));
-            t_free = plan.t_free_end;
+            t_free = plan.t_free_end_s;
         }
     }
     spans
@@ -130,7 +130,9 @@ pub fn render_gantt(spans: &[Span], horizon: f64, width: usize) -> String {
                 Phase::EdgeBatch => b'E',
                 Phase::LocalCompute => b'L',
             };
+            // audit:allow(lossy-cast) is_finite-guarded above; clamped into [0, width] right below
             let a = ((s.start / horizon) * width as f64).floor() as usize;
+            // audit:allow(lossy-cast) is_finite-guarded above; .min(width) bounds the cast result
             let b = (((s.end / horizon) * width as f64).ceil() as usize).min(width);
             for cell in row.iter_mut().take(b).skip(a.min(width)) {
                 *cell = c;
@@ -160,7 +162,7 @@ mod tests {
         let users: Vec<User> = (0..3)
             .map(|id| User {
                 id,
-                deadline: User::deadline_from_beta(5.0, &dev, ctx.tables.total_work()),
+                deadline_s: User::deadline_from_beta(5.0, &dev, ctx.tables.total_work()),
                 dev: dev.clone(),
             })
             .collect();
@@ -200,7 +202,7 @@ mod tests {
         let (ctx, users, plan) = setup();
         let spans = plan_trace(&ctx, &users, &plan, 0.0);
         let edge = spans.iter().find(|s| s.phase == Phase::EdgeBatch).unwrap();
-        assert!((edge.end - plan.t_free_end).abs() < 1e-9);
+        assert!((edge.end - plan.t_free_end_s).abs() < 1e-9);
     }
 
     #[test]
@@ -219,7 +221,7 @@ mod tests {
                 Arrival::new(
                     User {
                         id,
-                        deadline: User::deadline_from_beta(beta, &dev, total),
+                        deadline_s: User::deadline_from_beta(beta, &dev, total),
                         dev: dev.clone(),
                     },
                     0.0,
@@ -266,7 +268,7 @@ mod tests {
             end: f64::INFINITY,
         });
         // must not panic, must not paint the poisoned spans, must say so
-        let g = render_gantt(&spans, plan.t_free_end, 60);
+        let g = render_gantt(&spans, plan.t_free_end_s, 60);
         assert!(g.contains("2 non-finite span(s) skipped"), "{g}");
         assert!(g.contains("user   0"));
     }
@@ -275,7 +277,7 @@ mod tests {
     fn gantt_renders_every_user_row() {
         let (ctx, users, plan) = setup();
         let spans = plan_trace(&ctx, &users, &plan, 0.0);
-        let g = render_gantt(&spans, plan.t_free_end, 60);
+        let g = render_gantt(&spans, plan.t_free_end_s, 60);
         assert!(g.contains("user   0"));
         assert!(g.contains("user   2"));
         assert!(g.contains('E'));

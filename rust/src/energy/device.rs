@@ -11,20 +11,24 @@ use crate::util::clamp;
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceModel {
     /// CPU cycles per FLOP (zeta_m).
+    // audit:allow(unit-suffix) zeta_m is cycles/FLOP; named after the paper symbol
     pub zeta: f64,
     /// Effective switched capacitance (kappa_m), J/(cycle·Hz²).
+    // audit:allow(unit-suffix) kappa_m is J/(cycle*Hz^2) switched capacitance; named after the symbol
     pub kappa: f64,
     /// Block latency factor g_n (Table I: 1).
+    // audit:allow(unit-suffix) g_n is the paper's dimensionless block latency factor
     pub g: f64,
     /// Block energy factor q_n (Table I: 1).
+    // audit:allow(unit-suffix) q_n is the paper's dimensionless block energy factor
     pub q: f64,
     /// DVFS range [f_min, f_max] in Hz.
-    pub f_min: f64,
-    pub f_max: f64,
+    pub f_min_hz: f64,
+    pub f_max_hz: f64,
     /// Uplink rate R_m in bit/s.
     pub rate_bps: f64,
     /// Transmit power p_m^u in W.
-    pub p_tx: f64,
+    pub p_tx_w: f64,
 }
 
 impl DeviceModel {
@@ -35,16 +39,16 @@ impl DeviceModel {
             kappa: cfg.kappa_dev,
             g: cfg.g_n,
             q: cfg.q_n,
-            f_min: cfg.f_dev_min_hz,
-            f_max: cfg.f_dev_max_hz,
+            f_min_hz: cfg.f_dev_min_hz,
+            f_max_hz: cfg.f_dev_max_hz,
             rate_bps: cfg.rate_bps(),
-            p_tx: cfg.p_tx_w,
+            p_tx_w: cfg.p_tx_w,
         }
     }
 
     /// Eq. (1): local computing latency for `work` FLOPs at frequency `f`.
     #[inline]
-    pub fn compute_latency(&self, work_flops: f64, f: f64) -> f64 {
+    pub fn compute_latency_s(&self, work_flops: f64, f: f64) -> f64 {
         if work_flops == 0.0 {
             return 0.0;
         }
@@ -53,47 +57,47 @@ impl DeviceModel {
 
     /// Eq. (2): local computing energy for `work` FLOPs at frequency `f`.
     #[inline]
-    pub fn compute_energy(&self, work_flops: f64, f: f64) -> f64 {
+    pub fn compute_energy_j(&self, work_flops: f64, f: f64) -> f64 {
         self.kappa * self.q * work_flops * f * f
     }
 
     /// Eq. (3): uplink latency for `bits`.
     #[inline]
-    pub fn tx_latency(&self, bits: f64) -> f64 {
+    pub fn tx_latency_s(&self, bits: f64) -> f64 {
         bits / self.rate_bps
     }
 
     /// Eq. (4): uplink energy for `bits`.
     #[inline]
-    pub fn tx_energy(&self, bits: f64) -> f64 {
-        self.tx_latency(bits) * self.p_tx
+    pub fn tx_energy_j(&self, bits: f64) -> f64 {
+        self.tx_latency_s(bits) * self.p_tx_w
     }
 
     /// Fastest possible local latency for `work` FLOPs.
     #[inline]
-    pub fn min_latency(&self, work_flops: f64) -> f64 {
-        self.compute_latency(work_flops, self.f_max)
+    pub fn min_latency_s(&self, work_flops: f64) -> f64 {
+        self.compute_latency_s(work_flops, self.f_max_hz)
     }
 
     /// Lowest frequency meeting `deadline` for `work` FLOPs, clamped into
     /// the DVFS range (Eq. 20's clamp); `None` if even f_max misses it.
-    pub fn freq_for_deadline(&self, work_flops: f64, deadline: f64) -> Option<f64> {
+    pub fn freq_for_deadline(&self, work_flops: f64, deadline_s: f64) -> Option<f64> {
         if work_flops == 0.0 {
-            return Some(self.f_min);
+            return Some(self.f_min_hz);
         }
-        if deadline <= 0.0 {
+        if deadline_s <= 0.0 {
             return None;
         }
-        let needed = self.zeta * self.g * work_flops / deadline;
-        if needed > self.f_max * (1.0 + 1e-12) {
+        let needed = self.zeta * self.g * work_flops / deadline_s;
+        if needed > self.f_max_hz * (1.0 + 1e-12) {
             return None;
         }
-        Some(clamp(needed, self.f_min, self.f_max))
+        Some(clamp(needed, self.f_min_hz, self.f_max_hz))
     }
 
     /// Idle/active power at frequency f (dynamic CMOS: kappa/zeta · f³) — for
     /// reporting only; the objective uses per-task energy.
-    pub fn power_at(&self, f: f64) -> f64 {
+    pub fn power_at_w(&self, f: f64) -> f64 {
         (self.kappa / self.zeta) * f.powi(3)
     }
 }
@@ -112,15 +116,15 @@ mod tests {
         let d = dev();
         let work = 1e8;
         let f = 2.0 * GHZ;
-        assert!((d.compute_latency(work, f) - 1e8 / 2e9).abs() < 1e-12);
-        let e = d.compute_energy(work, f);
+        assert!((d.compute_latency_s(work, f) - 1e8 / 2e9).abs() < 1e-12);
+        let e = d.compute_energy_j(work, f);
         assert!((e - 1e-28 * 1e8 * 4e18).abs() / e < 1e-12);
     }
 
     #[test]
     fn power_realistic_at_fmax() {
         // 2.6 GHz mobile CPU should land near ~1.8 W with kappa=1e-28.
-        let p = dev().power_at(2.6 * GHZ);
+        let p = dev().power_at_w(2.6 * GHZ);
         assert!(p > 1.0 && p < 3.0, "{p}");
     }
 
@@ -129,29 +133,29 @@ mod tests {
         let d = dev();
         let work = 1e8; // needs 1e8 cycles
         // very loose deadline -> f_min
-        assert_eq!(d.freq_for_deadline(work, 10.0), Some(d.f_min));
+        assert_eq!(d.freq_for_deadline(work, 10.0), Some(d.f_min_hz));
         // exact: f = work/deadline
         let f = d.freq_for_deadline(work, 0.05).unwrap();
         assert!((f - 2e9).abs() < 1.0);
         // infeasible
         assert_eq!(d.freq_for_deadline(work, 1e8 / 2.7e9), None);
         // zero work is free
-        assert_eq!(d.freq_for_deadline(0.0, 1e-9), Some(d.f_min));
+        assert_eq!(d.freq_for_deadline(0.0, 1e-9), Some(d.f_min_hz));
     }
 
     #[test]
     fn energy_monotone_in_frequency() {
         let d = dev();
         let w = 5e7;
-        assert!(d.compute_energy(w, 1.5 * GHZ) < d.compute_energy(w, 2.6 * GHZ));
+        assert!(d.compute_energy_j(w, 1.5 * GHZ) < d.compute_energy_j(w, 2.6 * GHZ));
     }
 
     #[test]
     fn tx_matches_shannon() {
         let d = dev();
         let bits = 884736.0; // 96*96*3*32
-        let t = d.tx_latency(bits);
+        let t = d.tx_latency_s(bits);
         assert!((t - bits / SystemConfig::default().rate_bps()).abs() < 1e-15);
-        assert!((d.tx_energy(bits) - t).abs() < 1e-15); // p_tx = 1 W
+        assert!((d.tx_energy_j(bits) - t).abs() < 1e-15); // p_tx_w = 1 W
     }
 }

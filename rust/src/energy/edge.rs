@@ -96,6 +96,7 @@ impl AnalyticEdge {
         (self.b0 + b as f64) / (self.b0 + 1.0)
     }
 
+    // audit:allow(unit-suffix) kappa_e is the J/Hz^3 DVFS constant; named after the paper symbol
     pub fn kappa_e(&self) -> f64 {
         self.kappa_e
     }
@@ -148,10 +149,11 @@ pub struct MeasuredEdge {
     pub buckets: Vec<usize>,
     /// latency_s[block-1][bucket_idx], seconds at f_ref.
     pub latency_s: Vec<Vec<f64>>,
-    pub f_ref: f64,
+    pub f_ref_hz: f64,
+    // audit:allow(unit-suffix) kappa_e is the paper's J/Hz^3 DVFS constant; named after the symbol
     pub kappa_e: f64,
-    pub f_min: f64,
-    pub f_max: f64,
+    pub f_min_hz: f64,
+    pub f_max_hz: f64,
     /// A_n per block (denormalizes d·A products).
     pub a: Vec<f64>,
 }
@@ -160,7 +162,7 @@ impl MeasuredEdge {
     pub fn new(
         buckets: Vec<usize>,
         latency_s: Vec<Vec<f64>>,
-        f_ref: f64,
+        f_ref_hz: f64,
         cfg: &SystemConfig,
         profile: &ModelProfile,
     ) -> Result<Self> {
@@ -173,10 +175,10 @@ impl MeasuredEdge {
         Ok(Self {
             buckets,
             latency_s,
-            f_ref,
+            f_ref_hz,
             kappa_e: cfg.kappa_edge(),
-            f_min: cfg.f_edge_min_hz,
-            f_max: cfg.f_edge_max_hz,
+            f_min_hz: cfg.f_edge_min_hz,
+            f_max_hz: cfg.f_edge_max_hz,
             a: profile.blocks.iter().map(|b| b.flops).collect(),
         })
     }
@@ -203,13 +205,18 @@ impl MeasuredEdge {
             .iter()
             .map(|row| row.f64_array().map_err(|e| anyhow::anyhow!("{e}")))
             .collect::<Result<Vec<_>>>()?;
+        // The `_hz` keys are canonical since the unit-suffix audit; the bare
+        // names remain readable as deprecated aliases for old profile dumps.
+        let num_key = |new: &str, old: &str| -> Result<f64> {
+            Ok(v.get(new).or_else(|_| v.get(old))?.as_f64()?)
+        };
         Ok(Self {
             buckets: v.get("buckets")?.usize_array()?,
             latency_s,
-            f_ref: v.get("f_ref")?.as_f64()?,
+            f_ref_hz: num_key("f_ref_hz", "f_ref")?,
             kappa_e: v.get("kappa_e")?.as_f64()?,
-            f_min: v.get("f_min")?.as_f64()?,
-            f_max: v.get("f_max")?.as_f64()?,
+            f_min_hz: num_key("f_min_hz", "f_min")?,
+            f_max_hz: num_key("f_max_hz", "f_max")?,
             a: v.get("a")?.f64_array()?,
         })
     }
@@ -221,10 +228,10 @@ impl MeasuredEdge {
                 "latency_s",
                 Json::Arr(self.latency_s.iter().map(|r| Json::from_f64s(r)).collect()),
             ),
-            ("f_ref", Json::Num(self.f_ref)),
+            ("f_ref_hz", Json::Num(self.f_ref_hz)),
             ("kappa_e", Json::Num(self.kappa_e)),
-            ("f_min", Json::Num(self.f_min)),
-            ("f_max", Json::Num(self.f_max)),
+            ("f_min_hz", Json::Num(self.f_min_hz)),
+            ("f_max_hz", Json::Num(self.f_max_hz)),
             ("a", Json::from_f64s(&self.a)),
         ])
         .to_string()
@@ -235,7 +242,7 @@ impl EdgeModel for MeasuredEdge {
     #[inline]
     fn d(&self, n: usize, b: usize) -> f64 {
         // L = d·A/f  =>  d = L_meas · f_ref / A_n
-        self.latency_s[n - 1][self.bucket_index(b)] * self.f_ref / self.a[n - 1]
+        self.latency_s[n - 1][self.bucket_index(b)] * self.f_ref_hz / self.a[n - 1]
     }
 
     #[inline]
@@ -246,7 +253,7 @@ impl EdgeModel for MeasuredEdge {
     fn phi(&self, n_tilde: usize, b: usize) -> f64 {
         let j = self.bucket_index(b);
         (n_tilde..self.a.len())
-            .map(|i| self.latency_s[i][j] * self.f_ref)
+            .map(|i| self.latency_s[i][j] * self.f_ref_hz)
             .sum()
     }
 
@@ -259,11 +266,11 @@ impl EdgeModel for MeasuredEdge {
     }
 
     fn f_min(&self) -> f64 {
-        self.f_min
+        self.f_min_hz
     }
 
     fn f_max(&self) -> f64 {
-        self.f_max
+        self.f_max_hz
     }
 }
 

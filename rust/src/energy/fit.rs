@@ -5,19 +5,21 @@
 //! the planner's analytic form, and by the Fig. 3 harness to report the
 //! fitted batch-overhead constant alongside the raw series.
 
-/// Result of fitting `L(b) = l1 * (b0 + b) / (b0 + 1)` to `(b, latency)`.
+/// Result of fitting `L(b) = l1_s * (b0 + b) / (b0 + 1)` to `(b, latency)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchFit {
     /// Latency at b = 1.
-    pub l1: f64,
+    pub l1_s: f64,
     /// Batch overhead offset b0 (larger = flatter = better amortization).
+    // audit:allow(unit-suffix) b0 is the dimensionless batch offset of the fit
     pub b0: f64,
     /// Root-mean-square relative residual of the fit.
+    // audit:allow(unit-suffix) relative residual: dimensionless by construction
     pub rms_rel_err: f64,
 }
 
 /// Fit by linear least squares on `L(b) = p + q·b` then convert:
-/// `l1 = p + q`, `b0 = p / q` (requires q > 0; falls back to flat fit).
+/// `l1_s = p + q`, `b0 = p / q` (requires q > 0; falls back to flat fit).
 pub fn fit_batch_scaling(points: &[(usize, f64)]) -> BatchFit {
     assert!(points.len() >= 2, "need at least two batch points");
     let n = points.len() as f64;
@@ -29,7 +31,7 @@ pub fn fit_batch_scaling(points: &[(usize, f64)]) -> BatchFit {
     let q = (n * sxy - sx * sy) / denom;
     let p = (sy - q * sx) / n;
 
-    let (l1, b0) = if q > 1e-15 && p > 0.0 {
+    let (l1_s, b0) = if q > 1e-15 && p > 0.0 {
         (p + q, p / q)
     } else {
         // degenerate (flat or decreasing): huge b0, flat latency
@@ -38,11 +40,11 @@ pub fn fit_batch_scaling(points: &[(usize, f64)]) -> BatchFit {
 
     let mut sq = 0.0;
     for &(b, l) in points {
-        let pred = l1 * (b0 + b as f64) / (b0 + 1.0);
+        let pred = l1_s * (b0 + b as f64) / (b0 + 1.0);
         sq += ((pred - l) / l).powi(2);
     }
     BatchFit {
-        l1,
+        l1_s,
         b0,
         rms_rel_err: (sq / n).sqrt(),
     }
@@ -54,13 +56,13 @@ mod tests {
 
     #[test]
     fn recovers_exact_form() {
-        // generate from the model itself: l1=2ms, b0=4
+        // generate from the model itself: l1_s=2ms, b0=4
         let pts: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
             .iter()
             .map(|&b| (b, 2e-3 * (4.0 + b as f64) / 5.0))
             .collect();
         let fit = fit_batch_scaling(&pts);
-        assert!((fit.l1 - 2e-3).abs() / 2e-3 < 1e-9, "{fit:?}");
+        assert!((fit.l1_s - 2e-3).abs() / 2e-3 < 1e-9, "{fit:?}");
         assert!((fit.b0 - 4.0).abs() < 1e-6, "{fit:?}");
         assert!(fit.rms_rel_err < 1e-9);
     }
@@ -69,7 +71,7 @@ mod tests {
     fn flat_series_degenerates_gracefully() {
         let pts: Vec<(usize, f64)> = [1usize, 2, 4, 8].iter().map(|&b| (b, 5e-3)).collect();
         let fit = fit_batch_scaling(&pts);
-        assert!((fit.l1 - 5e-3).abs() < 1e-9);
+        assert!((fit.l1_s - 5e-3).abs() < 1e-9);
         assert!(fit.b0 > 1e6); // effectively batch-size independent
     }
 

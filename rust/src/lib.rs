@@ -49,6 +49,7 @@
 //! for serving, `bench::figures` for regenerating the paper's evaluation.
 
 pub mod algo;
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -130,18 +130,18 @@ fn main() -> Result<()> {
             let group = identical_deadline_users(&ctx, m, beta);
             println!(
                 "group: M = {m}, beta = {beta}, deadline = {:.1} ms, t_free = {t_free}",
-                group[0].deadline * 1e3
+                group[0].deadline_s * 1e3
             );
             for solver in roster() {
                 match solver.solve(&ctx, &group, t_free) {
                     Some(p) => println!(
                         "  {:<22} E = {:>9.3} mJ/user  ñ = {}  B_o = {:>2}  f_e = {:>4.2} GHz  t_free' = {:.1} ms",
                         solver.name(),
-                        p.energy_per_user() * 1e3,
+                        p.energy_per_user_j() * 1e3,
                         p.partition,
                         p.batch_size,
-                        p.f_edge / 1e9,
-                        p.t_free_end * 1e3
+                        p.f_edge_hz / 1e9,
+                        p.t_free_end_s * 1e3
                     ),
                     None => println!("  {:<22} infeasible", solver.name()),
                 }
@@ -154,8 +154,8 @@ fn main() -> Result<()> {
                     let horizon = p
                         .users
                         .iter()
-                        .map(|u| u.finish_time)
-                        .fold(p.t_free_end, f64::max);
+                        .map(|u| u.finish_time_s)
+                        .fold(p.t_free_end_s, f64::max);
                     println!("
 J-DOB execution timeline:");
                     print!("{}", jdob::coordinator::trace::render_gantt(&spans, horizon, 72));
@@ -210,7 +210,7 @@ fn serve_demo(
     let rt = default_backend(&ctx.profile, &ctx.cfg.buckets, Some(artifacts))
         .context("constructing inference backend")?;
     let dev = DeviceModel::from_config(&ctx.cfg);
-    let deadline =
+    let deadline_s =
         jdob::algo::types::User::deadline_from_beta(beta, &dev, ctx.tables.total_work());
     let engine =
         ServingEngine::new(ctx.clone(), rt.as_ref(), Box::new(jdob::algo::jdob::JDob::full()));
@@ -223,7 +223,7 @@ fn serve_demo(
                 input: (0..elems)
                     .map(|i| ((i + u + round * 7919) % 255) as f32 / 255.0 - 0.5)
                     .collect(),
-                deadline_s: deadline,
+                deadline_s: deadline_s,
             })
             .collect();
         let out = engine.serve_window(&reqs, 0.0)?;

@@ -2,14 +2,14 @@
 //! [`crate::runtime::chaos`].
 //!
 //! J-DOB prices every offload with a rate fixed at planning time (Eq. 4:
-//! `tx_latency = O_ñ / R` with `R` from [`crate::util::shannon_rate_bps`]).
+//! `tx_latency_s = O_ñ / R` with `R` from [`crate::util::shannon_rate_bps`]).
 //! The wireless channel is the least stable link in the chain, so the
 //! serving engine drives each offloaded member's upload through a
 //! [`ChannelModel`] seeded by an [`UplinkFaultPlan`] before the edge batch
 //! launches:
 //!
 //! * **fading** — the effective rate is multiplied by a factor in `(0, 1]`,
-//!   stretching the upload (and its energy: `E_tx = p_tx · t_tx`, Eq. 4);
+//!   stretching the upload (and its energy: `E_tx = p_tx_w · t_tx`, Eq. 4);
 //! * **transient drops** — an attempt dies mid-transfer after burning a
 //!   fraction of its airtime, then retransmits, bounded by
 //!   `max_retransmits`; exhausting the bound means the payload is never
@@ -164,9 +164,9 @@ impl UplinkFaultPlan {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct UplinkOutcome {
     /// Total airtime spent across all attempts (s). Equals the planned
-    /// `tx_latency` on the nominal path.
+    /// `tx_latency_s` on the nominal path.
     pub actual_tx_s: f64,
-    /// Total transmit energy spent across all attempts (J) — `p_tx` times
+    /// Total transmit energy spent across all attempts (J) — `p_tx_w` times
     /// the airtime, per Eq. 4. Equals the planned tx energy nominally.
     pub actual_tx_j: f64,
     /// Attempts made (1 on the nominal path).
@@ -244,7 +244,7 @@ impl ChannelModel {
     }
 
     /// Push one upload through the channel. `planned_tx_s`/`planned_tx_j`
-    /// are the plan-time Eq. 4 values (`O_ñ / R` and `p_tx · t_tx`); the
+    /// are the plan-time Eq. 4 values (`O_ñ / R` and `p_tx_w · t_tx`); the
     /// outcome carries what the channel actually cost.
     ///
     /// Fault-free plans (and zero-length uploads) return the planned
@@ -357,7 +357,7 @@ mod tests {
         assert!((out.actual_tx_j - 0.004).abs() < 1e-12);
         assert!(out.delivered);
         assert_eq!(out.attempts, 1);
-        // energy/time ratio (= p_tx) is preserved by construction
+        // energy/time ratio (= p_tx_w) is preserved by construction
         assert!(
             (out.actual_tx_j / out.actual_tx_s - 0.2).abs() < 1e-9,
             "fading must not change the transmit power"

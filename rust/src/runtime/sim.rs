@@ -746,6 +746,7 @@ impl SimBackend {
             &crate::config::SystemConfig::default().buckets,
             seed,
         )
+        // audit:allow(panic-free-serving) static invariant: the default profile is built from the same graph constants
         .expect("default profile always matches the sim graph")
     }
 

@@ -249,7 +249,7 @@ mod tests {
     fn query(dev: &DeviceModel, min_local_s: f64, slack: f64) -> (User, f64) {
         let user = User {
             id: 0,
-            deadline: min_local_s + slack,
+            deadline_s: min_local_s + slack,
             dev: dev.clone(),
         };
         (user, min_local_s + slack)
@@ -259,7 +259,7 @@ mod tests {
     fn shed_on_overload_gates_on_the_local_only_floor() {
         let c = PlanningContext::default_analytic();
         let dev = DeviceModel::from_config(&c.cfg);
-        let min_local = dev.min_latency(c.tables.total_work());
+        let min_local = dev.min_latency_s(c.tables.total_work());
         let p = ShedOnOverload::new(Box::new(TimeBound::new(0.05, 16)), 0.02);
         // windowing delegates to the inner policy
         assert_eq!(p.name(), "shed-on-overload");
@@ -267,11 +267,11 @@ mod tests {
         assert!(p.is_full(16) && !p.is_full(15));
 
         // plenty of slack: admitted
-        let (user, deadline) = query(&dev, min_local, 1.0);
+        let (user, deadline_s) = query(&dev, min_local, 1.0);
         let q = AdmitQuery {
             user: &user,
             at: 0.0,
-            absolute_deadline: deadline,
+            absolute_deadline: deadline_s,
             now: 0.0,
             t_free: 0.0,
             min_local_s: min_local,
@@ -279,11 +279,11 @@ mod tests {
         assert_eq!(p.admit(&q), AdmitDecision::Admit);
 
         // infeasible even local-only at f_max: shed
-        let (user, deadline) = query(&dev, min_local, -0.5 * min_local);
+        let (user, deadline_s) = query(&dev, min_local, -0.5 * min_local);
         let q = AdmitQuery {
             user: &user,
             at: 0.0,
-            absolute_deadline: deadline,
+            absolute_deadline: deadline_s,
             now: 0.0,
             t_free: 0.0,
             min_local_s: min_local,
@@ -292,11 +292,11 @@ mod tests {
 
         // feasible on paper but inside the guard: shed (the guard reserves
         // the windowing delay that would otherwise eat the slack)
-        let (user, deadline) = query(&dev, min_local, 0.01);
+        let (user, deadline_s) = query(&dev, min_local, 0.01);
         let q = AdmitQuery {
             user: &user,
             at: 0.0,
-            absolute_deadline: deadline,
+            absolute_deadline: deadline_s,
             now: 0.0,
             t_free: 0.0,
             min_local_s: min_local,
@@ -308,11 +308,11 @@ mod tests {
     fn shed_gate_measures_slack_from_now_not_arrival() {
         let c = PlanningContext::default_analytic();
         let dev = DeviceModel::from_config(&c.cfg);
-        let min_local = dev.min_latency(c.tables.total_work());
+        let min_local = dev.min_latency_s(c.tables.total_work());
         let p = ShedOnOverload::new(Box::new(SizeBound::new(8)), 0.0);
         let user = User {
             id: 0,
-            deadline: min_local + 0.05,
+            deadline_s: min_local + 0.05,
             dev: dev.clone(),
         };
         let mut q = AdmitQuery {
@@ -336,7 +336,7 @@ mod tests {
         let dev = DeviceModel::from_config(&c.cfg);
         let user = User {
             id: 0,
-            deadline: 1e-9, // hopeless deadline
+            deadline_s: 1e-9, // hopeless deadline
             dev: dev.clone(),
         };
         let q = AdmitQuery {

@@ -44,6 +44,15 @@ impl Clock for VirtualClock {
     }
 }
 
+/// The one sanctioned wall-clock read outside this module: serving code
+/// that needs a real [`Instant`] (thread epochs, request stamps) must call
+/// this instead of `Instant::now()`, so the `virtual-time` audit rule can
+/// prove chaos/netchaos and the simulators never touch real time.
+#[inline]
+pub fn wall_now() -> Instant {
+    Instant::now()
+}
+
 /// Real-time clock over [`Instant`]: `now` is elapsed seconds since the
 /// epoch captured at construction, `wait_until` sleeps the remainder.
 #[derive(Debug, Clone)]

@@ -97,6 +97,7 @@ where
         let executor = std::thread::Builder::new()
             .name("jdob-executor".into())
             .spawn_scoped(s, move || execute(rx))
+            // audit:allow(panic-free-serving) OS thread-spawn at pipeline startup; fail-fast before any request is in flight
             .expect("spawning executor stage");
         // cloned up front: the sink/counter must outlive the &mut sched
         // borrow the event loop takes below
@@ -155,11 +156,11 @@ mod tests {
         let total = c.tables.total_work();
         (0..n)
             .map(|id| {
-                let deadline = User::deadline_from_beta(25.0, &dev, total);
+                let deadline_s = User::deadline_from_beta(25.0, &dev, total);
                 Arrival::with_payload(
                     User {
                         id,
-                        deadline,
+                        deadline_s,
                         dev: dev.clone(),
                     },
                     id as f64 * 0.01,

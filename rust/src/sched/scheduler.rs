@@ -46,7 +46,7 @@ pub struct Arrival<P = ()> {
 impl Arrival<()> {
     /// Payload-free arrival (simulation traces).
     pub fn new(user: User, at: f64) -> Self {
-        let absolute_deadline = at + user.deadline;
+        let absolute_deadline = at + user.deadline_s;
         Self {
             user,
             at,
@@ -58,7 +58,7 @@ impl Arrival<()> {
 
 impl<P> Arrival<P> {
     pub fn with_payload(user: User, at: f64, payload: P) -> Self {
-        let absolute_deadline = at + user.deadline;
+        let absolute_deadline = at + user.deadline_s;
         Self {
             user,
             at,
@@ -105,10 +105,14 @@ impl<P> SliceSource<P> {
 
 impl<P> ArrivalSource<P> for SliceSource<P> {
     fn next_before(&mut self, t: f64) -> SourceEvent<P> {
-        match self.queue.front() {
+        if let Some(a) = self.queue.front() {
+            if a.at >= t {
+                return SourceEvent::TimedOut;
+            }
+        }
+        match self.queue.pop_front() {
+            Some(a) => SourceEvent::Arrival(a),
             None => SourceEvent::Closed,
-            Some(a) if a.at < t => SourceEvent::Arrival(self.queue.pop_front().expect("front")),
-            Some(_) => SourceEvent::TimedOut,
         }
     }
 }
@@ -122,7 +126,7 @@ pub struct UserOutcome {
     pub in_plan: bool,
     pub offloaded: bool,
     /// Chosen device frequency (Hz).
-    pub f_dev: f64,
+    pub f_dev_hz: f64,
     pub energy_compute_j: f64,
     pub energy_tx_j: f64,
     /// Absolute completion time (s since epoch).
@@ -209,7 +213,7 @@ pub fn plan_window<P>(
         if rel_deadline > rel_t_free && rel_deadline > 0.0 {
             eligible.push(User {
                 id: a.user.id,
-                deadline: rel_deadline,
+                deadline_s: rel_deadline,
                 dev: a.user.dev.clone(),
             });
             eligible_pos.push(wi);
@@ -231,21 +235,21 @@ pub fn plan_window<P>(
     let mut t_free_out = t_free_abs;
 
     if let Some(gp) = &grouped {
-        planned_energy_j += gp.total_energy;
-        t_free_out = close + gp.t_free_end;
+        planned_energy_j += gp.total_energy_j;
+        t_free_out = close + gp.t_free_end_s;
         for (members, plan) in &gp.groups {
             for (&eidx, up) in members.iter().zip(&plan.users) {
                 debug_assert_eq!(eligible[eidx].id, up.id, "plan order matches group order");
                 let wi = eligible_pos[eidx];
                 let a = &window[wi];
-                let finish_abs = close + up.finish_time;
+                let finish_abs = close + up.finish_time_s;
                 outcomes[wi] = Some(UserOutcome {
                     user_id: up.id,
                     in_plan: true,
                     offloaded: up.offloaded,
-                    f_dev: up.f_dev,
-                    energy_compute_j: up.energy_compute,
-                    energy_tx_j: up.energy_tx,
+                    f_dev_hz: up.f_dev_hz,
+                    energy_compute_j: up.energy_compute_j,
+                    energy_tx_j: up.energy_tx_j,
                     finish_abs,
                     latency_s: finish_abs - a.at,
                     deadline_met: finish_abs <= a.absolute_deadline + TIME_EPS,
@@ -266,15 +270,15 @@ pub fn plan_window<P>(
             .user
             .dev
             .freq_for_deadline(total_work, remaining)
-            .unwrap_or(a.user.dev.f_max);
-        let finish_abs = close + a.user.dev.compute_latency(total_work, f);
-        let energy = a.user.dev.compute_energy(total_work, f);
+            .unwrap_or(a.user.dev.f_max_hz);
+        let finish_abs = close + a.user.dev.compute_latency_s(total_work, f);
+        let energy = a.user.dev.compute_energy_j(total_work, f);
         planned_energy_j += energy;
         outcomes[wi] = Some(UserOutcome {
             user_id: a.user.id,
             in_plan: false,
             offloaded: false,
-            f_dev: f,
+            f_dev_hz: f,
             energy_compute_j: energy,
             energy_tx_j: 0.0,
             finish_abs,
@@ -296,6 +300,7 @@ pub fn plan_window<P>(
         eligible_pos,
         outcomes: outcomes
             .into_iter()
+            // audit:allow(panic-free-serving) slice invariant: the loop above fills one slot per window member
             .map(|o| o.expect("every window member has an outcome"))
             .collect(),
         planned_energy_j,
@@ -323,7 +328,7 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
-    pub fn energy_per_user(&self) -> f64 {
+    pub fn energy_per_user_j(&self) -> f64 {
         if self.served == 0 {
             0.0
         } else {
@@ -520,7 +525,7 @@ impl<'s> Scheduler<'s> {
             absolute_deadline: a.absolute_deadline,
             now,
             t_free: self.t_free,
-            min_local_s: a.user.dev.min_latency(self.total_work),
+            min_local_s: a.user.dev.min_latency_s(self.total_work),
         };
         let d = self.policy.admit(&q);
         match d {
@@ -612,7 +617,7 @@ impl<'s> Scheduler<'s> {
                     window_seq: planned.seq,
                     scope: DvfsScope::Device,
                     user_id: Some(oc.user_id),
-                    f_hz: oc.f_dev,
+                    f_hz: oc.f_dev_hz,
                 });
             }
         }
@@ -706,7 +711,7 @@ pub fn run_events_with_shed<P>(
             }
         };
         // The window cannot close before its last admission.
-        let close = close.max(window.last().expect("non-empty window").at);
+        let close = window.last().map_or(close, |a| close.max(a.at));
         clock.wait_until(close);
 
         let planned = sched.plan(&window, close);
@@ -735,11 +740,11 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(id, &(beta, at))| {
-                let deadline = User::deadline_from_beta(beta, &dev, total);
+                let deadline_s = User::deadline_from_beta(beta, &dev, total);
                 Arrival::new(
                     User {
                         id,
-                        deadline,
+                        deadline_s,
                         dev: dev.clone(),
                     },
                     at,

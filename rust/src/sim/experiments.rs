@@ -36,7 +36,7 @@ pub fn fig4_identical_deadline(
                 .map(|a| {
                     let e = a
                         .solve(ctx, &users, 0.0)
-                        .map(|p| p.energy_per_user())
+                        .map(|p| p.energy_per_user_j())
                         .unwrap_or(f64::NAN);
                     (a.name().to_string(), e)
                 })
@@ -66,7 +66,7 @@ pub fn fig5_different_deadlines(
                 let users = uniform_beta_users(ctx, m, range, &mut rng);
                 for (ai, a) in algos.iter().enumerate() {
                     if let Some(gp) = optimal_grouping(ctx, &users, a.as_ref(), 0.0) {
-                        per_algo[ai].push(gp.energy_per_user());
+                        per_algo[ai].push(gp.energy_per_user_j());
                     }
                 }
             }
@@ -142,7 +142,7 @@ pub fn compare_solvers(
                     .map(|s| {
                         let e = s
                             .solve(ctx, &users, 0.0)
-                            .map(|p| p.energy_per_user())
+                            .map(|p| p.energy_per_user_j())
                             .unwrap_or(f64::NAN);
                         (s.name().to_string(), e)
                     })

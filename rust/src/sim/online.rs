@@ -78,11 +78,11 @@ pub fn poisson_arrivals(
             break;
         }
         let beta = rng.gen_range(lo, hi);
-        let deadline = User::deadline_from_beta(beta, &dev, total);
+        let deadline_s = User::deadline_from_beta(beta, &dev, total);
         out.push(Arrival::new(
             User {
                 id,
-                deadline,
+                deadline_s,
                 dev: dev.clone(),
             },
             t,

@@ -14,7 +14,7 @@ pub fn identical_deadline_users(ctx: &PlanningContext, m: usize, beta: f64) -> V
     (0..m)
         .map(|id| User {
             id,
-            deadline: User::deadline_from_beta(beta, &dev, total),
+            deadline_s: User::deadline_from_beta(beta, &dev, total),
             dev: dev.clone(),
         })
         .collect()
@@ -38,7 +38,7 @@ pub fn uniform_beta_users(
             };
             User {
                 id,
-                deadline: User::deadline_from_beta(beta, &dev, total),
+                deadline_s: User::deadline_from_beta(beta, &dev, total),
                 dev: dev.clone(),
             }
         })
@@ -63,7 +63,7 @@ pub fn heterogeneous_users(
             let beta = rng.gen_range(beta_range.0, beta_range.1.max(beta_range.0 + 1e-9));
             User {
                 id,
-                deadline: User::deadline_from_beta(beta, &dev, total),
+                deadline_s: User::deadline_from_beta(beta, &dev, total),
                 dev,
             }
         })
@@ -80,7 +80,7 @@ mod tests {
         let users = identical_deadline_users(&ctx, 5, 2.13);
         assert_eq!(users.len(), 5);
         for u in &users {
-            assert_eq!(u.deadline, users[0].deadline);
+            assert_eq!(u.deadline_s, users[0].deadline_s);
             assert!((u.beta(ctx.tables.total_work()) - 2.13).abs() < 1e-9);
         }
     }
@@ -105,7 +105,7 @@ mod tests {
         let a = uniform_beta_users(&ctx, 10, (0.0, 10.0), &mut r1);
         let b = uniform_beta_users(&ctx, 10, (0.0, 10.0), &mut r2);
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.deadline, y.deadline);
+            assert_eq!(x.deadline_s, y.deadline_s);
         }
     }
 
@@ -117,7 +117,7 @@ mod tests {
         let users = uniform_beta_users(&ctx, 30, (0.0, 10.0), &mut rng);
         let total = ctx.tables.total_work();
         for u in &users {
-            assert!(u.dev.min_latency(total) <= u.deadline + 1e-12);
+            assert!(u.dev.min_latency_s(total) <= u.deadline_s + 1e-12);
         }
     }
 }

@@ -9,6 +9,14 @@ pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
+/// Sanctioned wall-clock read for benches and perf tests.  Benchmark code
+/// outside this module must call this instead of `Instant::now()` so the
+/// `virtual-time` audit rule keeps real-time reads centralized.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -62,7 +70,10 @@ fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
         iterations: n,
         mean: total / n as u32,
         p50: samples[n / 2],
-        p95: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        // integer p95 index: n*95/100 <= n-1 for n >= 1, so no clamp or
+        // float round-trip (the old `(n as f64 * 0.95) as usize` was a
+        // lossy-cast finding) is needed.
+        p95: samples[n * 95 / 100],
         min: samples[0],
     }
 }

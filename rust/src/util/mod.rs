@@ -41,7 +41,7 @@ pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
 /// bandwidth and non-finite or negative SNR_dB (the paper's Table-I
 /// setting is 30 dB; a negative value here is a sign/unit error, not a
 /// sub-0-dB channel) are rejected with a clear error instead of producing
-/// a NaN rate that would poison every downstream `tx_latency`.
+/// a NaN rate that would poison every downstream `tx_latency_s`.
 pub fn try_shannon_rate_bps(bandwidth_hz: f64, snr_db: f64) -> anyhow::Result<f64> {
     anyhow::ensure!(
         bandwidth_hz.is_finite() && bandwidth_hz > 0.0,

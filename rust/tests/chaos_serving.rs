@@ -209,7 +209,7 @@ fn run_chaos_case(
     run_events(&mut sched, &mut clock, &mut source, &mut |window, planned| {
         let reqs: Vec<InferenceRequest> = window
             .iter()
-            .map(|a| mk_request(a.user.id, a.user.deadline, in_elems, seed as usize))
+            .map(|a| mk_request(a.user.id, a.user.deadline_s, in_elems, seed as usize))
             .collect();
         let out = engine
             .execute_window(&reqs, &planned)
@@ -503,9 +503,9 @@ fn window_requests(
     let dev = jdob::energy::device::DeviceModel::from_config(&ctx.cfg);
     (0..4)
         .map(|u| {
-            let deadline =
+            let deadline_s =
                 jdob::algo::types::User::deadline_from_beta(30.0 + u as f64 * 0.25, &dev, total);
-            mk_request(u, deadline, in_elems, 0)
+            mk_request(u, deadline_s, in_elems, 0)
         })
         .collect()
 }

@@ -52,7 +52,7 @@ pub fn users_beta(betas: &[f64], ctx: &PlanningContext) -> Vec<User> {
             let t = User::deadline_from_beta(b, &dev, ctx.tables.total_work());
             User {
                 id: i,
-                deadline: t,
+                deadline_s: t,
                 dev,
             }
         })
@@ -76,7 +76,7 @@ pub fn random_users(
             let beta = rng.gen_range(beta_range.0, beta_range.1.max(beta_range.0 + 1e-12));
             User {
                 id,
-                deadline: User::deadline_from_beta(beta, &dev, total),
+                deadline_s: User::deadline_from_beta(beta, &dev, total),
                 dev,
             }
         })

@@ -1,0 +1,8 @@
+// Fixture: R5 clean — integer-to-integer casts and checked conversions.
+fn good(n: usize, bits: u64) -> (u32, usize, usize) {
+    let a = n as u32;
+    let b = (n + 1) as usize;
+    let c = usize::try_from(bits).unwrap_or(usize::MAX);
+    let p95 = n * 95 / 100;
+    (a, b.max(p95), c)
+}

@@ -1,0 +1,7 @@
+// Fixture: R5 lossy-cast — float-ish sources cast to integers.
+fn bad(width: usize, frac_ratio: f64) -> (usize, usize, usize) {
+    let a = 0.95 as usize;
+    let b = frac_ratio as usize;
+    let c = ((width as f64) * 0.5).floor() as usize;
+    (a, b, c)
+}

@@ -1,0 +1,11 @@
+// Fixture: total_cmp and a partial_cmp whose result is handled are clean.
+// The comment below must NOT trip the rule: partial_cmp(..).unwrap()
+fn sort_by_score(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+fn compare(a: f64, b: f64) -> std::cmp::Ordering {
+    let doc = "partial_cmp(x).unwrap() inside a string is not code";
+    let _ = doc;
+    a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal)
+}

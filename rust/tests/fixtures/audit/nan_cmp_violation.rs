@@ -1,0 +1,8 @@
+// Fixture: R1 nan-cmp must fire on both unwrap and expect tails.
+fn sort_by_score(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn max_by_score(xs: &[f64]) -> Option<&f64> {
+    xs.iter().max_by(|a, b| a.partial_cmp(b).expect("no NaN"))
+}

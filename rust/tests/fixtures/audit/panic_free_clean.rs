@@ -1,0 +1,16 @@
+// Fixture: R2 clean — fallible handling in serving code, unwrap only
+// under #[cfg(test)] (allowed: tests may panic).
+fn serve(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| "missing".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let r: Result<(), ()> = Ok(());
+        r.expect("test-only expect");
+    }
+}

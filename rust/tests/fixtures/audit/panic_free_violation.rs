@@ -1,0 +1,13 @@
+// Fixture: R2 panic-free-serving — every panic construct in non-test code.
+fn serve(x: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = x.expect("present");
+    if a > b {
+        panic!("impossible");
+    }
+    todo!()
+}
+
+fn later() {
+    unimplemented!()
+}

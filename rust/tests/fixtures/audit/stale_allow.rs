@@ -1,0 +1,11 @@
+// Fixture: an allow that suppresses nothing must be flagged stale, and an
+// allow without a reason must be flagged as allow-syntax.
+fn clean_already(n: usize) -> usize {
+    // audit:allow(lossy-cast) the cast this covered was removed long ago
+    n + 1
+}
+
+fn reasonless(x: f64) -> usize {
+    // audit:allow(lossy-cast)
+    x as usize
+}

@@ -1,0 +1,10 @@
+// Fixture: a finding covered by a well-formed inline allow (with reason)
+// is suppressed and the file is clean.
+fn guarded(x: f64, width: usize) -> usize {
+    if !x.is_finite() {
+        return 0;
+    }
+    // audit:allow(lossy-cast) is_finite-guarded above and clamped below
+    let cell = (x * width as f64) as usize;
+    cell.min(width)
+}

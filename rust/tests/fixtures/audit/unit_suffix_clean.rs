@@ -1,0 +1,30 @@
+// Fixture: R4 clean — suffixed surface, exempt shapes, non-f64 fields.
+pub struct Plan {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub rate_bps: f64,
+    pub users: usize,
+    pub weights: Vec<f64>,
+}
+
+pub const SPEED_OF_LIGHT: f64 = 2.99792458e8;
+
+pub trait Model {
+    fn tail(&self) -> f64;
+}
+
+impl Plan {
+    pub fn power_w(&self) -> f64 {
+        self.energy_j / self.latency_s
+    }
+
+    /// No self receiver: a constructor-style fn, not an accessor.
+    pub fn default_budget() -> f64 {
+        1.0
+    }
+
+    /// Option return, not a bare f64.
+    pub fn maybe(&self) -> Option<f64> {
+        None
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: R4 unit-suffix — unsuffixed pub f64 field and accessor.
+pub struct Plan {
+    pub latency: f64,
+    pub users: usize,
+}
+
+impl Plan {
+    pub fn energy(&self) -> f64 {
+        0.0
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: R3 clean — the rule must see through every lexical disguise:
+// Instant::now() in this comment is prose, not code.
+/* and Instant::now() in a block comment — /* even nested */ — is too */
+fn virtual_only(now_s: f64) -> f64 {
+    let doc = "Instant::now() in a plain string";
+    let raw = r#"Instant::now() in a raw string with "quotes""#;
+    let raw_hash = r##"SystemTime::now() behind r##"##;
+    let _ = (doc, raw, raw_hash);
+    // lifetimes and char literals must not confuse the scanner either:
+    fn second<'a>(pair: &'a (char, f64)) -> f64 {
+        if pair.0 == '\'' {
+            return 0.0;
+        }
+        pair.1
+    }
+    now_s + second(&('x', 1.0))
+}

@@ -1,0 +1,10 @@
+// Fixture: R3 virtual-time — real-clock reads outside sanctioned modules.
+use std::time::{Instant, SystemTime};
+
+fn stamp() -> Instant {
+    Instant::now()
+}
+
+fn wall() -> SystemTime {
+    SystemTime::now()
+}

@@ -29,21 +29,21 @@ fn dp_equals_exhaustive_for_every_solver() {
             let ex = exhaustive_grouping(&c, &users, solver.as_ref(), 0.0);
             match (dp, ex) {
                 (Some(d), Some(e)) => {
-                    let gap = (d.total_energy - e.total_energy).abs() / e.total_energy;
+                    let gap = (d.total_energy_j - e.total_energy_j).abs() / e.total_energy_j;
                     assert!(
                         gap < 1e-9,
                         "trial {trial} solver {}: dp {} vs ex {}",
                         solver.name(),
-                        d.total_energy,
-                        e.total_energy
+                        d.total_energy_j,
+                        e.total_energy_j
                     );
                 }
                 (None, None) => {}
                 (d, e) => panic!(
                     "trial {trial} solver {}: dp {:?} ex {:?} disagree on feasibility",
                     solver.name(),
-                    d.map(|p| p.total_energy),
-                    e.map(|p| p.total_energy)
+                    d.map(|p| p.total_energy_j),
+                    e.map(|p| p.total_energy_j)
                 ),
             }
         }
@@ -61,7 +61,7 @@ fn every_group_plan_validates_with_cascading_tfree() {
         for (members, plan) in &gp.groups {
             let group: Vec<_> = members.iter().map(|&i| users[i].clone()).collect();
             validate_plan(&c, &group, plan, t_free).unwrap();
-            t_free = plan.t_free_end;
+            t_free = plan.t_free_end_s;
         }
     }
 }
@@ -75,7 +75,7 @@ fn similar_deadlines_group_together() {
     let gp = optimal_grouping(&c, &users, &JDob::full(), 0.0).unwrap();
     // whatever the split, energy must beat the single-group alternative
     if let Some(single) = GroupSolver::solve(&JDob::full(), &c, &users, 0.0) {
-        assert!(gp.total_energy <= single.total_energy * (1.0 + 1e-9));
+        assert!(gp.total_energy_j <= single.total_energy_j * (1.0 + 1e-9));
     }
 }
 
@@ -108,13 +108,13 @@ fn grouping_handles_single_user() {
 fn grouping_respects_initial_busy_gpu() {
     let c = ctx();
     let users = users_beta(&[2.0, 6.0, 12.0], &c);
-    let t0 = users[0].deadline * 0.5;
+    let t0 = users[0].deadline_s * 0.5;
     let gp = optimal_grouping(&c, &users, &JDob::full(), t0).unwrap();
-    assert!(gp.t_free_end >= t0 - 1e-12);
+    assert!(gp.t_free_end_s >= t0 - 1e-12);
     let mut t_free = t0;
     for (members, plan) in &gp.groups {
         let group: Vec<_> = members.iter().map(|&i| users[i].clone()).collect();
         validate_plan(&c, &group, plan, t_free).unwrap();
-        t_free = plan.t_free_end;
+        t_free = plan.t_free_end_s;
     }
 }

@@ -20,7 +20,7 @@ fn jdob_matches_bruteforce_on_identical_deadline_grid() {
             let users = users_beta(&vec![beta; m], &c);
             let bf = BruteForce::solve(&c, &users, 0.0).expect("bf feasible");
             let jd = JDob::full().solve(&c, &users, 0.0).expect("jdob feasible");
-            let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+            let gap = (jd.total_energy_j - bf.total_energy_j) / bf.total_energy_j;
             assert!(gap <= 1e-6, "M={m} beta={beta} gap={gap:.2e}");
         }
     }
@@ -43,20 +43,20 @@ fn jdob_near_optimal_on_random_heterogeneous_groups() {
         let bf = BruteForce::solve(&c, &users, 0.0).expect("bf");
         let jd = JDob::full().solve(&c, &users, 0.0).expect("jdob");
         validate_plan(&c, &users, &jd, 0.0).unwrap();
-        let gap = (jd.total_energy - bf.total_energy) / bf.total_energy;
+        let gap = (jd.total_energy_j - bf.total_energy_j) / bf.total_energy_j;
         worst_single = worst_single.max(gap);
         assert!(gap <= 0.25, "trial {trial}: single-group gap {gap:.3}");
 
         // (b) the full stack: OG grouping around each
         let stack = optimal_grouping(&c, &users, &JDob::full(), 0.0).expect("og+jdob");
         let opt = exhaustive_grouping(&c, &users, &BruteForce, 0.0).expect("og+bf");
-        let sgap = (stack.total_energy - opt.total_energy) / opt.total_energy;
+        let sgap = (stack.total_energy_j - opt.total_energy_j) / opt.total_energy_j;
         worst_stack = worst_stack.max(sgap);
         assert!(
             sgap <= 0.05,
             "trial {trial}: OG+J-DOB {:.4e} vs OG+optimal {:.4e} (gap {sgap:.3})",
-            stack.total_energy,
-            opt.total_energy
+            stack.total_energy_j,
+            opt.total_energy_j
         );
     }
     println!("worst single-group gap {worst_single:.4}, worst full-stack gap {worst_stack:.4}");
@@ -69,7 +69,7 @@ fn jdob_with_busy_gpu_grid() {
     let mut rng = Rng::seed_from_u64(7);
     for _ in 0..10 {
         let users = random_users(&c, 5, (1.0, 10.0), &mut rng);
-        let min_t = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_t = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         for frac in [0.0, 0.3, 0.8] {
             let t_free = min_t * frac;
             if let Some(plan) = JDob::full().solve(&c, &users, t_free) {
@@ -125,10 +125,10 @@ fn no_edge_dvfs_still_beats_ipssa() {
             let no_edge = JDob::without_edge_dvfs().solve(&c, &users, 0.0).unwrap();
             let ipssa = IpSsa::solve(&c, &users, 0.0).unwrap();
             assert!(
-                no_edge.total_energy <= ipssa.total_energy * (1.0 + 1e-9),
+                no_edge.total_energy_j <= ipssa.total_energy_j * (1.0 + 1e-9),
                 "M={m} beta={beta}: {} vs {}",
-                no_edge.total_energy,
-                ipssa.total_energy
+                no_edge.total_energy_j,
+                ipssa.total_energy_j
             );
         }
     }
@@ -145,7 +145,7 @@ fn partial_offloading_beats_binary_somewhere() {
             let users = users_beta(&vec![beta; m], &c);
             let full = JDob::full().solve(&c, &users, 0.0).unwrap();
             let binary = JDob::binary_offloading().solve(&c, &users, 0.0).unwrap();
-            if full.total_energy < binary.total_energy * (1.0 - 1e-6) {
+            if full.total_energy_j < binary.total_energy_j * (1.0 - 1e-6) {
                 found = true;
                 assert!(full.partition > 0 && full.partition < c.n());
             }
@@ -162,7 +162,7 @@ fn lc_is_upper_bound_for_everything_sane() {
         let users = random_users(&c, 6, (0.5, 20.0), &mut rng);
         let lc = LocalComputing::solve(&c, &users, 0.0).unwrap();
         let jd = JDob::full().solve(&c, &users, 0.0).unwrap();
-        assert!(jd.total_energy <= lc.total_energy * (1.0 + 1e-9));
+        assert!(jd.total_energy_j <= lc.total_energy_j * (1.0 + 1e-9));
     }
 }
 
@@ -173,7 +173,7 @@ fn energy_monotone_in_deadline_loosening() {
     let mut prev = f64::INFINITY;
     for beta in [0.2, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0] {
         let users = users_beta(&vec![beta; 6], &c);
-        let e = JDob::full().solve(&c, &users, 0.0).unwrap().total_energy;
+        let e = JDob::full().solve(&c, &users, 0.0).unwrap().total_energy_j;
         assert!(
             e <= prev * (1.0 + 1e-9),
             "beta {beta}: energy rose from {prev} to {e}"
@@ -212,7 +212,7 @@ fn measured_edge_backs_planning_end_to_end() {
     let plan = JDob::full().solve(&ctx2, &users, 0.0).expect("feasible");
     validate_plan(&ctx2, &users, &plan, 0.0).unwrap();
     let lc = LocalComputing::solve(&ctx2, &users, 0.0).unwrap();
-    assert!(plan.total_energy <= lc.total_energy * (1.0 + 1e-9));
+    assert!(plan.total_energy_j <= lc.total_energy_j * (1.0 + 1e-9));
 }
 
 #[test]
@@ -250,7 +250,7 @@ fn scenario_configs_shift_plans_sensibly() {
     let p_eff = JDob::full().solve(&eff, &users_e, 0.0).unwrap();
     let p_b30 = JDob::full().solve(&base, &users_b30, 0.0).unwrap();
     let lc = LocalComputing::solve(&base, &users_b30, 0.0).unwrap();
-    let red_base = 1.0 - p_b30.total_energy / lc.total_energy;
-    let red_eff = 1.0 - p_eff.total_energy / lc.total_energy;
+    let red_base = 1.0 - p_b30.total_energy_j / lc.total_energy_j;
+    let red_eff = 1.0 - p_eff.total_energy_j / lc.total_energy_j;
     assert!(red_eff > red_base, "{red_eff} vs {red_base}");
 }

@@ -24,7 +24,7 @@ fn mk_requests(
     beta: f64,
 ) -> Vec<InferenceRequest> {
     let dev = DeviceModel::from_config(&c.cfg);
-    let deadline = User::deadline_from_beta(beta, &dev, c.tables.total_work());
+    let deadline_s = User::deadline_from_beta(beta, &dev, c.tables.total_work());
     let elems: usize = c.profile.input_shape.iter().product();
     (0..m)
         .map(|u| InferenceRequest {
@@ -32,7 +32,7 @@ fn mk_requests(
             input: (0..elems)
                 .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
                 .collect(),
-            deadline_s: deadline,
+            deadline_s: deadline_s,
         })
         .collect()
 }

@@ -49,7 +49,7 @@ fn mk_requests(
     beta: f64,
 ) -> Vec<InferenceRequest> {
     let dev = DeviceModel::from_config(&c.cfg);
-    let deadline = User::deadline_from_beta(beta, &dev, c.tables.total_work());
+    let deadline_s = User::deadline_from_beta(beta, &dev, c.tables.total_work());
     let elems: usize = c.profile.input_shape.iter().product();
     (0..m)
         .map(|u| InferenceRequest {
@@ -57,7 +57,7 @@ fn mk_requests(
             input: (0..elems)
                 .map(|i| ((i * 31 + u * 7) % 251) as f32 / 251.0 - 0.5)
                 .collect(),
-            deadline_s: deadline,
+            deadline_s: deadline_s,
         })
         .collect()
 }
@@ -77,7 +77,7 @@ fn nan_spans_from_a_real_window_never_poison_the_gantt() {
             Arrival::new(
                 User {
                     id,
-                    deadline: User::deadline_from_beta(beta, &dev, total),
+                    deadline_s: User::deadline_from_beta(beta, &dev, total),
                     dev: dev.clone(),
                 },
                 0.0,

@@ -39,7 +39,7 @@ mod common;
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
+use jdob::util::benchkit;
 
 use common::{ctx, random_users};
 use jdob::algo::grouping::{optimal_grouping, optimal_grouping_reference, optimal_grouping_ws};
@@ -91,7 +91,7 @@ fn perf_smoke_planner_m32() {
     let solver = JDob::full();
     let mut rng = Rng::seed_from_u64(0x50CE);
     let users = random_users(&c, 32, (0.0, 10.0), &mut rng);
-    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
 
     // counted fence: horizon-replan workload (one window, 4 horizons)
     let mut ws = PlannerWorkspace::new(&c, &users);
@@ -115,7 +115,7 @@ fn perf_smoke_planner_m32() {
     let t0 = min_d * 0.4;
     optimal_grouping(&c, &users, &solver, t0).expect("warmup");
     let reps = 5;
-    let start = Instant::now();
+    let start = benchkit::now();
     for _ in 0..reps {
         std::hint::black_box(optimal_grouping(&c, &users, &solver, t0));
     }
@@ -245,7 +245,7 @@ fn perf_smoke_exec_throughput_guard() {
     let input: Vec<f32> = (0..batch * be.in_elems(1)).map(|i| ((i % 97) as f32) / 97.0).collect();
     be.run_full(&input, batch).unwrap(); // settle arenas
     let reps = 3;
-    let start = Instant::now();
+    let start = benchkit::now();
     for _ in 0..reps {
         std::hint::black_box(be.run_full(&input, batch).unwrap());
     }

@@ -39,7 +39,7 @@ fn prop_fastpath_matches_reference_plans() {
     let mut compared = 0usize;
     for seed in 0..CASES {
         let (c, users) = scenario(seed ^ 0x00FA57);
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         for t_free in [0.0, min_deadline * 0.5] {
             let fast = JDob::full().solve(&c, &users, t_free);
             let reference = JDob::reference().solve(&c, &users, t_free);
@@ -50,27 +50,27 @@ fn prop_fastpath_matches_reference_plans() {
                     assert_eq!(f.partition, r.partition, "seed {seed} t_free {t_free}");
                     assert_eq!(f.batch_size, r.batch_size, "seed {seed} t_free {t_free}");
                     assert_eq!(f.offload_ids(), r.offload_ids(), "seed {seed} t_free {t_free}");
-                    let rel = (f.total_energy - r.total_energy).abs() / r.total_energy;
+                    let rel = (f.total_energy_j - r.total_energy_j).abs() / r.total_energy_j;
                     assert!(
                         rel < 1e-9,
                         "seed {seed} t_free {t_free}: fast {} vs reference {}",
-                        f.total_energy,
-                        r.total_energy
+                        f.total_energy_j,
+                        r.total_energy_j
                     );
                     assert!(
-                        (f.t_free_end - r.t_free_end).abs() <= r.t_free_end.abs() * 1e-9 + 1e-15,
-                        "seed {seed}: t_free_end {} vs {}",
-                        f.t_free_end,
-                        r.t_free_end
+                        (f.t_free_end_s - r.t_free_end_s).abs() <= r.t_free_end_s.abs() * 1e-9 + 1e-15,
+                        "seed {seed}: t_free_end_s {} vs {}",
+                        f.t_free_end_s,
+                        r.t_free_end_s
                     );
                     for (uf, ur) in f.users.iter().zip(&r.users) {
                         assert_eq!(uf.id, ur.id, "seed {seed}");
                         assert_eq!(uf.offloaded, ur.offloaded, "seed {seed} user {}", uf.id);
                         for (a, b, what) in [
-                            (uf.f_dev, ur.f_dev, "f_dev"),
-                            (uf.finish_time, ur.finish_time, "finish_time"),
-                            (uf.energy_compute, ur.energy_compute, "energy_compute"),
-                            (uf.energy_tx, ur.energy_tx, "energy_tx"),
+                            (uf.f_dev_hz, ur.f_dev_hz, "f_dev_hz"),
+                            (uf.finish_time_s, ur.finish_time_s, "finish_time_s"),
+                            (uf.energy_compute_j, ur.energy_compute_j, "energy_compute_j"),
+                            (uf.energy_tx_j, ur.energy_tx_j, "energy_tx_j"),
                         ] {
                             assert!(
                                 (a - b).abs() <= b.abs() * 1e-9 + 1e-15,
@@ -105,7 +105,7 @@ fn prop_memoized_og_plan_identity() {
     for seed in 0..CASES {
         let (c, users) = scenario(seed ^ 0x06D1_1111);
         let solver = JDob::full();
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         for t_free in [0.0, min_deadline * 0.5] {
             let memo = optimal_grouping(&c, &users, &solver, t_free);
             let reference = optimal_grouping_reference(&c, &users, &solver, t_free);
@@ -125,20 +125,20 @@ fn prop_memoized_og_plan_identity() {
                         assert_eq!(pm.partition, pr.partition, "seed {seed} group {gi}");
                         assert_eq!(pm.batch_size, pr.batch_size, "seed {seed} group {gi}");
                         assert_eq!(pm.offload_ids(), pr.offload_ids(), "seed {seed} group {gi}");
-                        let rel = (pm.total_energy - pr.total_energy).abs() / pr.total_energy;
+                        let rel = (pm.total_energy_j - pr.total_energy_j).abs() / pr.total_energy_j;
                         assert!(rel < 1e-12, "seed {seed} group {gi} energy");
                     }
-                    let rel = (m.total_energy - r.total_energy).abs() / r.total_energy;
+                    let rel = (m.total_energy_j - r.total_energy_j).abs() / r.total_energy_j;
                     assert!(
                         rel < 1e-12,
                         "seed {seed} t_free {t_free}: {} vs {}",
-                        m.total_energy,
-                        r.total_energy
+                        m.total_energy_j,
+                        r.total_energy_j
                     );
                     assert!(
-                        (m.t_free_end - r.t_free_end).abs()
-                            <= r.t_free_end.abs() * 1e-12 + 1e-15,
-                        "seed {seed} t_free {t_free}: t_free_end"
+                        (m.t_free_end_s - r.t_free_end_s).abs()
+                            <= r.t_free_end_s.abs() * 1e-12 + 1e-15,
+                        "seed {seed} t_free {t_free}: t_free_end_s"
                     );
                 }
                 (m, r) => panic!(
@@ -161,7 +161,7 @@ fn prop_memoized_og_plan_identity() {
 fn prop_memoized_groups_validate() {
     for seed in 0..CASES {
         let (c, users) = scenario(seed ^ 0x0A11_DA7E);
-        let min_deadline = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_deadline = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         for t_free in [0.0, min_deadline * 0.5] {
             let Some(gp) = optimal_grouping(&c, &users, &JDob::full(), t_free) else {
                 continue;
@@ -171,7 +171,7 @@ fn prop_memoized_groups_validate() {
                 let group: Vec<User> = members.iter().map(|&i| users[i].clone()).collect();
                 validate_plan(&c, &group, plan, horizon)
                     .unwrap_or_else(|e| panic!("seed {seed} t_free {t_free}: {e}"));
-                horizon = plan.t_free_end;
+                horizon = plan.t_free_end_s;
             }
         }
     }
@@ -194,10 +194,10 @@ fn prop_jdob_never_above_lc() {
         let lc = LocalComputing::solve(&c, &users, 0.0).expect("lc");
         let jd = JDob::full().solve(&c, &users, 0.0).expect("jdob");
         assert!(
-            jd.total_energy <= lc.total_energy * (1.0 + 1e-9),
+            jd.total_energy_j <= lc.total_energy_j * (1.0 + 1e-9),
             "seed {seed}: {} > {}",
-            jd.total_energy,
-            lc.total_energy
+            jd.total_energy_j,
+            lc.total_energy_j
         );
     }
 }
@@ -238,7 +238,7 @@ fn prop_peel_order_is_slack_ascending() {
                 .order
                 .iter()
                 .zip(&s.gammas)
-                .map(|(&idx, &g)| users[idx].deadline - g)
+                .map(|(&idx, &g)| users[idx].deadline_s - g)
                 .collect();
             for w in slack.windows(2) {
                 assert!(w[0] <= w[1] + 1e-12, "seed {seed}: slack {slack:?}");
@@ -255,7 +255,7 @@ fn prop_grouping_never_worse_than_single_group() {
         let gp = optimal_grouping(&c, &users, &solver, 0.0).expect("grouping feasible");
         if let Some(single) = solver.solve(&c, &users, 0.0) {
             assert!(
-                gp.total_energy <= single.total_energy * (1.0 + 1e-9),
+                gp.total_energy_j <= single.total_energy_j * (1.0 + 1e-9),
                 "seed {seed}"
             );
         }
@@ -271,7 +271,7 @@ fn prop_ipssa_meets_deadlines() {
         };
         for (u, up) in users.iter().zip(&plan.users) {
             assert!(
-                up.finish_time <= u.deadline + 1e-9,
+                up.finish_time_s <= u.deadline_s + 1e-9,
                 "seed {seed}: user {} misses deadline",
                 u.id
             );
@@ -289,17 +289,17 @@ fn prop_closed_form_energy_components_nonnegative() {
         let offload: Vec<bool> = (0..m).map(|_| rng.next_f64() < 0.5).collect();
         let f_e = rng.gen_range(c.edge.f_min(), c.edge.f_max());
         if let Some(p) = solve_fixed(&c, &users, &offload, n_tilde, f_e, 0.0, "prop") {
-            assert!(p.edge_energy >= 0.0);
-            assert!(p.total_energy > 0.0);
+            assert!(p.edge_energy_j >= 0.0);
+            assert!(p.total_energy_j > 0.0);
             for up in &p.users {
-                assert!(up.energy_compute >= 0.0, "seed {seed}");
-                assert!(up.energy_tx >= 0.0);
-                assert!(up.f_dev > 0.0);
+                assert!(up.energy_compute_j >= 0.0, "seed {seed}");
+                assert!(up.energy_tx_j >= 0.0);
+                assert!(up.f_dev_hz > 0.0);
             }
             let sum: f64 =
-                p.users.iter().map(|u| u.device_energy()).sum::<f64>() + p.edge_energy;
+                p.users.iter().map(|u| u.device_energy_j()).sum::<f64>() + p.edge_energy_j;
             assert!(
-                (sum - p.total_energy).abs() / p.total_energy < 1e-9,
+                (sum - p.total_energy_j).abs() / p.total_energy_j < 1e-9,
                 "seed {seed}: component sum mismatch"
             );
         }
@@ -311,13 +311,13 @@ fn prop_offload_set_shrinks_as_gpu_gets_busier() {
     // Later t_free can only reduce (or keep) what is offloadable.
     for seed in 0..CASES / 2 {
         let (c, users) = scenario(seed);
-        let min_t = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_t = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         let p0 = JDob::full().solve(&c, &users, 0.0).expect("t=0 feasible");
         if let Some(p1) = JDob::full().solve(&c, &users, min_t * 0.9) {
             // can't assert set inclusion (different partitions possible),
             // but a busier GPU must not produce MORE total energy savings
             assert!(
-                p1.total_energy >= p0.total_energy * (1.0 - 1e-9),
+                p1.total_energy_j >= p0.total_energy_j * (1.0 - 1e-9),
                 "seed {seed}: busier GPU found cheaper plan"
             );
         }
@@ -331,11 +331,11 @@ fn prop_plan_finish_times_within_deadlines() {
         let plan = JDob::full().solve(&c, &users, 0.0).expect("feasible");
         for (u, up) in users.iter().zip(&plan.users) {
             assert!(
-                up.finish_time <= u.deadline + 1e-9,
+                up.finish_time_s <= u.deadline_s + 1e-9,
                 "seed {seed}: user {} finishes at {} > deadline {}",
                 u.id,
-                up.finish_time,
-                u.deadline
+                up.finish_time_s,
+                u.deadline_s
             );
         }
     }

@@ -110,12 +110,12 @@ fn prop_no_expired_deadline_enters_the_plan() {
                 );
                 // and the planned-against deadline is exactly the remainder
                 assert!(
-                    (u.deadline - (abs - p.close)).abs() < 1e-9,
+                    (u.deadline_s - (abs - p.close)).abs() < 1e-9,
                     "seed {seed}: relative deadline mismatch"
                 );
                 // eligibility premise: the remainder clears the busy horizon
                 assert!(
-                    u.deadline > p.rel_t_free,
+                    u.deadline_s > p.rel_t_free,
                     "seed {seed}: user {} planned behind the busy horizon",
                     u.id
                 );
@@ -214,7 +214,7 @@ fn prop_corrected_t_free_monotone_and_tracks_actuals() {
                     input: (0..elems)
                         .map(|i| ((i * 13 + a.user.id * 7) % 251) as f32 / 251.0 - 0.5)
                         .collect(),
-                    deadline_s: a.user.deadline,
+                    deadline_s: a.user.deadline_s,
                 })
                 .collect();
             let out = engine.execute_window(&reqs, &planned).expect("executes");
@@ -311,7 +311,7 @@ fn parity_virtual_sim_and_pipelined_server_plans_identical() {
                 input: (0..elems)
                     .map(|i| ((i * 13 + a.user.id * 7) % 251) as f32 / 251.0 - 0.5)
                     .collect(),
-                deadline_s: a.user.deadline,
+                deadline_s: a.user.deadline_s,
             },
         ))
         .collect();
@@ -378,7 +378,7 @@ fn prop_shed_arrivals_never_consume_gpu_horizon() {
         arr.push(Arrival::new(
             User {
                 id: arr.len(),
-                deadline: User::deadline_from_beta(50.0, &dev, total_work),
+                deadline_s: User::deadline_from_beta(50.0, &dev, total_work),
                 dev: dev.clone(),
             },
             at,

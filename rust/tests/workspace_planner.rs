@@ -26,15 +26,15 @@ fn assert_plan_identical(memo: &GroupedPlan, reference: &GroupedPlan, what: &str
         assert_eq!(pm.batch_size, pr.batch_size, "{what}: batch of group {gi}");
         assert_eq!(pm.offload_ids(), pr.offload_ids(), "{what}: offload set of group {gi}");
         if pm.batch_size > 0 {
-            assert_eq!(pm.f_edge, pr.f_edge, "{what}: f_e of group {gi}");
+            assert_eq!(pm.f_edge_hz, pr.f_edge_hz, "{what}: f_e of group {gi}");
         }
-        let rel = (pm.total_energy - pr.total_energy).abs() / pr.total_energy;
-        assert!(rel < 1e-12, "{what}: group {gi} energy {} vs {}", pm.total_energy, pr.total_energy);
+        let rel = (pm.total_energy_j - pr.total_energy_j).abs() / pr.total_energy_j;
+        assert!(rel < 1e-12, "{what}: group {gi} energy {} vs {}", pm.total_energy_j, pr.total_energy_j);
     }
-    let rel = (memo.total_energy - reference.total_energy).abs() / reference.total_energy;
-    assert!(rel < 1e-12, "{what}: total {} vs {}", memo.total_energy, reference.total_energy);
-    let dt = (memo.t_free_end - reference.t_free_end).abs();
-    assert!(dt <= reference.t_free_end.abs() * 1e-12 + 1e-15, "{what}: t_free_end");
+    let rel = (memo.total_energy_j - reference.total_energy_j).abs() / reference.total_energy_j;
+    assert!(rel < 1e-12, "{what}: total {} vs {}", memo.total_energy_j, reference.total_energy_j);
+    let dt = (memo.t_free_end_s - reference.t_free_end_s).abs();
+    assert!(dt <= reference.t_free_end_s.abs() * 1e-12 + 1e-15, "{what}: t_free_end_s");
 }
 
 /// The acceptance counter: a 32-user window re-planned across 4 GPU-busy
@@ -52,7 +52,7 @@ fn inner_solve_invocations_reduced_5x_at_m32() {
     for seed in [11u64, 22, 33] {
         let mut rng = Rng::seed_from_u64(seed);
         let users = random_users(&c, 32, (0.0, 10.0), &mut rng);
-        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         let mut ws = PlannerWorkspace::new(&c, &users);
         for frac in [0.0, 0.2, 0.4, 0.6] {
             let t0 = min_d * frac;
@@ -87,7 +87,7 @@ fn memoized_groups_always_validate_under_cascade() {
         let mut rng = Rng::seed_from_u64(0xCA5CADE ^ seed);
         let m = 4 + rng.gen_index(16);
         let users = random_users(&c, m, (0.0, 12.0), &mut rng);
-        let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+        let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
         for frac in [0.0, 0.5] {
             let t0 = min_d * frac;
             let Some(gp) = optimal_grouping(&c, &users, &solver, t0) else {
@@ -98,7 +98,7 @@ fn memoized_groups_always_validate_under_cascade() {
                 let group: Vec<User> = members.iter().map(|&i| users[i].clone()).collect();
                 validate_plan(&c, &group, plan, t_free)
                     .unwrap_or_else(|e| panic!("seed {seed} frac {frac}: {e}"));
-                t_free = plan.t_free_end;
+                t_free = plan.t_free_end_s;
             }
         }
     }
@@ -127,21 +127,21 @@ fn lc_infeasible_user_cannot_mask_offload_candidates() {
     let c = fast_edge_ctx();
     let total = c.tables.total_work();
     let dev = DeviceModel::from_config(&c.cfg);
-    let min_local = dev.min_latency(total);
+    let min_local = dev.min_latency_s(total);
     // deadline below the minimum local latency: LC infeasible, but the
     // 4x-faster edge can still serve it (upload ~9 ms + tail ~11 ms < 21 ms)
     let tight = User {
         id: 0,
-        deadline: min_local * 0.7,
+        deadline_s: min_local * 0.7,
         dev: dev.clone(),
     };
     assert!(
-        tight.dev.freq_for_deadline(total, tight.deadline).is_none(),
+        tight.dev.freq_for_deadline(total, tight.deadline_s).is_none(),
         "scenario must make the user LC-infeasible"
     );
     let loose = User {
         id: 1,
-        deadline: User::deadline_from_beta(5.0, &dev, total),
+        deadline_s: User::deadline_from_beta(5.0, &dev, total),
         dev,
     };
 
@@ -154,8 +154,8 @@ fn lc_infeasible_user_cannot_mask_offload_candidates() {
         let slow = slow.expect("reference path must rescue the user by offloading");
         assert_eq!(fast.partition, slow.partition);
         assert_eq!(fast.offload_ids(), slow.offload_ids());
-        let rel = (fast.total_energy - slow.total_energy).abs() / slow.total_energy;
-        assert!(rel < 1e-9, "fast {} vs reference {}", fast.total_energy, slow.total_energy);
+        let rel = (fast.total_energy_j - slow.total_energy_j).abs() / slow.total_energy_j;
+        assert!(rel < 1e-9, "fast {} vs reference {}", fast.total_energy_j, slow.total_energy_j);
         assert!(
             fast.users.iter().any(|u| u.id == 0 && u.offloaded),
             "the LC-infeasible user must be offloaded"
@@ -177,7 +177,7 @@ fn workspace_reuse_across_horizons_is_pure() {
     let solver = JDob::full();
     let mut rng = Rng::seed_from_u64(0xBEEF);
     let users = random_users(&c, 12, (0.0, 8.0), &mut rng);
-    let min_d = users.iter().map(|u| u.deadline).fold(f64::INFINITY, f64::min);
+    let min_d = users.iter().map(|u| u.deadline_s).fold(f64::INFINITY, f64::min);
     let mut warm = PlannerWorkspace::new(&c, &users);
     for frac in [0.6, 0.0, 0.3, 0.6, 0.0] {
         let t0 = min_d * frac;
